@@ -1,0 +1,141 @@
+"""Paper Fig. 3 reproduction: spiral task, EGRU-16, exact sparse RTRL.
+
+Panels (as CSV + optional PNG):
+  A/E: accuracy vs iteration, with/without activity sparsity,
+       parameter sparsity in {0, 0.5, 0.8, 0.9}
+  B/F: accuracy vs compute-adjusted iteration (cumulative w~^2 b~(t) b~(t-1))
+  C  : activity sparsity (alpha) over training
+  D  : influence-matrix row sparsity over training
+
+Default is a reduced run (--iters 600); --full matches the paper's 1700.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cells, sparse_rtrl
+from repro.core.cells import EGRUConfig
+from repro.core.costs import savings_factor
+from repro.data.spiral import spiral_batches
+from repro.optim import make_optimizer
+from repro.optim.optimizers import masked
+
+SPARSITIES = (0.0, 0.5, 0.8, 0.9)
+
+
+def train_variant(sparsity: float, activity: bool, iters: int, seed: int = 0,
+                  eval_every: int = 25):
+    cfg = EGRUConfig(dense=not activity)
+    params = cells.init_params(cfg, jax.random.key(seed))
+    masks = sparse_rtrl.make_masks(cfg, jax.random.key(seed + 1), sparsity)
+    params = sparse_rtrl.apply_masks(params, masks)
+    opt = masked(make_optimizer("adamw", lr=cfg.lr), masks)
+    opt_state = jax.jit(opt.init)(params)
+
+    @jax.jit
+    def step(params, opt_state, xs, ys, i):
+        loss, grads, stats = sparse_rtrl.sparse_rtrl_loss_and_grads(
+            cfg, params, xs, ys, masks)
+        params, opt_state = opt.update(grads, opt_state, params, i)
+        return params, opt_state, loss, stats
+
+    @jax.jit
+    def eval_acc(params, xs, ys):
+        logits_t, _ = cells.sequence_logits(cfg, params, xs)
+        return cells.accuracy(logits_t.mean(0), ys)
+
+    it = spiral_batches(cfg.batch_size, cfg.seq_len, seed=seed + 2)
+    evx, evy = next(spiral_batches(1024, cfg.seq_len, seed=seed + 99))
+    evx, evy = jnp.asarray(evx), jnp.asarray(evy)
+
+    omega = sparsity
+    hist = {"iter": [], "acc": [], "cai": [], "alpha": [], "beta": [],
+            "m_row_density": []}
+    cai = 0.0
+    beta_prev = 0.0
+    for i in range(iters):
+        xs, ys = next(it)
+        params, opt_state, loss, stats = step(
+            params, opt_state, jnp.asarray(xs), jnp.asarray(ys), jnp.int32(i))
+        betas = np.asarray(stats["beta"])               # [T]
+        alphas = np.asarray(stats["alpha"])
+        dens = np.asarray(stats["m_row_density"])
+        step_cost = savings_factor(betas, np.roll(betas, 1), omega).mean() \
+            if activity else savings_factor(0.0, 0.0, omega)
+        cai += float(step_cost)
+        if i % eval_every == 0 or i == iters - 1:
+            hist["iter"].append(i)
+            hist["acc"].append(float(eval_acc(params, evx, evy)))
+            hist["cai"].append(cai)
+            hist["alpha"].append(float(alphas.mean()))
+            hist["beta"].append(float(betas.mean()))
+            hist["m_row_density"].append(float(dens.mean()))
+        beta_prev = betas[-1]
+    return hist
+
+
+def run(rows: list, iters: int = 600, out_dir: str | None = None,
+        plot: bool = True):
+    if out_dir is None:
+        # only the paper's full 1700-iter run owns experiments/fig3
+        out_dir = "experiments/fig3" if iters >= 1700 else \
+            f"experiments/fig3_quick"
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    results = {}
+    for activity in (True, False):
+        for sp in SPARSITIES:
+            tag = f"act{int(activity)}_sp{sp:g}"
+            hist = train_variant(sp, activity, iters)
+            results[tag] = hist
+            rows.append((f"fig3/{tag}/final_acc", hist["acc"][-1],
+                         f"cai={hist['cai'][-1]:.1f}"))
+            rows.append((f"fig3/{tag}/final_alpha", hist["alpha"][-1],
+                         f"beta={hist['beta'][-1]:.3f}"))
+    (out / "results.json").write_text(json.dumps(results))
+
+    if plot:
+        try:
+            import matplotlib
+            matplotlib.use("Agg")
+            import matplotlib.pyplot as plt
+            fig, axes = plt.subplots(2, 3, figsize=(15, 8))
+            for tag, h in results.items():
+                act = tag.startswith("act1")
+                row = 0 if act else 1
+                axes[row, 0].plot(h["iter"], h["acc"], label=tag)
+                axes[row, 1].plot(h["cai"], h["acc"], label=tag)
+                if act:
+                    axes[0, 2].plot(h["iter"], h["alpha"], label=tag)
+                    axes[1, 2].plot(h["iter"], h["m_row_density"], label=tag)
+            for ax, title in zip(axes.flat, [
+                    "A: acc vs iter (activity sparse)",
+                    "B: acc vs compute-adjusted iter (activity sparse)",
+                    "C: activity sparsity",
+                    "E: acc vs iter (dense act)",
+                    "F: acc vs compute-adjusted iter (dense act)",
+                    "D: influence row density"]):
+                ax.set_title(title)
+                ax.legend(fontsize=6)
+            fig.tight_layout()
+            fig.savefig(out / "fig3.png", dpi=120)
+        except Exception as e:        # plotting must never fail the bench
+            print(f"[fig3] plot skipped: {e}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=600)
+    ap.add_argument("--full", action="store_true", help="paper's 1700 iters")
+    args = ap.parse_args()
+    rows: list = []
+    run(rows, iters=1700 if args.full else args.iters)
+    for r in rows:
+        print(",".join(str(x) for x in r))

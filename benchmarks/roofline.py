@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms (compute / memory / collective,
+seconds per step), dominant bottleneck, MODEL_FLOPS/HLO ratio, and per-device
+HBM residency.  Also emits the markdown table EXPERIMENTS.md embeds."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_cells(mesh="single", tag=""):
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob(f"*_{mesh}{('_' + tag) if tag else ''}.json")):
+        r = json.loads(p.read_text())
+        if (r.get("tag") or "") != tag:
+            continue
+        cells.append(r)
+    return cells
+
+
+def fmt_row(r):
+    rf = r.get("roofline", {})
+    mem = r.get("memory", {})
+    hbm = mem.get("total_hbm_bytes", 0) / 1e9
+    dom = rf.get("dominant", "?").replace("_s", "")
+    terms = (rf.get("compute_s", 0), rf.get("memory_s", 0),
+             rf.get("collective_s", 0))
+    mf = rf.get("memory_fused_s", 0)
+    return (f"| {r['arch']} | {r['shape']} | {terms[0]:.3g} | {terms[1]:.3g} "
+            f"| {mf:.3g} | {terms[2]:.3g} | {dom} "
+            f"| {rf.get('useful_flops_ratio', 0):.3f} | {hbm:.1f} |")
+
+
+HEADER = ("| arch | shape | compute_s | mem_s (unfused) | mem_s (fused) "
+          "| collective_s | bottleneck | useful_FLOPs | HBM GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def run(rows: list):
+    cells = load_cells("single")
+    ok = [c for c in cells if c.get("status") == "ok"]
+    rows.append(("roofline/cells_ok", len(ok), f"of_{len(cells)}_single_pod"))
+    for c in ok:
+        rf = c.get("roofline", {})
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        dom = rf.get("dominant", "?")
+        rows.append((name, f"{max(rf.get('compute_s', 0), rf.get('memory_s', 0), rf.get('collective_s', 0)):.4g}",
+                     f"dom={dom.replace('_s', '')}_useful={rf.get('useful_flops_ratio', 0):.3f}"))
+    multi = load_cells("multi")
+    rows.append(("roofline/multi_pod_ok",
+                 sum(1 for c in multi if c.get("status") == "ok"),
+                 f"of_{len(multi)}_multi_pod"))
+    return rows
+
+
+def markdown_table(mesh="single", tag="") -> str:
+    lines = [HEADER]
+    for c in load_cells(mesh, tag):
+        if c.get("status") == "ok":
+            lines.append(fmt_row(c))
+        else:
+            lines.append(f"| {c['arch']} | {c['shape']} | - | - | - | - | "
+                         f"ERROR | - | - |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

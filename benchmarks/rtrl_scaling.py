@@ -1,0 +1,43 @@
+"""Wall-clock scaling of the RTRL variants vs hidden size (CPU timings are
+indicative; the structural claim is the op-count ratio, which is exact)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bptt, cells, rtrl, sparse_rtrl
+from repro.core.cells import EGRUConfig
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                                    # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6      # us
+
+
+def run(rows: list, sizes=(16, 32, 64), T=17, B=32):
+    for n in sizes:
+        cfg = EGRUConfig(n_hidden=n, n_in=2)
+        params = cells.init_params(cfg, jax.random.key(0))
+        xs = jax.random.normal(jax.random.key(1), (T, B, 2))
+        ys = jnp.zeros((B,), jnp.int32)
+
+        f_bptt = jax.jit(lambda p, x, y: bptt.bptt_loss_and_grads(cfg, p, x, y)[0])
+        f_struct = jax.jit(lambda p, x, y: sparse_rtrl.sparse_rtrl_loss_and_grads(cfg, p, x, y)[0])
+        t_bptt = _time(f_bptt, params, xs, ys)
+        t_struct = _time(f_struct, params, xs, ys)
+        rows.append((f"scaling/n{n}/bptt", f"{t_bptt:.0f}", "us_per_seq"))
+        rows.append((f"scaling/n{n}/sparse_rtrl_structured", f"{t_struct:.0f}",
+                     f"x{t_struct / t_bptt:.1f}_vs_bptt"))
+        if n <= 32:   # generic oracle is O(n^2 p) with jacrev: keep small
+            f_gen = jax.jit(lambda p, x, y: rtrl.rtrl_loss_and_grads(cfg, p, x, y)[0])
+            t_gen = _time(f_gen, params, xs, ys)
+            rows.append((f"scaling/n{n}/generic_rtrl", f"{t_gen:.0f}",
+                         f"x{t_gen / t_struct:.1f}_vs_structured"))
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV:
+  table1/*     paper Table 1 cost model + measured sparsities
+  fig3/*       paper Fig. 3 spiral reproduction (reduced iters by default)
+  scaling/*    RTRL-variant wall-clock scaling vs hidden size
+  scaled_rtrl/* row-compact influence update: measured wall-clock vs dense
+  kernel/*     Pallas-kernel block-savings realization + compact-path ratios
+  roofline/*   summary of the 40-cell dry-run roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig3-iters", type=int, default=400)
+    ap.add_argument("--skip-fig3", action="store_true")
+    args = ap.parse_args()
+
+    rows: list = []
+    import table1
+    table1.run(rows)
+    import kernel_bench
+    kernel_bench.run(rows)
+    import rtrl_scaling
+    rtrl_scaling.run(rows)
+    import scaled_rtrl
+    scaled_rtrl.run(rows, sizes=(128, 256))
+    if not args.skip_fig3:
+        import fig3_spiral
+        # reduced run -> separate dir (experiments/fig3 holds the --full run)
+        fig3_spiral.run(rows, iters=args.fig3_iters)
+    import roofline
+    roofline.run(rows)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

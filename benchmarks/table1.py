@@ -1,0 +1,60 @@
+"""Paper Table 1: compute/memory cost of dense/sparse/approximate methods,
+analytically AND with measured sparsities from a trained network."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cells, sparse_rtrl
+from repro.core.cells import EGRUConfig
+from repro.core.costs import CostInputs, from_config, savings_factor, table1
+
+
+def measured_sparsities(iters: int = 150):
+    """Train the paper's EGRU-16 briefly; return measured (alpha, beta)."""
+    from repro.data.spiral import spiral_batches
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import masked
+
+    cfg = EGRUConfig()
+    params = cells.init_params(cfg, jax.random.key(0))
+    masks = sparse_rtrl.make_masks(cfg, jax.random.key(1), 0.8)
+    params = sparse_rtrl.apply_masks(params, masks)
+    opt = masked(make_optimizer("adamw", lr=cfg.lr), masks)
+    opt_state = jax.jit(opt.init)(params)
+
+    @jax.jit
+    def step(params, opt_state, xs, ys, i):
+        loss, grads, stats = sparse_rtrl.sparse_rtrl_loss_and_grads(
+            cfg, params, xs, ys, masks)
+        params, opt_state = opt.update(grads, opt_state, params, i)
+        return params, opt_state, stats
+
+    it = spiral_batches(cfg.batch_size, cfg.seq_len)
+    stats = None
+    for i in range(iters):
+        xs, ys = next(it)
+        params, opt_state, stats = step(params, opt_state, jnp.asarray(xs),
+                                        jnp.asarray(ys), jnp.int32(i))
+    return (float(stats["alpha"].mean()), float(stats["beta"].mean()),
+            float(sparse_rtrl.omega_tilde(masks)))
+
+
+def run(rows: list):
+    cfg = EGRUConfig()
+    alpha, beta, wt = measured_sparsities()
+    ci = from_config(cfg, alpha=alpha, beta=beta, omega=1.0 - wt)
+    t = table1(ci)
+    dense_time = t["rtrl_dense"]["time_per_step"]
+    dense_mem = t["rtrl_dense"]["memory"]
+    for method, c in t.items():
+        rows.append((f"table1/{method}/time", c["time_per_step"],
+                     f"x{c['time_per_step'] / dense_time:.4f}_of_dense_rtrl"))
+        rows.append((f"table1/{method}/memory", c["memory"],
+                     f"x{c['memory'] / dense_mem:.4f}_of_dense_rtrl"))
+    rows.append(("table1/measured_alpha", alpha, "forward_sparsity"))
+    rows.append(("table1/measured_beta", beta, "backward_sparsity"))
+    rows.append(("table1/savings_factor", savings_factor(beta, beta, 1 - wt),
+                 "omega2_beta2_vs_dense"))
+    return rows

@@ -1,0 +1,44 @@
+"""Batched serving demo: continuous batching over decode slots.
+
+    PYTHONPATH=src python examples/serve_demo.py [--arch rwkv6-3b]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.runtime.serving import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    eng = Engine(cfg, ServeConfig(batch_slots=args.slots, max_seq=96,
+                                  temperature=0.7, seed=0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=rng.integers(3, 10)).tolist()
+               for _ in range(args.requests)]
+    t0 = time.time()
+    outs = eng.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    total = sum(len(o) for o in outs)
+    print(f"{args.arch}: {len(prompts)} requests -> {total} tokens "
+          f"in {dt:.1f}s ({total / dt:.1f} tok/s on {args.slots} slots)")
+    for i, (p, o) in enumerate(list(zip(prompts, outs))[:4]):
+        print(f"  req{i} prompt={p} -> {o}")
+
+
+if __name__ == "__main__":
+    main()

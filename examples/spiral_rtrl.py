@@ -1,0 +1,31 @@
+"""Full paper-experiment driver (Fig. 3): spiral task across the sparsity
+grid, with and without activity sparsity.
+
+    PYTHONPATH=src python examples/spiral_rtrl.py [--iters 600] [--full]
+
+Writes accuracy-vs-iteration and accuracy-vs-compute-adjusted-iteration
+curves plus sparsity traces to experiments/fig3/ (results.json, fig3.png).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+import fig3_spiral  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=600)
+    ap.add_argument("--full", action="store_true", help="paper's 1700 iters")
+    args = ap.parse_args()
+    rows: list = []
+    fig3_spiral.run(rows, iters=1700 if args.full else args.iters)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Each assigned architecture lives in its own module with the exact config from
+the assignment table; ``egru_spiral`` is the paper's own experimental setup.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (LONG_CONTEXT_OK, SHAPES, ModelConfig,
+                                ShapeSuite, cells_for, smoke_config)
+
+ARCHS = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "internvl2-2b": "internvl2_2b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen3-8b": "qwen3_8b",
+    "gemma2-2b": "gemma2_2b",
+    "minitron-8b": "minitron_8b",
+    "yi-6b": "yi_6b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name == "egru_spiral":
+        from repro.configs.egru_spiral import CONFIG
+        return CONFIG
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.CONFIG
+
+
+__all__ = ["ARCHS", "SHAPES", "LONG_CONTEXT_OK", "ModelConfig", "ShapeSuite",
+           "cells_for", "get_config", "smoke_config"]

@@ -1,0 +1,14 @@
+"""The paper's own experiment: EGRU, 16 hidden units, 2-D spiral task.
+
+"We trained an EGRU with 16 hidden units for 1700 iterations with Adam and a
+batch size of 32" on 10,000 spirals of 17 timesteps (Sec. 6).
+"""
+from repro.core.cells import EGRUConfig
+
+CONFIG = EGRUConfig(
+    n_hidden=16, n_in=2, n_out=2,
+    seq_len=17, batch_size=32, iterations=1700,
+    lr=5e-3,
+    # pseudo-derivative H'(v) = gamma * max(0, 1 - |v| / (2*eps))
+    gamma=1.0, eps=0.3,
+)

@@ -1,0 +1,16 @@
+"""Kimi K2: trillion-parameter MoE (paper-table config). [arXiv:2501.kimi2]
+
+1T params do not fit one v5e pod for training (see EXPERIMENTS.md §Dry-run):
+FSDP spans the pod axis and the optimizer is momentum-only (lion).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="decoder",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=2048, vocab_size=163_840,
+    moe=True, n_experts=384, top_k=8,
+    mlp_act="swiglu", rope_theta=50_000.0,
+    fsdp_axes=("pod", "data"), optimizer="lion",
+    moe_impl="shardmap",   # explicit-EP dispatch: 23.5x collective reduction (EXPERIMENTS §Perf)
+)

@@ -1,0 +1,11 @@
+"""OLMoE-1B-7B: 64-expert top-8 MoE. [arXiv:2409.02060; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="decoder",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1024, vocab_size=50304,
+    moe=True, n_experts=64, top_k=8,
+    qk_norm=True, mlp_act="swiglu", rope_theta=10_000.0,
+    moe_impl="shardmap",   # explicit-EP dispatch: 32x collective reduction (EXPERIMENTS §Perf)
+)

@@ -1,0 +1,15 @@
+"""RWKV6-3B "Finch": attention-free, data-dependent decay. [arXiv:2404.05892]
+
+Diagonal/decay recurrence => exact RTRL via eligibility traces is available
+as train_mode='rtrl' (repro.core.diag_rtrl) — see DESIGN.md §4.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="rwkv6",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40, head_dim=64,
+    d_ff=8960, vocab_size=65_536,
+    pos_emb="none",
+    train_pure_dp=True,   # TP is a net loss for this family (§Perf/rwkv)
+    rwkv_chunk=16,        # halves intra-chunk traffic (§Perf/rwkv v2)
+)

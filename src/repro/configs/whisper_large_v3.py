@@ -1,0 +1,14 @@
+"""Whisper large-v3 backbone: 32-layer enc + 32-layer dec. [arXiv:2212.04356]
+
+Conv/mel frontend is a stub: input_specs() provides post-conv frame
+embeddings [B, 1500, d_model]. Sinusoidal positions, MHA, plain GELU FFN.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="encdec",
+    n_layers=32, enc_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+    head_dim=64, d_ff=5120, vocab_size=51_866,
+    mlp_act="gelu", pos_emb="sinusoidal", enc_seq=1500,
+    train_pure_dp=True,   # 20 heads % 16-way TP replicated attention; pure DP is ~6x better (§Perf)
+)

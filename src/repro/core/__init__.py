@@ -1,0 +1,14 @@
+"""The paper's contribution: exact RTRL made tractable by combined activity
+and parameter sparsity (Subramoney, 2023).
+
+  cells        — event-based threshold cells (EGRU family) + surrogate grads
+  rtrl         — generic exact RTRL (oracle, O(n^2 p))
+  sparse_rtrl  — structured exact RTRL exploiting row/column sparsity
+  snap         — SnAp-1/2 approximations (Menick et al. 2020 baselines)
+  bptt         — BPTT baseline
+  diag_rtrl    — exact O(p) RTRL for diagonal recurrences (RG-LRU / RWKV)
+  costs        — Table-1 cost model + compute-adjusted iterations
+"""
+from repro.core.cells import EGRUConfig
+
+__all__ = ["EGRUConfig"]

@@ -1,0 +1,31 @@
+"""BPTT baseline (paper Table 1 row 1): same cells, same surrogate gradient.
+
+Memory grows O(T n) (stored states) and updates only happen after the full
+sequence — the two limitations motivating RTRL (paper Sec. 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells
+from repro.core.cells import EGRUConfig
+
+
+def bptt_loss_and_grads(cfg: EGRUConfig, params, xs, labels):
+    """(loss, grads, stats) via reverse-mode through the unrolled sequence."""
+
+    def loss_fn(params):
+        loss, stats = cells.sequence_loss(cfg, params, xs, labels)
+        return loss, stats
+
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    return loss, grads, stats
+
+
+def bptt_train_step(cfg: EGRUConfig, params, opt, opt_state, batch, step,
+                    masks=None):
+    xs, labels = batch
+    loss, grads, stats = bptt_loss_and_grads(cfg, params, xs, labels)
+    params, opt_state = opt.update(grads, opt_state, params, step)
+    return params, opt_state, loss, stats

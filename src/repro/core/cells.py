@@ -1,0 +1,209 @@
+"""Event-based recurrent cells (the paper's model family).
+
+The paper (Sec. 4, Eq. 5) defines the state as
+
+    a_t = H(v_t),   v_t = F(a_{t-1}, x_t; w) - theta,
+
+with H the Heaviside step and pseudo-derivative
+    H'(v) = gamma * max(0, 1 - |v| / (2*eps)).
+
+Two flavours of F are provided:
+
+  * ``rnn``  — vanilla map  v = x W + a R + b          (p = n(n_in + n + 2))
+  * ``gru``  — GRU-gated map (the paper's experiments "trained an EGRU"):
+               u = sigmoid(x Wu + a Ru + bu)
+               r = sigmoid(x Wr + a Rr + br)
+               z = tanh   (x Wz + (r*a) Rz + bz)
+               v = u*z + (1-u)*a - theta
+
+``dense=True`` replaces H by tanh (no events, H' := dense) — the paper's
+"without activity sparsity" ablation (Fig. 3E/F) with identical parameters.
+
+Forward sparsity  alpha_t = fraction of units with a_t == 0.
+Backward sparsity beta_t  = fraction of units with H'(v_t) == 0 — these
+units' rows of J, M-bar and M vanish (Eqs. 6-10), which is the entire
+computational claim of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EGRUConfig:
+    n_hidden: int = 16
+    n_in: int = 2
+    n_out: int = 2
+    kind: str = "gru"              # 'gru' | 'rnn'
+    dense: bool = False            # True -> tanh cell (no activity sparsity)
+    gamma: float = 1.0             # pseudo-derivative height
+    eps: float = 0.3               # pseudo-derivative half-width
+    # experiment settings (paper Sec. 6)
+    seq_len: int = 17
+    batch_size: int = 32
+    iterations: int = 1700
+    lr: float = 5e-3
+    param_dtype: Any = jnp.float32
+
+    @property
+    def m(self) -> int:
+        """Per-unit parameter group size (paper's m = n + n_in + 1 [+1 theta])."""
+        return self.n_in + self.n_hidden + 2   # W col, R col, bias, theta
+
+    @property
+    def n_rec_params(self) -> int:
+        """p: number of recurrent parameters."""
+        per_gate = self.n_hidden * (self.n_in + self.n_hidden + 1)
+        if self.kind == "rnn":
+            return per_gate + self.n_hidden                 # + theta
+        return 3 * per_gate + self.n_hidden                 # u, r, z gates + theta
+
+    def replace(self, **kw) -> "EGRUConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def pseudo_derivative(v: jax.Array, cfg: EGRUConfig) -> jax.Array:
+    """H'(v) = gamma * max(0, 1 - |v|/(2 eps))   (paper Sec. 4, Fig. 1)."""
+    return cfg.gamma * jnp.maximum(0.0, 1.0 - jnp.abs(v) / (2.0 * cfg.eps))
+
+
+def heaviside(v: jax.Array) -> jax.Array:
+    return (v > 0.0).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _gate_init(key, n_in, n, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(max(1, n_in))
+    s_rec = 1.0 / math.sqrt(max(1, n))
+    return {"W": (s_in * jax.random.normal(k1, (n_in, n))).astype(dtype),
+            "R": (s_rec * jax.random.normal(k2, (n, n))).astype(dtype),
+            "b": jnp.zeros((n,), dtype)}
+
+
+def init_params(cfg: EGRUConfig, key: jax.Array) -> dict:
+    n, n_in, dt = cfg.n_hidden, cfg.n_in, cfg.param_dtype
+    keys = jax.random.split(key, 5)
+    if cfg.kind == "rnn":
+        p = {"v": _gate_init(keys[0], n_in, n, dt)}
+    else:
+        p = {"u": _gate_init(keys[0], n_in, n, dt),
+             "r": _gate_init(keys[1], n_in, n, dt),
+             "z": _gate_init(keys[2], n_in, n, dt)}
+    # thresholds: positive init so units start moderately sparse
+    p["theta"] = 0.1 * jnp.abs(jax.random.normal(keys[3], (n,))).astype(dt)
+    p["out"] = {"W": (1.0 / math.sqrt(n) *
+                      jax.random.normal(keys[4], (n, cfg.n_out))).astype(dt),
+                "b": jnp.zeros((cfg.n_out,), dt)}
+    return p
+
+
+def rec_param_tree(params: dict) -> dict:
+    """The recurrent parameters w (everything except the readout)."""
+    return {k: v for k, v in params.items() if k != "out"}
+
+
+def init_state(cfg: EGRUConfig, batch: int) -> jax.Array:
+    return jnp.zeros((batch, cfg.n_hidden), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cell step
+# ---------------------------------------------------------------------------
+
+def pre_activation(cfg: EGRUConfig, w: dict, a_prev: jax.Array,
+                   x_t: jax.Array) -> jax.Array:
+    """v_t = F(a_{t-1}, x_t) - theta.  a_prev: [B,n], x_t: [B,n_in]."""
+    if cfg.kind == "rnn":
+        g = w["v"]
+        f = x_t @ g["W"] + a_prev @ g["R"] + g["b"]
+    else:
+        u = jax.nn.sigmoid(x_t @ w["u"]["W"] + a_prev @ w["u"]["R"] + w["u"]["b"])
+        r = jax.nn.sigmoid(x_t @ w["r"]["W"] + a_prev @ w["r"]["R"] + w["r"]["b"])
+        z = jnp.tanh(x_t @ w["z"]["W"] + (r * a_prev) @ w["z"]["R"] + w["z"]["b"])
+        f = u * z + (1.0 - u) * a_prev
+    return f - w["theta"]
+
+
+def step(cfg: EGRUConfig, w: dict, a_prev: jax.Array, x_t: jax.Array):
+    """One step: -> (a_t, stats). stats: v_t, H'(v_t), alpha, beta."""
+    v = pre_activation(cfg, w, a_prev, x_t)
+    if cfg.dense:
+        a = jnp.tanh(v)
+        hp = 1.0 - jnp.square(a)            # dense 'pseudo'-derivative
+    else:
+        a = heaviside(v) * 1.0
+        hp = pseudo_derivative(v, cfg)
+    stats = {"v": v, "hp": hp,
+             "alpha": jnp.mean(a == 0.0), "beta": jnp.mean(hp == 0.0)}
+    return a, stats
+
+
+def step_straight_through(cfg: EGRUConfig, w: dict, a_prev, x_t):
+    """Autodiff-compatible step: Heaviside forward, pseudo-derivative in the
+    backward pass (straight-through with custom JVP).  This is what BPTT and
+    the generic-RTRL oracle differentiate — so *all* training algorithms here
+    share one definition of the surrogate gradient."""
+
+    @jax.custom_jvp
+    def H_st(v):
+        return heaviside(v)
+
+    @H_st.defjvp
+    def _jvp(primals, tangents):
+        (v,), (dv,) = primals, tangents
+        return heaviside(v), pseudo_derivative(v, cfg) * dv
+
+    v = pre_activation(cfg, w, a_prev, x_t)
+    return jnp.tanh(v) if cfg.dense else H_st(v)
+
+
+def readout(params: dict, a: jax.Array) -> jax.Array:
+    return a @ params["out"]["W"] + params["out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Sequence-level loss (mean-over-time logits -> softmax CE)
+# ---------------------------------------------------------------------------
+
+def sequence_logits(cfg: EGRUConfig, params: dict, xs: jax.Array):
+    """xs: [T, B, n_in] -> (per-step logits [T, B, n_out], stats)."""
+    w = rec_param_tree(params)
+    a0 = init_state(cfg, xs.shape[1])
+
+    def body(a, x_t):
+        a_new = step_straight_through(cfg, w, a, x_t)
+        return a_new, (readout(params, a_new), jnp.mean(a_new == 0.0))
+
+    _, (logits_t, alpha_t) = jax.lax.scan(body, a0, xs)
+    return logits_t, {"alpha": alpha_t.mean()}
+
+
+def xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                         labels[:, None], axis=1))
+
+
+def sequence_loss(cfg: EGRUConfig, params: dict, xs: jax.Array,
+                  labels: jax.Array):
+    """Online-decomposable loss: L = (1/T) sum_t CE(logits_t, y).
+
+    RTRL requires an instantaneous per-step loss (Eq. 2: L = sum_t L^(t));
+    the mean over steps keeps it comparable across sequence lengths."""
+    logits_t, stats = sequence_logits(cfg, params, xs)
+    T = logits_t.shape[0]
+    losses = jax.vmap(lambda lg: xent(lg, labels))(logits_t)
+    stats["logits_mean"] = logits_t.mean(axis=0)
+    return losses.mean(), stats
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,113 @@
+"""Table-1 cost model + the paper's compute-adjusted iteration measure.
+
+Formulas (paper Table 1; n hidden units, p recurrent params, T seq length,
+alpha/beta/omega sparsities with tilde = 1 - sparsity = density):
+
+  method                        memory              time per step
+  BPTT (dense)                  T n + p             n^2 + p
+  RTRL (dense)                  n + n p             n^2 + n^2 p
+  RTRL + param sparsity         n + w~ n p          w~ n^2 + w~^2 n^2 p
+  RTRL + activity sparsity      a~ n + b~ n p       a~ n^2 + b~^2 n^2 p
+  RTRL + both                   a~ n + w~ b~ n p    w~ a~ n^2 + w~^2 b~^2 n^2 p
+  SnAp-1                        n + w~ n p/n ...    w~ n^2 + w~ p
+  SnAp-2                        n + w~^2 n p        w~ n^2 + w~^3 n^2 p
+
+The *compute-adjusted iteration* (paper Sec. 6) integrates the savings factor
+w~^2 b~(t) b~(t-1)  per step — "an analytical measure for the total compute
+used in an optimal case where the underlying hardware is optimised for the
+algorithm".  `tpu_block_factor` reports the block-granular fraction our TPU
+adaptation actually realises (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cells import EGRUConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CostInputs:
+    n: int
+    p: int
+    n_in: int
+    T: int
+    alpha: float = 0.0          # forward activity sparsity
+    beta: float = 0.0           # backward (derivative) sparsity
+    omega: float = 0.0          # parameter sparsity
+
+    @property
+    def at(self):  # alpha tilde
+        return 1.0 - self.alpha
+
+    @property
+    def bt(self):
+        return 1.0 - self.beta
+
+    @property
+    def wt(self):
+        return 1.0 - self.omega
+
+
+def from_config(cfg: EGRUConfig, **sparsities) -> CostInputs:
+    return CostInputs(n=cfg.n_hidden, p=cfg.n_rec_params, n_in=cfg.n_in,
+                      T=cfg.seq_len, **sparsities)
+
+
+def table1(ci: CostInputs) -> dict:
+    n, p, T = ci.n, ci.p, ci.T
+    at, bt, wt = ci.at, ci.bt, ci.wt
+    return {
+        "bptt": {"memory": T * n + p, "time_per_step": n * n + p},
+        "rtrl_dense": {"memory": n + n * p, "time_per_step": n * n + n * n * p},
+        "rtrl_param_sparse": {"memory": n + wt * n * p,
+                              "time_per_step": wt * n * n + wt ** 2 * n * n * p},
+        "rtrl_activity_sparse": {"memory": at * n + bt * n * p,
+                                 "time_per_step": at * n * n + bt ** 2 * n * n * p},
+        "rtrl_both": {"memory": at * n + wt * bt * n * p,
+                      "time_per_step": wt * at * n * n + wt ** 2 * bt ** 2 * n * n * p},
+        "snap1": {"memory": n + wt * n * (p / n),
+                  "time_per_step": wt * n * n + wt * p},
+        "snap2": {"memory": n + wt ** 2 * n * p,
+                  "time_per_step": wt * n * n + wt ** 3 * n * n * p},
+    }
+
+
+def savings_factor(beta_t: float, beta_prev: float, omega: float) -> float:
+    """Per-step influence-update savings  w~^2 b~(t) b~(t-1)  (Secs. 4-5)."""
+    wt = 1.0 - omega
+    return wt * wt * (1.0 - beta_t) * (1.0 - beta_prev)
+
+
+def compute_adjusted_iterations(betas: np.ndarray, betas_prev: np.ndarray,
+                                omega: float) -> np.ndarray:
+    """Cumulative compute (in dense-RTRL-iteration units) over training.
+
+    betas: [iters, T] per-step backward sparsity measurements."""
+    per_step = savings_factor(betas, betas_prev, omega)   # elementwise
+    per_iter = per_step.mean(axis=-1)
+    return np.cumsum(per_iter)
+
+
+def tpu_block_factor(mask: np.ndarray, block: int = 8) -> float:
+    """Fraction of [block x block] tiles with any nonzero — the block-granular
+    density a TPU kernel can actually skip at (vs unstructured w~)."""
+    h = -(-mask.shape[0] // block) * block
+    w = -(-mask.shape[1] // block) * block
+    padded = np.zeros((h, w), mask.dtype)
+    padded[: mask.shape[0], : mask.shape[1]] = mask
+    tiles = padded.reshape(h // block, block, w // block, block)
+    return float((tiles.sum(axis=(1, 3)) > 0).mean())
+
+
+def measured_op_count(ci: CostInputs, beta_t: float, beta_prev: float) -> dict:
+    """Exact op counts for one influence update with given measured sparsity
+    (what the hardware-optimal implementation would execute)."""
+    n, p = ci.n, ci.p
+    dense = n * n * p
+    return {
+        "dense_ops": dense,
+        "activity_ops": (1 - beta_t) * (1 - beta_prev) * dense,
+        "both_ops": savings_factor(beta_t, beta_prev, ci.omega) * dense,
+    }

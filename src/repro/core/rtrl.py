@@ -1,0 +1,116 @@
+"""Generic *exact* RTRL engine (the oracle).
+
+Implements Eqs. (2)-(4) of the paper for ANY cell expressible as
+a_t = step(w, a_{t-1}, x_t), computing the per-step Jacobian J_t and
+immediate influence M-bar_t with autodiff (vmapped jacrev through the same
+straight-through surrogate that BPTT uses).  This is O(n^2 p) per step —
+the intractable baseline the paper starts from — and serves as the bitwise
+reference for `repro.core.sparse_rtrl`.
+
+Gradient identity: for L = sum_t L_t, RTRL and BPTT compute the *same* total
+gradient (both are exact); tests/test_rtrl_exactness.py asserts this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import cells
+from repro.core.cells import EGRUConfig
+
+
+def _flat_rec_params(params: dict):
+    w = cells.rec_param_tree(params)
+    w_flat, unravel = ravel_pytree(w)
+    return w_flat, unravel
+
+
+def rtrl_loss_and_grads(cfg: EGRUConfig, params: dict, xs: jax.Array,
+                        labels: jax.Array):
+    """Exact RTRL forward pass: returns (loss, grads, stats).
+
+    xs: [T, B, n_in]; labels: [B].  Memory is O(B n p) — independent of T.
+    """
+    T, B, _ = xs.shape
+    n = cfg.n_hidden
+    w_flat, unravel = _flat_rec_params(params)
+    p = w_flat.shape[0]
+
+    def step_flat(wf, a, x):
+        return cells.step_straight_through(cfg, unravel(wf), a, x)
+
+    def step_loss(params_out, a, y):
+        logits = cells.readout({"out": params_out}, a)
+        return cells.xent(logits, y) / T
+
+    M0 = jnp.zeros((B, n, p), jnp.float32)
+    a0 = cells.init_state(cfg, B)
+
+    def body(carry, x_t):
+        a, M, gw, gout, loss = carry
+        # per-example Jacobian J_t: [B, n, n]
+        J = jax.vmap(jax.jacrev(lambda ai, xi: step_flat(w_flat, ai[None], xi[None])[0]))(a, x_t)
+        # immediate influence M-bar_t: [B, n, p] (w shared across batch)
+        Mbar = jax.jacrev(lambda wf: step_flat(wf, a, x_t))(w_flat)
+        a_new = step_flat(w_flat, a, x_t)
+        M_new = jnp.einsum("bkl,blp->bkp", J, M) + Mbar
+        # credit assignment c-bar_t = dL_t/da_t  [B, n]
+        lt, cbar = jax.value_and_grad(
+            lambda ai: step_loss(params["out"], ai, labels))(a_new)
+        gout_t = jax.grad(
+            lambda po: step_loss(po, a_new, labels))(params["out"])
+        gw_new = gw + jnp.einsum("bk,bkp->p", cbar, M_new)
+        gout_new = jax.tree.map(jnp.add, gout, gout_t)
+        stats = {"alpha": jnp.mean(a_new == 0.0),
+                 "m_row_density": jnp.mean(jnp.any(M_new != 0.0, axis=2))}
+        return (a_new, M_new, gw_new, gout_new, loss + lt), stats
+
+    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params["out"])
+    (a, M, gw, gout, loss), stats = jax.lax.scan(
+        body, (a0, M0, jnp.zeros((p,), jnp.float32), gout0, jnp.float32(0)), xs)
+    grads = dict(unravel(gw))
+    grads["out"] = gout
+    return loss, grads, jax.tree.map(jnp.mean, stats)
+
+
+def rtrl_online_train(cfg: EGRUConfig, params: dict, xs: jax.Array,
+                      labels: jax.Array, opt, opt_state, step0):
+    """Truly-online RTRL: a parameter update EVERY timestep (what BPTT cannot
+    do — the paper's motivation).  Memory O(B n p), no stored history."""
+    T, B, _ = xs.shape
+    n = cfg.n_hidden
+
+    def body(carry, x_ty):
+        params, opt_state, a, M, step = carry
+        x_t = x_ty
+        w_flat, unravel = _flat_rec_params(params)
+
+        def step_flat(wf, ai, xi):
+            return cells.step_straight_through(cfg, unravel(wf), ai, xi)
+
+        J = jax.vmap(jax.jacrev(
+            lambda ai, xi: step_flat(w_flat, ai[None], xi[None])[0]))(a, x_t)
+        Mbar = jax.jacrev(lambda wf: step_flat(wf, a, x_t))(w_flat)
+        a_new = step_flat(w_flat, a, x_t)
+        M_new = jnp.einsum("bkl,blp->bkp", J, M) + Mbar
+
+        def inst_loss(po, ai):
+            return cells.xent(cells.readout({"out": po}, ai), labels) / T
+
+        lt, (gout, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
+            params["out"], a_new)
+        gw = jnp.einsum("bk,bkp->p", cbar, M_new)
+        grads = dict(unravel(gw))
+        grads["out"] = gout
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        return (params, opt_state, a_new, M_new, step + 1), lt
+
+    w_flat, _ = _flat_rec_params(params)
+    M0 = jnp.zeros((B, n, w_flat.shape[0]), jnp.float32)
+    (params, opt_state, _, _, step), losses = jax.lax.scan(
+        body, (params, opt_state, cells.init_state(cfg, B), M0, step0), xs)
+    return params, opt_state, step, losses.mean()

@@ -1,0 +1,81 @@
+"""SnAp-1 / SnAp-2 (Menick et al., 2020) — the approximate-RTRL baselines in
+the paper's Table 1.
+
+SnAp-n keeps only the influence entries M[k, j] whose parameter j can affect
+unit k within n steps; entries outside the pattern are dropped each update
+(an approximation — unlike this paper's exact sparse RTRL).
+
+  SnAp-1: pattern = immediate influence (parameter group q affects unit q
+          only) -> M collapses to [B, n, m] and J enters only through its
+          diagonal.  Memory ~ omega-tilde * n * m, time ~ omega-tilde * p.
+  SnAp-2: pattern = one extra hop through the (masked) recurrent matrix ->
+          M[k, q] kept iff k == q or R_mask[q, k] != 0 (masked-dense here).
+
+With parameter sparsity, SnAp-2's pattern density is ~omega-tilde, matching
+Table 1's omega^3 n^2 p time scaling in the unstructured-hardware account.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells
+from repro.core.cells import EGRUConfig
+from repro.core.sparse_rtrl import cell_partials, influence_grads
+
+
+def snap2_pattern(cfg: EGRUConfig, masks) -> jax.Array:
+    """[n(k), n(q)] keep-pattern: q's parameters reach k within 2 steps."""
+    n = cfg.n_hidden
+    eye = jnp.eye(n)
+    if masks is None:
+        return jnp.ones((n, n))
+    gates = ("v",) if cfg.kind == "rnn" else ("u", "r", "z")
+    reach = eye
+    for g in gates:
+        reach = jnp.maximum(reach, (masks[g]["R"] != 0).astype(jnp.float32).T)
+    return reach
+
+
+def snap_loss_and_grads(cfg: EGRUConfig, params, xs, labels, order: int = 1,
+                        masks=None):
+    """SnAp-{1,2} forward pass. Returns (loss, grads, stats)."""
+    T, B, _ = xs.shape
+    n = cfg.n_hidden
+    w = cells.rec_param_tree(params)
+    a0 = cells.init_state(cfg, B)
+
+    from repro.core.sparse_rtrl import init_influence, influence_update
+    M0 = init_influence(cfg, B)
+    if order == 1:
+        keep = jnp.eye(n)
+    else:
+        keep = snap2_pattern(cfg, masks)
+
+    def prune(M):
+        return {g: Mg * (keep[None, :, :, None] if Mg.ndim == 4
+                         else keep[None]) for g, Mg in M.items()}
+
+    def body(carry, x_t):
+        a, M, gw_acc, gout, loss = carry
+        a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
+        M_new = prune(influence_update(cfg, M, hp, Jhat, mbar, masks))
+
+        def inst_loss(po, ai):
+            return cells.xent(cells.readout({"out": po}, ai), labels) / T
+
+        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
+            params["out"], a_new)
+        gw_t = influence_grads(cfg, M_new, cbar)
+        gw_acc = jax.tree.map(jnp.add, gw_acc, gw_t)
+        gout = jax.tree.map(jnp.add, gout, gout_t)
+        return (a_new, M_new, gw_acc, gout, loss + lt), jnp.mean(hp == 0.0)
+
+    gw0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                       cells.rec_param_tree(params))
+    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params["out"])
+    (a, M, gw, gout, loss), betas = jax.lax.scan(
+        body, (a0, M0, gw0, gout0, jnp.float32(0)), xs)
+    grads = dict(gw)
+    grads["out"] = gout
+    return loss, grads, {"beta": betas.mean(), "keep_density": keep.mean()}

@@ -1,0 +1,295 @@
+"""EXACT RTRL with combined activity + parameter sparsity (the paper's core).
+
+Closed-form per-step partials for the threshold cells in `repro.core.cells`
+exploit the structure of Eqs. (6)-(10):
+
+  * J_t   = D(H'(v_t)) . J-hat_t          -> beta_t . n rows are exactly zero
+  * Mbar_t = D(H'(v_t)) . (per-unit groups) -> same rows zero; one parameter
+    group (W[:,k'], R[:,k'], b_k' [, theta_k']) per unit k' (paper's m =
+    n + n_in + 1), so M factors as [B, n, n, m] with p = n*m.
+  * fixed parameter-sparsity masks zero columns of Mbar/M permanently and
+    sparsify J through R (Sec. 5) — invariants asserted in tests.
+
+The JAX implementation computes masked-dense (TPU adaptation realises the
+savings via row compaction + block-sparse Pallas kernels — see
+repro/kernels/influence.py); `repro.core.costs` does the paper's own
+"compute-adjusted" op accounting from the measured beta/omega.
+
+Gradients are bit-identical to `repro.core.rtrl` (generic oracle) and to
+BPTT — the paper's "without any approximations" claim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells
+from repro.core.cells import EGRUConfig
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter-sparsity masks (fixed at init — paper Sec. 6)
+# ---------------------------------------------------------------------------
+
+def make_masks(cfg: EGRUConfig, key: jax.Array, sparsity: float,
+               block: int = 1, mask_input: bool = True) -> Tree:
+    """Random fixed masks with density (1-sparsity).
+
+    block > 1 draws the mask at [block x block] granularity — the
+    TPU-friendly variant (DESIGN.md §3); block=1 is the paper's unstructured
+    setting.
+    """
+    def bernoulli(key, shape):
+        if block == 1:
+            return (jax.random.uniform(key, shape) >= sparsity).astype(jnp.float32)
+        bshape = tuple(-(-s // block) for s in shape)
+        coarse = (jax.random.uniform(key, bshape) >= sparsity).astype(jnp.float32)
+        fine = jnp.kron(coarse, jnp.ones((block, block)))
+        return fine[: shape[0], : shape[1]]
+
+    gates = ("v",) if cfg.kind == "rnn" else ("u", "r", "z")
+    masks = {}
+    for i, g in enumerate(gates):
+        kW, kR = jax.random.split(jax.random.fold_in(key, i))
+        masks[g] = {
+            "W": bernoulli(kW, (cfg.n_in, cfg.n_hidden)) if mask_input
+            else jnp.ones((cfg.n_in, cfg.n_hidden)),
+            "R": bernoulli(kR, (cfg.n_hidden, cfg.n_hidden)),
+            "b": jnp.ones((cfg.n_hidden,)),
+        }
+    masks["theta"] = jnp.ones((cfg.n_hidden,))
+    masks["out"] = None          # readout stays dense
+    return masks
+
+
+def apply_masks(params: Tree, masks: Tree) -> Tree:
+    # walk the mask tree (None = leave whole subtree dense, e.g. 'out')
+    def leaf(m, p):
+        return p if m is None else jax.tree.map(
+            lambda pi, mi: pi * mi.astype(pi.dtype), p, m)
+    return jax.tree.map(
+        lambda m, p: p if m is None else p * m.astype(p.dtype),
+        masks, params, is_leaf=lambda x: x is None)
+
+
+def omega_tilde(masks: Tree) -> jax.Array:
+    """Measured parameter density (over maskable recurrent params)."""
+    tot, nz = 0.0, 0.0
+    for g, sub in masks.items():
+        if g in ("out", "theta") or sub is None:
+            continue
+        for k in ("W", "R"):
+            tot += sub[k].size
+            nz += sub[k].sum()
+    return nz / tot
+
+
+# ---------------------------------------------------------------------------
+# Closed-form per-step partials
+# ---------------------------------------------------------------------------
+
+def _gru_forward(w, a, x):
+    u = jax.nn.sigmoid(x @ w["u"]["W"] + a @ w["u"]["R"] + w["u"]["b"])
+    r = jax.nn.sigmoid(x @ w["r"]["W"] + a @ w["r"]["R"] + w["r"]["b"])
+    z = jnp.tanh(x @ w["z"]["W"] + (r * a) @ w["z"]["R"] + w["z"]["b"])
+    v = u * z + (1.0 - u) * a - w["theta"]
+    return v, (u, r, z)
+
+
+def cell_partials(cfg: EGRUConfig, w: Tree, a_prev: jax.Array, x_t: jax.Array):
+    """Closed-form (a_new, hp, J-hat [B,n,n], Mbar pieces).
+
+    J = D(hp) @ J-hat;  Mbar rows are D(hp)-gated by construction.
+    """
+    B, n = a_prev.shape
+    if cfg.kind == "rnn":
+        v = x_t @ w["v"]["W"] + a_prev @ w["v"]["R"] + w["v"]["b"] - w["theta"]
+        a_new, hp = _activation(cfg, v)
+        Jhat = jnp.broadcast_to(w["v"]["R"].T[None], (B, n, n))
+        # group vector g = (x, a_prev, 1, -1): diag Mbar coefficient = 1
+        g = jnp.concatenate(
+            [x_t, a_prev, jnp.ones((B, 1)), -jnp.ones((B, 1))], axis=1)
+        mbar = {"v_diag_coef": jnp.ones((B, n)), "v_g": g}
+        return a_new, hp, Jhat, mbar
+
+    v, (u, r, z) = _gru_forward(w, a_prev, x_t)
+    a_new, hp = _activation(cfg, v)
+    du = u * (1 - u)
+    dr = r * (1 - r)
+    dz = 1 - jnp.square(z)
+    cu = (z - a_prev) * du                     # coef on R_u^T rows
+    cz = u * dz                                # coef on z-path rows
+    term_u = jnp.einsum("bk,lk->bkl", cu, w["u"]["R"])
+    term_z1 = jnp.einsum("bk,bl,lk->bkl", cz, r, w["z"]["R"])
+    inner = jnp.einsum("lm,bm,mk->blk", w["r"]["R"], a_prev * dr, w["z"]["R"])
+    term_z2 = jnp.einsum("bk,blk->bkl", cz, inner)
+    Jhat = term_u + term_z1 + term_z2
+    Jhat = Jhat.at[:, jnp.arange(n), jnp.arange(n)].add(1 - u)
+    g_u = jnp.concatenate([x_t, a_prev, jnp.ones((B, 1))], axis=1)
+    g_z = jnp.concatenate([x_t, r * a_prev, jnp.ones((B, 1))], axis=1)
+    # r-gate coupling: dv_k/dw_r[k'] = cz_k R_z[k',k] a_{k'} dr_{k'} * g_r
+    coef_r = jnp.einsum("bk,qk,bq->bkq", cz, w["z"]["R"], a_prev * dr)
+    mbar = {"u_diag_coef": cu, "u_g": g_u,
+            "z_diag_coef": cz, "z_g": g_z,
+            "r_coef": coef_r, "r_g": g_u}
+    return a_new, hp, Jhat, mbar
+
+
+def _activation(cfg: EGRUConfig, v):
+    if cfg.dense:
+        a = jnp.tanh(v)
+        return a, 1.0 - jnp.square(a)
+    return cells.heaviside(v), cells.pseudo_derivative(v, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Influence-matrix state
+# ---------------------------------------------------------------------------
+
+def init_influence(cfg: EGRUConfig, batch: int) -> Tree:
+    n, m1 = cfg.n_hidden, cfg.n_in + cfg.n_hidden + 1
+    if cfg.kind == "rnn":
+        return {"v": jnp.zeros((batch, n, n, m1 + 1), jnp.float32)}
+    return {g: jnp.zeros((batch, n, n, m1), jnp.float32) for g in ("u", "r", "z")} \
+        | {"theta": jnp.zeros((batch, n, n), jnp.float32)}
+
+
+def influence_update(cfg: EGRUConfig, M: Tree, hp, Jhat, mbar, masks=None):
+    """M_t = D(hp) [ J-hat M_{t-1} + Mbar-hat ]   — Eq. (10) exactly."""
+    n = cfg.n_hidden
+    idx = jnp.arange(n)
+
+    def jm(Mg):   # [B,n,n,m] or [B,n,n]
+        if Mg.ndim == 4:
+            return jnp.einsum("bkl,blqm->bkqm", Jhat, Mg)
+        return jnp.einsum("bkl,blq->bkq", Jhat, Mg)
+
+    def gmask(g):
+        if masks is None or g not in masks:
+            return None
+        mk = masks[g]
+        return jnp.concatenate([mk["W"].T, mk["R"].T,
+                                jnp.ones((n, 1))], axis=1)    # [n(q), m]
+
+    new = {}
+    if cfg.kind == "rnn":
+        T = jm(M["v"])
+        add = jnp.einsum("bq,bm->bqm", mbar["v_diag_coef"],
+                         mbar["v_g"])                          # [B,n(q),m]
+        mk = gmask("v")
+        if mk is not None:
+            mk = jnp.concatenate([mk, jnp.ones((n, 1))], axis=1)  # theta col
+            add = add * mk[None]
+        T = T.at[:, idx, idx, :].add(add)
+        new["v"] = hp[:, :, None, None] * T
+        return new
+
+    for g in ("u", "z"):
+        T = jm(M[g])
+        add = jnp.einsum("bq,bm->bqm", mbar[f"{g}_diag_coef"], mbar[f"{g}_g"])
+        mk = gmask(g)
+        if mk is not None:
+            add = add * mk[None]
+        T = T.at[:, idx, idx, :].add(add)
+        new[g] = hp[:, :, None, None] * T
+    # r gate: dense (k,q) coupling through R_z
+    T = jm(M["r"])
+    add = jnp.einsum("bkq,bm->bkqm", mbar["r_coef"], mbar["r_g"])
+    mk = gmask("r")
+    if mk is not None:
+        add = add * mk[None, None]
+    new["r"] = hp[:, :, None, None] * (T + add)
+    # theta: dv_k/dtheta_q = -delta_kq
+    Tt = jm(M["theta"])
+    Tt = Tt.at[:, idx, idx].add(-1.0)
+    new["theta"] = hp[:, :, None] * Tt
+    return new
+
+
+def influence_grads(cfg: EGRUConfig, M: Tree, cbar: jax.Array) -> Tree:
+    """dL_t/dw += cbar_t^T M_t, mapped back to parameter structure."""
+    n, n_in = cfg.n_hidden, cfg.n_in
+    out = {}
+
+    def split_g(gw):   # [q, m] -> dict(W [n_in,n], R [n,n], b [n])
+        return {"W": gw[:, :n_in].T, "R": gw[:, n_in:n_in + n].T,
+                "b": gw[:, n_in + n]}
+
+    if cfg.kind == "rnn":
+        gw = jnp.einsum("bk,bkqm->qm", cbar, M["v"])
+        out["v"] = split_g(gw)
+        out["theta"] = gw[:, -1]
+        return out
+    for g in ("u", "r", "z"):
+        gw = jnp.einsum("bk,bkqm->qm", cbar, M[g])
+        out[g] = split_g(gw)
+    out["theta"] = jnp.einsum("bk,bkq->q", cbar, M["theta"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full sequence: loss + grads + sparsity stats (exact, memory O(B n p))
+# ---------------------------------------------------------------------------
+
+def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
+                               labels: jax.Array, masks: Tree | None = None):
+    """Structured exact RTRL. Returns (loss, grads, stats).
+
+    stats carries per-step alpha/beta (and previous-step beta) so
+    `repro.core.costs` can integrate the paper's compute-adjusted iterations.
+    """
+    T, B, _ = xs.shape
+    w = cells.rec_param_tree(params)
+    a0 = cells.init_state(cfg, B)
+    M0 = init_influence(cfg, B)
+
+    def body(carry, x_t):
+        a, M, gw_acc, gout, loss, beta_prev = carry
+        a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
+        M_new = influence_update(cfg, M, hp, Jhat, mbar, masks)
+
+        def inst_loss(po, ai):
+            return cells.xent(cells.readout({"out": po}, ai), labels) / T
+
+        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
+            params["out"], a_new)
+        gw_t = influence_grads(cfg, M_new, cbar)
+        gw_acc = jax.tree.map(jnp.add, gw_acc, gw_t)
+        gout = jax.tree.map(jnp.add, gout, gout_t)
+        beta = jnp.mean(hp == 0.0)
+        stats = {"alpha": jnp.mean(a_new == 0.0), "beta": beta,
+                 "beta_prev": beta_prev,
+                 "m_row_density": _row_density(M_new)}
+        return (a_new, M_new, gw_acc, gout, loss + lt, beta), stats
+
+    gw0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                       cells.rec_param_tree(params))
+    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params["out"])
+    init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
+    (a, M, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
+    grads = dict(gw)
+    grads["out"] = gout
+    return loss, grads, stats
+
+
+def _row_density(M: Tree) -> jax.Array:
+    """Fraction of nonzero rows of the influence matrix (memory measure)."""
+    dens = []
+    for g, Mg in M.items():
+        flat = Mg.reshape(Mg.shape[0], Mg.shape[1], -1)
+        dens.append(jnp.mean(jnp.any(flat != 0.0, axis=2)))
+    return jnp.stack(dens).mean()
+
+
+def influence_col_density(M: Tree) -> jax.Array:
+    """Fraction of nonzero (q, m) columns — parameter-sparsity invariant."""
+    dens = []
+    for g, Mg in M.items():
+        flat = Mg.reshape(Mg.shape[0] * Mg.shape[1], -1)
+        dens.append(jnp.mean(jnp.any(flat != 0.0, axis=0)))
+    return jnp.stack(dens).mean()

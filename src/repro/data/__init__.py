@@ -1,0 +1,6 @@
+from repro.data.spiral import spiral_batches, spiral_dataset
+from repro.data.tokens import synthetic_token_batches
+from repro.data.pipeline import ShardedHostLoader
+
+__all__ = ["spiral_dataset", "spiral_batches", "synthetic_token_batches",
+           "ShardedHostLoader"]

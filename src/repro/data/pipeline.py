@@ -1,0 +1,51 @@
+"""Host data loading: prefetch + device placement with target shardings.
+
+On a real multi-host pod each process feeds its addressable shard of the
+global batch; here a single host materialises the global batch and
+`jax.device_put` with a NamedSharding scatters it (GSPMD semantics are
+identical — this is the documented single-controller simulation)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+class ShardedHostLoader:
+    """Wraps a host batch iterator: background prefetch thread + device_put.
+
+    prefetch=2 keeps one batch in flight while the step runs — the standard
+    input-pipeline/compute overlap."""
+
+    def __init__(self, it: Iterator, shardings: Any, prefetch: int = 2):
+        self._it = it
+        self._shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for batch in self._it:
+                if self._stop.is_set():
+                    return
+                placed = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), batch, self._shardings)
+                self._q.put(placed)
+        except Exception as e:     # surface loader failures to the consumer
+            self._q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()

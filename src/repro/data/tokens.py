@@ -1,0 +1,49 @@
+"""Deterministic synthetic LM token stream (no external corpora offline).
+
+Markov-ish token generator with a fixed seed per (shard, step) so that a
+restarted worker replays its exact shard — the determinism that straggler
+replacement and elastic restart rely on (runtime/trainer).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _tokens_for(seed: int, batch: int, seq: int, vocab: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    # low-order structure so losses are learnable: mixture of a random walk
+    # over token space and uniform resets
+    base = rng.integers(0, vocab, size=(batch, 1))
+    steps = rng.integers(-32, 33, size=(batch, seq))
+    walk = (base + np.cumsum(steps, axis=1)) % vocab
+    resets = rng.random((batch, seq)) < 0.05
+    uni = rng.integers(0, vocab, size=(batch, seq))
+    return np.where(resets, uni, walk).astype(np.int32)
+
+
+def synthetic_token_batches(batch: int, seq: int, vocab: int, *,
+                            shard: int = 0, n_shards: int = 1,
+                            seed: int = 1234, n_patches: int = 0,
+                            frames: tuple | None = None, d_model: int = 0):
+    """Yields batches {'tokens','labels'[,'patch_embeds'][,'frames']}.
+
+    `shard`/`n_shards` partition the stream deterministically: batch rows
+    [shard::n_shards] of a global batch, keyed by (seed, step)."""
+    step = 0
+    local = batch // n_shards if n_shards > 1 else batch
+    while True:
+        key = seed * 1_000_003 + step
+        toks = _tokens_for(key, batch, seq + 1, vocab)
+        toks = toks[shard::n_shards][:local] if n_shards > 1 else toks
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+        if n_patches > 0:
+            rng = np.random.default_rng(key + 1)
+            out["patch_embeds"] = rng.standard_normal(
+                (local, n_patches, 4096)).astype(np.float32) * 0.02
+            out["labels"][:, :n_patches] = -1
+        if frames is not None:
+            rng = np.random.default_rng(key + 2)
+            out["frames"] = rng.standard_normal(
+                (local,) + frames).astype(np.float32) * 0.02
+        yield out
+        step += 1

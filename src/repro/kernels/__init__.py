@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the RTRL hot-spots (+ pure-jnp oracles in ref.py).
+
+  influence.py    block-sparse influence update  M = D(hp)[J M + Mbar]
+  event_matmul.py activity-sparse forward matmul (EvNN event propagation)
+  compact.py      capacity-based row compaction (unstructured-sparsity path)
+  wkv.py          chunked RWKV6 WKV with VMEM-resident state
+  ops.py          jit'd wrappers: padding, masks, interpret-mode dispatch
+  ref.py          pure-jnp oracles for allclose validation
+
+All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
+(8,128)-aligned) and validated on CPU with interpret=True.
+"""
+from repro.kernels.ops import event_matmul, influence_update, realized_block_savings
+from repro.kernels.compact import (CompactInfluence, compact_influence_step,
+                                   compact_init, compact_to_dense)
+from repro.kernels.wkv import wkv_pallas
+
+__all__ = ["influence_update", "event_matmul", "realized_block_savings",
+           "CompactInfluence", "compact_influence_step", "compact_init",
+           "compact_to_dense", "wkv_pallas"]

@@ -1,0 +1,87 @@
+"""Capacity-based row compaction: the TPU-native realisation of the paper's
+beta~^2 savings for *unstructured* activity sparsity.
+
+Block-granular skipping (influence.py) only pays off when zeros cluster into
+whole (8,128) tiles; random unit-level sparsity at beta=0.5 leaves ~1-0.5^8
+of 8-row blocks active.  Compaction instead gathers the <=K active rows into
+a dense buffer (K a static capacity, like MoE token capacity), runs a dense
+[K x K_prev] x [K_prev x P] MXU matmul, and scatters back:
+
+    FLOPs = K * K_prev * P  ~=  beta~(t) beta~(t-1) n^2 p      (exact!)
+
+The influence matrix is carried in compact form (values [B,K,P] + active-row
+indices [B,K]) across timesteps, so memory is the paper's beta~ n p too.
+Rows beyond capacity are dropped (capacity_factor sized so overflow ~never
+happens; overflow count is reported so callers can assert exactness).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompactInfluence(NamedTuple):
+    vals: jax.Array       # [B, K, P]   compacted rows of M
+    idx: jax.Array        # [B, K]      row index per slot (n = empty sentinel)
+    count: jax.Array      # [B]         number of live rows
+
+
+def compact_rows(dense_rows_mask: jax.Array, K: int) -> tuple[jax.Array, jax.Array]:
+    """dense_rows_mask: [B, n] bool -> (idx [B,K] with sentinel n, count [B])."""
+    B, n = dense_rows_mask.shape
+    # stable order: active rows first, by index
+    key = jnp.where(dense_rows_mask, 0, 1) * (n + 1) + jnp.arange(n)[None]
+    order = jnp.argsort(key, axis=1)[:, :K]                     # [B, K]
+    count = dense_rows_mask.sum(axis=1)
+    slot_live = jnp.arange(K)[None, :] < count[:, None]
+    idx = jnp.where(slot_live, order, n)
+    return idx, count
+
+
+def compact_init(B: int, K: int, P: int) -> CompactInfluence:
+    return CompactInfluence(jnp.zeros((B, K, P), jnp.float32),
+                            jnp.full((B, K), -1, jnp.int32),
+                            jnp.zeros((B,), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def compact_influence_step(hp: jax.Array, Jhat: jax.Array,
+                           Mc: CompactInfluence, Mbar: jax.Array, K: int):
+    """One RTRL influence update in compact form.
+
+    hp [B,n]; Jhat [B,n,n]; Mbar [B,n,P]; returns (Mc', overflow [B]).
+    FLOPs scale as K * K * P instead of n * n * P."""
+    B, n, P = Mbar.shape
+    idx_new, count_new = compact_rows(hp != 0.0, K)             # rows of M_t
+    n_sentinel = n
+
+    # gather J rows (active k) and columns (previously-active l)
+    bidx = jnp.arange(B)[:, None]
+    Jg = Jhat[bidx, jnp.minimum(idx_new, n - 1)]                # [B, K, n]
+    prev_idx = jnp.where(Mc.idx < 0, n - 1, Mc.idx)
+    Jgg = jnp.take_along_axis(
+        Jg, jnp.broadcast_to(jnp.minimum(prev_idx, n - 1)[:, None, :],
+                             (B, K, K)), axis=2)                # [B, K, Kprev]
+    # zero contributions from dead slots
+    prev_live = (Mc.idx >= 0) & (Mc.idx < n)
+    Jgg = Jgg * prev_live[:, None, :]
+    T = jnp.einsum("bkl,blp->bkp", Jgg, Mc.vals)                # K*K*P MXU work
+    Mbar_g = Mbar[bidx, jnp.minimum(idx_new, n - 1)]            # [B, K, P]
+    hp_g = hp[bidx, jnp.minimum(idx_new, n - 1)]                # [B, K]
+    live = idx_new < n
+    vals = (hp_g * live)[:, :, None] * (T + Mbar_g)
+    overflow = jnp.maximum(count_new - K, 0)
+    return CompactInfluence(vals, jnp.where(live, idx_new, -1),
+                            jnp.minimum(count_new, K)), overflow
+
+
+def compact_to_dense(Mc: CompactInfluence, n: int) -> jax.Array:
+    """Scatter back to [B, n, P] (for verification / credit assignment)."""
+    B, K, P = Mc.vals.shape
+    out = jnp.zeros((B, n + 1, P), Mc.vals.dtype)
+    idx = jnp.where(Mc.idx < 0, n, Mc.idx)
+    out = out.at[jnp.arange(B)[:, None], idx].set(Mc.vals)
+    return out[:, :n]

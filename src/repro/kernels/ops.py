@@ -1,0 +1,121 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles padding to TPU tile multiples, block-mask computation, and backend
+dispatch (interpret=True on CPU so the kernel *body* is executed and
+validated everywhere; compiled Mosaic on real TPUs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.event_matmul import event_matmul_pallas
+from repro.kernels.influence import block_any, influence_update_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bl", "bp", "interpret"))
+def influence_update(hp, Jhat, M, Mbar, jmask=None, col_mask=None, *,
+                     bk=8, bl=8, bp=128, interpret=None):
+    """Block-sparse M_t = D(hp)[Jhat M_{t-1} + Mbar].
+
+    hp: [B,n]; Jhat: [B,n,n]; M, Mbar: [B,n,P].
+    jmask: optional [n,n] parameter mask for the recurrent matrix (J pattern);
+    col_mask: optional [P] parameter-column liveness.
+    Shapes are padded internally; the result is cropped back.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, n, P = M.shape
+    hp_p = _pad_to(hp, bk, 1)
+    J_p = _pad_to(_pad_to(Jhat, bk, 1), bl, 2)
+    M_p = _pad_to(_pad_to(M, bl, 1), bp, 2)
+    Mb_p = _pad_to(_pad_to(Mbar, bk, 1), bp, 2)
+    n_p, P_p = M_p.shape[1], M_p.shape[2]
+    J_p = jnp.pad(J_p, [(0, 0), (0, n_p - J_p.shape[1]), (0, 0)])[:, :, :n_p] \
+        if J_p.shape[1] != n_p else J_p
+
+    row_mask = block_any(hp_p, bk, axis=1)                       # [B, nkb]
+    prev_mask = block_any(jnp.any(M_p != 0, axis=2).astype(jnp.int32),
+                          bl, axis=1)
+    if col_mask is None:
+        col_cols = jnp.ones((P_p // bp,), jnp.int32)
+    else:
+        col_cols = block_any(_pad_to(col_mask.astype(jnp.int32), bp, 0)[None],
+                             bp, axis=1)[0]
+    if jmask is None:
+        jm = jnp.ones((n_p // bk, n_p // bl), jnp.int32)
+    else:
+        jmT = _pad_to(_pad_to(jmask.T.astype(jnp.int32), bk, 0), bl, 1)
+        jm = jnp.any(
+            jmT.reshape(n_p // bk, bk, n_p // bl, bl) != 0,
+            axis=(1, 3)).astype(jnp.int32)
+
+    out = influence_update_pallas(
+        hp_p.astype(jnp.float32), J_p.astype(jnp.float32),
+        M_p.astype(jnp.float32), Mb_p.astype(jnp.float32),
+        row_mask=row_mask, prev_mask=prev_mask, col_mask=col_cols,
+        jmask=jm, bk=bk, bl=bl, bp=bp, interpret=interpret)
+    return out[:, :n, :P]
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bm", "interpret"))
+def event_matmul(a, R, rmask=None, *, bl=8, bm=128, interpret=None):
+    """Activity-sparse y = a @ R. a: [B,n]; R: [n,m]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, n = a.shape
+    m = R.shape[1]
+    a_p = _pad_to(a, bl, 1)
+    R_p = _pad_to(_pad_to(R, bl, 0), bm, 1)
+    n_p, m_p = R_p.shape
+    act = block_any(a_p, bl, axis=1)
+    if rmask is not None:
+        rm = _pad_to(_pad_to(rmask.astype(jnp.int32), bl, 0), bm, 1)
+        rm = jnp.any(rm.reshape(n_p // bl, bl, m_p // bm, bm) != 0,
+                     axis=(1, 3)).astype(jnp.int32)
+    else:
+        rm = jnp.ones((n_p // bl, m_p // bm), jnp.int32)
+    y = event_matmul_pallas(a_p, R_p, act_mask=act, rmask=rm, bl=bl, bm=bm,
+                            interpret=interpret)
+    return y[:, :m]
+
+
+def realized_block_savings(hp, M_prev, jmask, col_mask, *, bk=8, bl=8, bp=128):
+    """Fraction of [bk x bl x bp] work blocks actually executed — the
+    block-granular counterpart of the paper's  w~^2 b~(t) b~(t-1)  factor."""
+    B = hp.shape[0]
+    row = np.asarray(block_any(_pad_to(hp, bk, 1), bk, 1))          # [B,nkb]
+    prev = np.asarray(block_any(
+        jnp.any(_pad_to(M_prev, bl, 1) != 0, axis=2).astype(jnp.int32), bl, 1))
+    nkb, nlb = row.shape[1], prev.shape[1]
+    if jmask is not None:
+        jm = np.asarray(jmask.T).astype(bool)
+        jm = np.add.reduceat(np.add.reduceat(jm, np.arange(0, jm.shape[0], bk), 0),
+                             np.arange(0, jm.shape[1], bl), 1) > 0
+    else:
+        jm = np.ones((nkb, nlb), bool)
+    col_frac = 1.0 if col_mask is None else float(np.mean(
+        np.add.reduceat(np.asarray(col_mask), np.arange(0, col_mask.shape[0], bp)) > 0))
+    executed = 0.0
+    for b in range(B):
+        executed += float(
+            (row[b][:, None] * prev[b][None, :] * jm).mean())
+    return executed / B * col_frac

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def influence_ref(hp, Jhat, M, Mbar):
+    """out[b] = D(hp[b]) (Jhat[b] @ M[b] + Mbar[b]).  All f32 math."""
+    T = jnp.einsum("bkl,blp->bkp", Jhat.astype(jnp.float32),
+                   M.astype(jnp.float32))
+    return (hp.astype(jnp.float32)[:, :, None]
+            * (T + Mbar.astype(jnp.float32))).astype(M.dtype)
+
+
+def event_matmul_ref(a, R):
+    """y[b] = a[b] @ R with a activity-sparse.  [B,n] x [n,m] -> [B,m]."""
+    return jnp.einsum("bn,nm->bm", a.astype(jnp.float32),
+                      R.astype(jnp.float32)).astype(R.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Naive full-softmax attention. q:[B,S,H,D], k/v:[B,S,KV,D]."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale or D ** -0.5
+    qg = q.reshape(B, S, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window > 0:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, KV * G, S, D).swapaxes(1, 2).astype(q.dtype)
+
+
+def wkv_chunk_ref(r, k, v, logw, u, S_prev):
+    """Sequential per-step WKV over one chunk (the exact recurrence).
+
+    r/k/v/logw: [B,H,L,D]; u: [H,D]; S_prev: [B,H,D,Dv]."""
+    L = r.shape[2]
+
+    def body(S, t):
+        rt, kt, vt = (x[:, :, t].astype(jnp.float32) for x in (r, k, v))
+        wt = jnp.exp(logw[:, :, t])
+        kv = kt[..., None] * vt[:, :, None, :]
+        o = jnp.einsum("bhd,bhdv->bhv", rt, S + u[None, ..., None] * kv)
+        return wt[..., None] * S + kv, o
+
+    S, os = jax.lax.scan(body, S_prev.astype(jnp.float32), jnp.arange(L))
+    return jnp.moveaxis(os, 0, 2), S       # [B,H,L,Dv], [B,H,D,Dv]

@@ -1,0 +1,654 @@
+"""Roofline costing from compiled dry-run artifacts.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of
+trip count (verified empirically — see EXPERIMENTS.md §Dry-run).  Since every
+LM here scans over layers (and flash-attention/WKV scan over chunks), naive
+cost analysis undercounts FLOPs by ~n_layers.  We therefore lower each loop
+body standalone (with the same shardings) and recombine:
+
+    corrected(f) = measured(f)
+                 + Σ_children [ (trips_c - 1) * corrected(c)
+                                + (corrected(c) - measured(c)) ]
+
+The second term accounts for the once-counted embedded instance of c missing
+its own internal loop corrections.  ``trips`` may be fractional (the average
+number of *executed* KV blocks per flash q-chunk under causal/local block
+skipping — skipped `lax.cond` branches cost nothing at runtime).
+
+Collective bytes are parsed from optimized HLO (result shapes of all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute, async -start
+variants included once) and composed with the same formula.
+
+All parts are lowered SPMD-sharded, so every number is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSuite
+from repro.models import attention as attn_lib
+from repro.models import get_model
+from repro.models.layers import embedding_specs
+from repro.models.module import abstract, count_params, pspec_for, tree_shardings
+from repro.sharding import batch_axes, make_ctx, make_rules
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_\[\],{}:# ]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+          "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+          "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        total = 0
+        for sm in _SHAPE_RE.finditer(shapes):
+            dims = [int(d) for d in sm.group(2).split(",") if d] or [1]
+            total += _BYTES[sm.group(1)] * int(np.prod(dims))
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Part:
+    name: str
+    trips: float                       # executions per one parent execution
+    lower: Callable[[], Any]           # () -> jax.stages.Lowered
+    children: list = dataclasses.field(default_factory=list)
+    io_bytes: float = 0.0              # per-device arg+result bytes (fused
+                                       # lower bound on HBM traffic — what a
+                                       # Pallas kernel of this part moves)
+
+    _measured: dict | None = None
+
+    def measured(self) -> dict:
+        if self._measured is None:
+            lowered = self.lower()
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis() or {}
+            text = compiled.as_text()
+            coll = parse_collective_bytes(text)
+            self._measured = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "io_bytes": float(self.io_bytes),
+                "coll": coll,
+                "coll_bytes": float(sum(coll.values())),
+            }
+        return self._measured
+
+    def corrected(self) -> dict:
+        m = dict(self.measured())
+        m["coll"] = dict(m["coll"])
+        for c in self.children:
+            cc = c.corrected()
+            cm = c.measured()
+            for k in ("flops", "bytes", "io_bytes", "coll_bytes"):
+                m[k] += (c.trips - 1) * cc[k] + (cc[k] - cm[k])
+            for kind in set(cc["coll"]) | set(cm["coll"]):
+                extra = ((c.trips - 1) * cc["coll"].get(kind, 0)
+                         + cc["coll"].get(kind, 0) - cm["coll"].get(kind, 0))
+                m["coll"][kind] = m["coll"].get(kind, 0) + extra
+        return m
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _vjp_fn(f):
+    """fn with same args, computing value + full backward (cotangent = ones)."""
+    def g(*args):
+        y, vjp = jax.vjp(f, *args)
+        ones = jax.tree.map(lambda t: jnp.ones(t.shape, t.dtype), y)
+        return vjp(ones)
+    return g
+
+
+class PartBuilder:
+    """Shared context for building per-family part trees."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSuite, mesh: Mesh,
+                 kind: str = "train"):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        n_all = 1
+        for v in mesh.shape.values():
+            n_all *= v
+        pure_dp = (cfg.train_pure_dp and kind == "train"
+                   and shape.global_batch % n_all == 0)
+        self.rules = make_rules(cfg, mesh, pure_dp=pure_dp)
+        from repro.models.module import ShardCtx
+        self.ctx = ShardCtx(mesh, self.rules)
+        self.ba = batch_axes(mesh) + (("model",) if pure_dp else ())
+        self.B = shape.global_batch
+        self.S = shape.seq_len
+
+    def ns(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, pspec_for(axes, shape, self.rules, self.mesh))
+
+    def act(self, shape, axes=None, dtype=None):
+        """(abstract, sharding) for an activation tensor."""
+        axes = axes or ("batch",) + (None,) * (len(shape) - 1)
+        a = _sds(shape, dtype or self.cfg.compute_dtype)
+        return a, self.ns(axes, shape)
+
+    def lower_part(self, fn, args, shardings):
+        def go():
+            return jax.jit(fn, in_shardings=shardings).lower(*args)
+        return go
+
+    def part(self, name, trips, fn, args, shardings, children=()):
+        """Part with per-device arg+result I/O bytes (fused traffic bound)."""
+        n_chips = 1
+        for v in self.mesh.shape.values():
+            n_chips *= v
+
+        def nbytes(tree):
+            return sum(x.size * x.dtype.itemsize
+                       for x in jax.tree.leaves(tree)
+                       if hasattr(x, "size"))
+        try:
+            outs = jax.eval_shape(fn, *args)
+            io = (nbytes(args) + nbytes(outs)) / n_chips
+        except Exception:
+            io = 0.0
+        return Part(name, trips, self.lower_part(fn, args, shardings),
+                    list(children), io_bytes=io)
+
+    # -- attention flash parts ------------------------------------------------
+
+    def eff_kv_trips(self, S, causal, window) -> tuple[float, int, int]:
+        interior, boundary, n_q, Ck = self.eff_kv_split(S, causal, window)
+        return interior + boundary, n_q, Ck
+
+    def eff_kv_split(self, S, causal, window):
+        """(avg interior blocks, avg boundary blocks) per q-chunk + (n_q, Ck).
+
+        Interior blocks take the mask-free fast path (attention.py); they
+        are costed with a separate part."""
+        cfg = self.cfg
+        Cq = attn_lib._fit_chunk(S, cfg.attn_q_chunk)
+        Ck = attn_lib._fit_chunk(S, cfg.attn_kv_chunk)
+        n_q, n_kv = S // Cq, S // Ck
+        n_int = n_bnd = 0
+        for i in range(n_q):
+            q_start, q_end = i * Cq, i * Cq + Cq - 1
+            for j in range(n_kv):
+                ok = True
+                inner = True
+                if causal:
+                    ok &= (j * Ck) <= q_end
+                    inner &= ((j + 1) * Ck - 1) <= q_start
+                if window > 0:
+                    ok &= ((j + 1) * Ck - 1) >= (q_start - window + 1)
+                    inner &= (q_end - j * Ck) < window
+                if ok:
+                    if inner:
+                        n_int += 1
+                    else:
+                        n_bnd += 1
+        return n_int / n_q, n_bnd / n_q, n_q, Ck
+
+    def flash_parts(self, S, kind_name, causal=True, window=0, train=True,
+                    mult=1.0):
+        """[qchunk part] with kvblock child; empty if no scan is emitted."""
+        cfg = self.cfg
+        Cq = attn_lib._fit_chunk(S, cfg.attn_q_chunk)
+        n_q = S // Cq
+        kv_trips, _, Ck = self.eff_kv_trips(S, causal, window)
+        H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        B = self.B
+
+        kv_int, kv_bnd, _, _ = self.eff_kv_split(S, causal, window)
+        q, q_sh = self.act((B, Cq, H, Dh), ("batch", None, "heads", "head_dim"))
+        k, k_sh = self.act((B, S, KV, Dh), ("batch", None, "kv_heads", "head_dim"))
+        v, v_sh = k, k_sh
+
+        def qchunk(q, k, v):
+            return attn_lib.flash_q_chunk(cfg, q, k, v, jnp.int32(S // 2),
+                                          causal=causal, window=window)
+
+        if train and cfg.remat != "none":
+            fn = _vjp_fn(jax.checkpoint(qchunk))    # matches backbone remat
+        elif train:
+            fn = _vjp_fn(qchunk)
+        else:
+            fn = qchunk
+
+        # kv block child
+        G = H // KV
+        qg, qg_sh = self.act((B, Cq, KV, G, Dh),
+                             ("batch", None, "kv_heads", None, "head_dim"))
+        kb, kb_sh = self.act((B, Ck, KV, Dh), ("batch", None, "kv_heads", "head_dim"))
+        accm, accm_sh = self.act((B, KV, G, Cq), ("batch", "kv_heads", None, None),
+                                 jnp.float32)
+        acco, acco_sh = self.act((B, KV, G, Cq, Dh),
+                                 ("batch", "kv_heads", None, None, None), jnp.float32)
+
+        def kvblock_fn(masked):
+            def kvblock(qg, kb, vb, m, l, o):
+                acc = attn_lib._Acc(m, l, o)
+                out = attn_lib.flash_kv_block(
+                    qg, kb, vb, acc, q_pos=S // 2 + jnp.arange(Cq),
+                    kv_pos=jnp.arange(Ck), causal=causal, window=window,
+                    scale=cfg.head_dim ** -0.5, cap=cfg.attn_softcap,
+                    masked=masked)
+                return tuple(out)
+            return _vjp_fn(kvblock) if train else kvblock
+
+        kv_args = (qg, kb, kb, accm, accm, acco)
+        kv_shs = (qg_sh, kb_sh, kb_sh, accm_sh, accm_sh, acco_sh)
+        kv_children = []
+        if kv_bnd > 0:
+            kv_children.append(self.part(
+                f"{kind_name}/kvblock_bnd", kv_bnd, kvblock_fn(True),
+                kv_args, kv_shs))
+        if kv_int > 0:
+            kv_children.append(self.part(
+                f"{kind_name}/kvblock_int", kv_int, kvblock_fn(False),
+                kv_args, kv_shs))
+        if n_q == 1:
+            # no q-chunk scan is emitted: the kv scan is a direct child of the
+            # parent part, executing its trips per parent execution.
+            for c in kv_children:
+                c.trips *= mult
+            return kv_children
+        return [self.part(f"{kind_name}/qchunk", n_q * mult, fn,
+                          (q, k, v), (q_sh, k_sh, v_sh), kv_children)]
+
+    # -- CE loss chunk ---------------------------------------------------------
+
+    def ce_parts(self, mult=1.0):
+        from repro.models.transformer import ce_chunk
+        cfg = self.cfg
+        chunk = min(512, self.S)
+        n = self.S // chunk
+        if n <= 1:
+            return []
+        emb_specs = embedding_specs(cfg)
+        emb_abs = abstract(emb_specs)
+        emb_sh = tree_shardings(emb_specs, self.rules, self.mesh)
+        h, h_sh = self.act((self.B, chunk, cfg.d_model))
+        l, l_sh = self.act((self.B, chunk), dtype=jnp.int32)
+
+        def f(emb, h, lbl):
+            return ce_chunk(cfg, emb, h, lbl, self.ctx)
+
+        return [self.part("ce_chunk", n * mult, _vjp_fn(f),
+                          (emb_abs, h, l), (emb_sh, h_sh, l_sh))]
+
+
+# ---------------------------------------------------------------------------
+# Family part trees
+# ---------------------------------------------------------------------------
+
+def family_children(cfg: ModelConfig, shape: ShapeSuite, mesh: Mesh,
+                    kind: str) -> list[Part]:
+    """Children of the root (full-step) part for one dry-run cell."""
+    pb = PartBuilder(cfg, shape, mesh, kind)
+    train = kind == "train"
+    mb = cfg.n_microbatches if train else 1
+    if cfg.family == "decoder":
+        return _decoder_children(pb, train, mb, kind)
+    if cfg.family == "encdec":
+        return _encdec_children(pb, train, mb, kind)
+    if cfg.family == "rglru":
+        return _rglru_children(pb, train, mb, kind)
+    if cfg.family == "rwkv6":
+        return _rwkv_children(pb, train, mb, kind)
+    raise ValueError(cfg.family)
+
+
+def _wrap_train(pb: PartBuilder, f):
+    cfg = pb.cfg
+    if cfg.remat == "none":
+        return _vjp_fn(f)
+    if cfg.remat == "dots":
+        return _vjp_fn(jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable))
+    return _vjp_fn(jax.checkpoint(f))
+
+
+def _decoder_children(pb: PartBuilder, train: bool, mb: int, kind: str):
+    from repro.models import transformer as T
+    cfg, mesh = pb.cfg, pb.mesh
+    B, S = pb.B, pb.S
+    U = T.n_units(cfg)
+    layout = T.unit_layout(cfg)
+
+    if kind == "decode":
+        uspecs = T.unit_specs(cfg)
+        up_abs = abstract(uspecs)
+        up_sh = tree_shardings(uspecs, pb.rules, mesh)
+        x, x_sh = pb.act((B, 1, cfg.d_model))
+        pos, pos_sh = pb.act((B,), ("batch",), jnp.int32)
+        cache_abs, cache_sh = {}, {}
+        for k_ in layout:
+            win = cfg.local_window if k_ == "local" else 0
+            smax = min(S, win) if win else S
+            c = _sds((B, smax, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+            csh = pb.ns(("batch", "kv_seq", "kv_heads", "head_dim"), c.shape)
+            cache_abs[k_] = {"k": c, "v": c}
+            cache_sh[k_] = {"k": csh, "v": csh}
+
+        def f(up, x, cache, pos):
+            return T.unit_decode(cfg, up, x, cache, pos, pb.ctx)
+
+        return [pb.part("unit_decode", U if cfg.scan_layers else 1, f,
+                        (up_abs, x, cache_abs, pos),
+                        (up_sh, x_sh, cache_sh, pos_sh))]
+
+    # train / prefill: unit part with flash children
+    uspecs = T.unit_specs(cfg)
+    up_abs = abstract(uspecs)
+    up_sh = tree_shardings(uspecs, pb.rules, mesh)
+    x, x_sh = pb.act((B // mb, S, cfg.d_model))
+    positions = jnp.arange(S)
+
+    def f(up, x):
+        # run_unit == unit_prefill FLOPs (cache extraction is a free slice)
+        return T.run_unit(cfg, up, x, positions, pb.ctx)[0]
+
+    fn = _wrap_train(pb, f) if kind == "train" else f
+
+    flash_children = []
+    for k_ in layout:
+        win = cfg.local_window if k_ == "local" else 0
+        flash_children += pb.flash_parts(S, f"attn_{k_}", causal=True,
+                                         window=win, train=train)
+    unit = pb.part("unit", U * mb if cfg.scan_layers else mb, fn,
+                   (up_abs, x), (up_sh, x_sh), flash_children)
+    return [unit] + (pb.ce_parts(mb) if train else [])
+
+
+def _encdec_children(pb: PartBuilder, train: bool, mb: int, kind: str):
+    from repro.models import encdec as E
+    cfg, mesh = pb.cfg, pb.mesh
+    B, S, Se = pb.B, pb.S, cfg.enc_seq
+    parts = []
+
+    if kind == "decode":
+        lspecs = E.dec_layer_specs(cfg)
+        lp_abs, lp_sh = abstract(lspecs), tree_shardings(lspecs, pb.rules, mesh)
+        x, x_sh = pb.act((B, 1, cfg.d_model))
+        pos, pos_sh = pb.act((B,), ("batch",), jnp.int32)
+        selfc = _sds((B, S, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+        crossc = _sds((B, Se, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+        selfc_sh = pb.ns(("batch", "kv_seq", "kv_heads", "head_dim"), selfc.shape)
+        crossc_sh = pb.ns(("batch", "kv_seq", "kv_heads", "head_dim"), crossc.shape)
+        cache = {"self": {"k": selfc, "v": selfc}, "cross": {"k": crossc, "v": crossc}}
+        cache_sh = {"self": {"k": selfc_sh, "v": selfc_sh},
+                    "cross": {"k": crossc_sh, "v": crossc_sh}}
+
+        def f(lp, x, cache, pos):
+            return E.dec_layer_decode(cfg, lp, x, cache, pos)
+
+        return [pb.part("dec_layer_decode", cfg.n_layers, f,
+                        (lp_abs, x, cache, pos),
+                        (lp_sh, x_sh, cache_sh, pos_sh))]
+
+    # encoder layer part
+    espec = E.enc_layer_specs(cfg)
+    ep_abs, ep_sh = abstract(espec), tree_shardings(espec, pb.rules, mesh)
+    xe, xe_sh = pb.act((B // mb, Se, cfg.d_model))
+
+    def fe(lp, x):
+        return E.enc_layer(cfg, lp, x, pb.ctx)
+
+    enc = pb.part("enc_layer", cfg.enc_layers * mb,
+                  _wrap_train(pb, fe) if train else fe,
+                  (ep_abs, xe), (ep_sh, xe_sh),
+                  pb.flash_parts(Se, "enc_attn", causal=False, train=train))
+    parts.append(enc)
+
+    # decoder layer part
+    dspec = E.dec_layer_specs(cfg)
+    dp_abs, dp_sh = abstract(dspec), tree_shardings(dspec, pb.rules, mesh)
+    xd, xd_sh = pb.act((B // mb, S, cfg.d_model))
+    enc_out, enc_out_sh = pb.act((B // mb, Se, cfg.d_model))
+    positions = jnp.arange(S)
+
+    def fd(lp, x, enc):
+        return E.dec_layer(cfg, lp, x, enc, positions, pb.ctx)
+
+    dec_children = pb.flash_parts(S, "self_attn", causal=True, train=train)
+    # cross attention: q over S, kv over Se — model it as its own flash part
+    dec = pb.part("dec_layer", cfg.n_layers * mb,
+                  _wrap_train(pb, fd) if train else fd,
+                  (dp_abs, xd, enc_out), (dp_sh, xd_sh, enc_out_sh),
+                  dec_children + _cross_parts(pb, S, Se, train))
+    parts.append(dec)
+    if train:
+        parts += pb.ce_parts(mb)
+    return parts
+
+
+def _cross_parts(pb: PartBuilder, Sq: int, Skv: int, train: bool):
+    """Cross-attention flash: q chunked over Sq, full kv of length Skv."""
+    cfg = pb.cfg
+    Cq = attn_lib._fit_chunk(Sq, cfg.attn_q_chunk)
+    n_q = Sq // Cq
+    kv_trips, _, Ck = pb.eff_kv_trips(Skv, False, 0)
+    B, H, KV, Dh = pb.B, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, q_sh = pb.act((B, Cq, H, Dh), ("batch", None, "heads", "head_dim"))
+    k, k_sh = pb.act((B, Skv, KV, Dh), ("batch", None, "kv_heads", "head_dim"))
+
+    def qchunk(q, k, v):
+        return attn_lib.flash_q_chunk(cfg, q, k, v, jnp.int32(0),
+                                      causal=False, window=0)
+
+    fn = _vjp_fn(qchunk) if train else qchunk
+    if n_q == 1:
+        return []
+    return [pb.part("cross_attn/qchunk", n_q, fn,
+                    (q, k, k), (q_sh, k_sh, k_sh))]
+
+
+def _rglru_children(pb: PartBuilder, train: bool, mb: int, kind: str):
+    from repro.models import rglru as R
+    cfg, mesh = pb.cfg, pb.mesh
+    B, S = pb.B, pb.S
+    U, _ = R.n_units(cfg)
+    uspecs = R.unit_specs(cfg)
+    up_abs, up_sh = abstract(uspecs), tree_shardings(uspecs, pb.rules, mesh)
+
+    if kind == "decode":
+        x, x_sh = pb.act((B, 1, cfg.d_model))
+        pos, pos_sh = pb.act((B,), ("batch",), jnp.int32)
+        smax = min(S, cfg.local_window)
+        kvc = _sds((B, smax, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+        kvc_sh = pb.ns(("batch", "kv_seq", "kv_heads", "head_dim"), kvc.shape)
+        rec = {"h": _sds((B, cfg.lru_width), jnp.float32),
+               "conv": _sds((B, cfg.conv_width - 1, cfg.lru_width), jnp.bfloat16)}
+        rec_sh = {"h": pb.ns(("batch", "lru"), rec["h"].shape),
+                  "conv": pb.ns(("batch", None, "lru"), rec["conv"].shape)}
+        cache = {"rec": rec, "rec2": rec, "attn": {"k": kvc, "v": kvc}}
+        cache_sh = {"rec": rec_sh, "rec2": rec_sh,
+                    "attn": {"k": kvc_sh, "v": kvc_sh}}
+
+        def f(up, x, cache, pos):
+            return R.unit_decode(cfg, up, x, cache, pos)
+
+        return [pb.part("unit_decode", U, f,
+                        (up_abs, x, cache, pos),
+                        (up_sh, x_sh, cache_sh, pos_sh))]
+
+    x, x_sh = pb.act((B // mb, S, cfg.d_model))
+    positions = jnp.arange(S)
+
+    def f(up, x):
+        return R.run_unit(cfg, up, x, positions, pb.ctx)
+
+    fn = _wrap_train(pb, f) if train else f
+    unit = pb.part("unit", U * mb, fn, (up_abs, x), (up_sh, x_sh),
+                   pb.flash_parts(S, "attn_local", causal=True,
+                                  window=cfg.local_window, train=train))
+    return [unit] + (pb.ce_parts(mb) if train else [])
+
+
+def _rwkv_children(pb: PartBuilder, train: bool, mb: int, kind: str):
+    from repro.models import rwkv as W
+    cfg, mesh = pb.cfg, pb.mesh
+    B, S = pb.B, pb.S
+    lspecs = W.layer_specs(cfg)
+    lp_abs, lp_sh = abstract(lspecs), tree_shardings(lspecs, pb.rules, mesh)
+    H, D = W.n_heads(cfg), cfg.head_dim
+
+    if kind == "decode":
+        x, x_sh = pb.act((B, 1, cfg.d_model))
+        st = {"S": _sds((B, H, D, D), jnp.float32),
+              "x_tm": _sds((B, cfg.d_model), cfg.compute_dtype),
+              "x_cm": _sds((B, cfg.d_model), cfg.compute_dtype)}
+        st_sh = {"S": pb.ns(("batch", "heads", None, None), st["S"].shape),
+                 "x_tm": pb.ns(("batch", None), st["x_tm"].shape),
+                 "x_cm": pb.ns(("batch", None), st["x_cm"].shape)}
+
+        def f(lp, x, st):
+            return W.layer_decode(cfg, lp, x, st)
+
+        return [pb.part("layer_decode", cfg.n_layers, f,
+                        (lp_abs, x, st), (lp_sh, x_sh, st_sh))]
+
+    x, x_sh = pb.act((B // mb, S, cfg.d_model))
+
+    def f(lp, x):
+        return W.run_layer(cfg, lp, x, pb.ctx)
+
+    fn = _wrap_train(pb, f) if train else f
+
+    # wkv chunk child
+    L = min(cfg.rwkv_chunk, S)
+    n_chunks = S // L
+    r, r_sh = pb.act((B // mb, H, L, D), ("batch", "heads", None, None))
+    w, w_sh = pb.act((B // mb, H, L, D), ("batch", "heads", None, None), jnp.float32)
+    Sst, Sst_sh = pb.act((B // mb, H, D, D), ("batch", "heads", None, None), jnp.float32)
+    u_abs = _sds((H, D), jnp.float32)
+    u_sh = pb.ns(("heads", "head_dim"), (H, D))
+
+    def wkv(r_, k_, v_, w_, u_, s_):
+        return W.wkv_chunk(r_, k_, v_, w_, u_, s_)
+
+    wfn = _vjp_fn(jax.checkpoint(wkv)) if (train and cfg.remat != "none") else \
+        (_vjp_fn(wkv) if train else wkv)
+    wkv_part = pb.part("wkv_chunk", n_chunks, wfn,
+                       (r, r, r, w, u_abs, Sst),
+                       (r_sh, r_sh, r_sh, w_sh, u_sh, Sst_sh))
+    layer = pb.part("layer", cfg.n_layers * mb, fn,
+                    (lp_abs, x), (lp_sh, x_sh), [wkv_part])
+    return [layer] + (pb.ce_parts(mb) if train else [])
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (analytic 6ND / 2ND with MoE activation)
+# ---------------------------------------------------------------------------
+
+def model_param_counts(cfg: ModelConfig) -> dict:
+    api = get_model(cfg)
+    specs = api.specs(cfg)
+    total = count_params(specs)
+    embed = cfg.vocab_size * cfg.d_model
+    expert = 0
+    if cfg.moe:
+        from repro.models.moe import moe_specs
+        expert = count_params(moe_specs(cfg)) * cfg.n_layers
+        router = cfg.d_model * cfg.n_experts * cfg.n_layers
+        expert -= router
+    active = total - embed - expert * (1.0 - cfg.top_k / max(1, cfg.n_experts))
+    return {"total": total, "active": active, "embed_table": embed}
+
+
+def attention_model_flops(cfg: ModelConfig, shape: ShapeSuite) -> float:
+    """Score+PV matmul FLOPs the *algorithm* requires (fwd, global).
+
+    4*B*Sq*Skv_eff*H*Dh per layer; causal halves, local windows cap Skv."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "rwkv6":
+        # chunked WKV: intra ~ 2*T*L*D + state 2*D^2 per chunk, per head
+        L = cfg.rwkv_chunk
+        H, D = cfg.d_model // cfg.head_dim, cfg.head_dim
+        if shape.kind == "decode":
+            return 4.0 * B * H * D * D * cfg.n_layers
+        per_tok = 2 * L * D + 4 * D * D / L
+        return 2.0 * B * S * H * per_tok * cfg.n_layers
+    hd = cfg.n_heads * cfg.head_dim
+
+    def layer_attn(sq, skv, window):
+        skv_eff = min(skv, window) if window else skv
+        causal = 0.5 if (window == 0 and sq == skv) else 1.0
+        return 4.0 * B * sq * skv_eff * hd * causal
+
+    n_local = n_global = 0
+    if cfg.family == "decoder":
+        if cfg.layer_pattern == "local_global":
+            n_local = n_global = cfg.n_layers // 2
+        else:
+            n_global = cfg.n_layers
+    elif cfg.family == "rglru":
+        n_local = cfg.n_layers // 3
+    elif cfg.family == "encdec":
+        n_global = cfg.n_layers          # decoder self-attn
+
+    if shape.kind == "decode":
+        total = (n_global * layer_attn(1, S, 0)
+                 + n_local * layer_attn(1, S, cfg.local_window))
+        if cfg.family == "encdec":
+            total += cfg.n_layers * layer_attn(1, cfg.enc_seq, 0)
+        if cfg.family == "rglru":
+            total += 2 * (cfg.n_layers // 3 + cfg.n_layers % 3) \
+                * 2.0 * B * cfg.lru_width * 8   # lru update, tiny
+        return total
+    total = (n_global * layer_attn(S, S, 0)
+             + n_local * layer_attn(S, S, cfg.local_window))
+    if cfg.family == "encdec":
+        total += cfg.enc_layers * 4.0 * B * cfg.enc_seq ** 2 * hd \
+            + cfg.n_layers * 4.0 * B * S * cfg.enc_seq * hd
+    if shape.kind == "train":
+        total *= 3.0                     # bwd ~ 2x fwd
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSuite) -> float:
+    """6ND / 2ND (MoE-active) + algorithmic attention FLOPs.
+
+    For enc-dec, encoder params see B*enc_seq tokens, not B*seq_len."""
+    counts = model_param_counts(cfg)
+    n = counts["active"]
+    attn = attention_model_flops(cfg, shape)
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        from repro.models.encdec import enc_layer_specs
+        n_enc = count_params(enc_layer_specs(cfg)) * cfg.enc_layers
+        n_dec = n - n_enc
+        if shape.kind == "decode":
+            # encoder runs once at prefill; decode touches decoder params only
+            return mult * n_dec * B + attn
+        return mult * (n_dec * B * S + n_enc * B * cfg.enc_seq) + attn
+    if shape.kind == "decode":
+        return mult * n * B + attn
+    return mult * n * B * S + attn
+

@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# Everything below may import jax.
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run (lower+compile)")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True,
+                    choices=["train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-parts", action="store_true",
+                    help="skip per-part cost composition (multi-pod pass)")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="cfg overrides key=value (int/float/str/bool)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "True"):
+            v = True
+        if v in ("false", "False"):
+            v = False
+        overrides[k] = v
+
+    from repro.launch.dryrun_lib import run_cell
+    rec = run_cell(args.arch, args.shape, args.mesh == "multi", args.out,
+                   with_parts=not args.skip_parts,
+                   cfg_overrides=overrides or None, tag=args.tag)
+    raise SystemExit(0 if rec["status"] == "ok" else 1)
+
+
+if __name__ == "__main__":
+    main()

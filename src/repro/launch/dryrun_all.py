@@ -1,0 +1,78 @@
+"""Run every assigned (arch x shape x mesh) dry-run cell as subprocesses.
+
+One subprocess per cell isolates compile-cache memory growth and lets a
+single cell failure not kill the sweep.  Results land in experiments/dryrun/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+from repro.configs import ARCHS, cells_for  # noqa: E402
+
+
+def cell_cmd(arch, shape, mesh, out, skip_parts=False):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out]
+    if skip_parts:
+        cmd.append("--skip-parts")
+    return cmd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--only", default="", help="comma-list of archs")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    archs = args.only.split(",") if args.only else list(ARCHS)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = []
+    for mesh in meshes:
+        for arch in archs:
+            for shape in cells_for(arch):
+                name = f"{arch}_{shape}_{mesh}"
+                path = Path(args.out) / f"{name}.json"
+                if args.skip_existing and path.exists():
+                    st = json.loads(path.read_text()).get("status")
+                    if st == "ok":
+                        print(f"[skip] {name} (ok)")
+                        continue
+                t0 = time.time()
+                env = dict(os.environ)
+                env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+                try:
+                    p = subprocess.run(
+                        cell_cmd(arch, shape, mesh, args.out,
+                                 skip_parts=(mesh == "multi")),
+                        timeout=args.timeout, env=env,
+                        capture_output=True, text=True)
+                    ok = p.returncode == 0
+                    if not ok:
+                        print(p.stdout[-1500:], p.stderr[-1500:])
+                except subprocess.TimeoutExpired:
+                    ok = False
+                    print(f"[timeout] {name}")
+                dt = time.time() - t0
+                print(f"[{('OK' if ok else 'FAIL')}] {name} {dt:.0f}s", flush=True)
+                results.append((name, ok, dt))
+
+    n_ok = sum(1 for _, ok, _ in results if ok)
+    print(f"\n=== dry-run sweep: {n_ok}/{len(results)} ok ===")
+    for name, ok, dt in results:
+        if not ok:
+            print(f"  FAILED: {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Dry-run cell runner (import-safe; device count is set by dryrun.py)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch import steps as steps_lib
+from repro.launch.costing import (HBM_BW, ICI_BW, PEAK_FLOPS, Part,
+                                  family_children, model_flops,
+                                  model_param_counts, parse_collective_bytes)
+from repro.launch.mesh import make_production_mesh
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:       # backend without memory analysis
+        return {"error": str(e)}
+    if m is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                              - out.get("alias_size_in_bytes", 0)
+                              + out.get("output_size_in_bytes", 0)
+                              + out.get("temp_size_in_bytes", 0))
+    return out
+
+
+def build_step(cfg, shape, mesh):
+    if shape.kind == "train":
+        return steps_lib.make_train_step(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return steps_lib.make_prefill_step(cfg, mesh, shape)
+    return steps_lib.make_decode_step(cfg, mesh, shape)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             with_parts: bool = True, cfg_overrides: dict | None = None,
+             tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "mesh_shape": dict(mesh.shape), "kind": shape.kind,
+                 "overrides": cfg_overrides or {}, "tag": tag}
+    t0 = time.time()
+    try:
+        with mesh:
+            built = build_step(cfg, shape, mesh)
+            lowered = built.jitted.lower(*built.args_abstract)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+            print(compiled.memory_analysis())       # proves it fits (or not)
+            ca = compiled.cost_analysis() or {}
+            print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+
+            rec["memory"] = _mem_stats(compiled)
+            rec["cost_analysis"] = {"flops": float(ca.get("flops", 0.0)),
+                                    "bytes": float(ca.get("bytes accessed", 0.0))}
+            rec["collectives_raw"] = parse_collective_bytes(compiled.as_text())
+
+            if with_parts:
+                root = Part("root", 1.0, None)
+                root._measured = {
+                    "flops": rec["cost_analysis"]["flops"],
+                    "bytes": rec["cost_analysis"]["bytes"],
+                    "io_bytes": 0.0,     # root residency added in roofline
+                    "coll": dict(rec["collectives_raw"]),
+                    "coll_bytes": float(sum(rec["collectives_raw"].values())),
+                }
+                root.children = family_children(cfg, shape, mesh, shape.kind)
+                corr = root.corrected()
+                rec["corrected"] = {
+                    "flops": corr["flops"], "bytes": corr["bytes"],
+                    "io_bytes": corr["io_bytes"],
+                    "coll_bytes": corr["coll_bytes"], "coll": corr["coll"],
+                }
+                rec["parts"] = [
+                    {"name": c.name, "trips": c.trips, **c.measured()}
+                    for c in _walk(root.children)
+                ]
+        # roofline terms (per-device numbers; single-pod table is canonical)
+        n_chips = 1
+        for v in mesh.shape.values():
+            n_chips *= v
+        src = rec.get("corrected", rec["cost_analysis"])
+        coll_b = src.get("coll_bytes", sum(rec["collectives_raw"].values()))
+        # fused memory bound: per-part arg+result traffic (what Pallas-style
+        # fusion achieves) + the step's own argument/output residency
+        root_io = (rec["memory"].get("argument_size_in_bytes", 0)
+                   + rec["memory"].get("output_size_in_bytes", 0)
+                   - 2 * rec["memory"].get("alias_size_in_bytes", 0))
+        mem_fused = src.get("io_bytes", 0.0) + max(root_io, 0)
+        rec["roofline"] = {
+            "n_chips": n_chips,
+            "compute_s": src["flops"] / PEAK_FLOPS,
+            "memory_s": src["bytes"] / HBM_BW,           # unfused upper bound
+            "memory_fused_s": mem_fused / HBM_BW,        # fused lower bound
+            "collective_s": coll_b / ICI_BW,
+            "model_flops_global": model_flops(cfg, shape),
+            "params": model_param_counts(cfg),
+        }
+        r = rec["roofline"]
+        r["dominant"] = max(("compute_s", "memory_fused_s", "collective_s"),
+                            key=lambda k: r[k]).replace("memory_fused_s",
+                                                        "memory_s")
+        hlo_global = src["flops"] * n_chips
+        r["useful_flops_ratio"] = (r["model_flops_global"] / hlo_global
+                                   if hlo_global else 0.0)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = out / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    print(f"[dryrun] {arch} {shape_name} {mesh_name} -> {rec['status']} "
+          f"({rec['total_s']}s) {path}")
+    return rec
+
+
+def _walk(parts):
+    for p in parts:
+        yield p
+        yield from _walk(p.children)

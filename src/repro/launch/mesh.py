@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state.  The dry-run launcher force-hosts 512
+placeholder devices *before* any jax import; everything else sees the real
+device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU training)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,227 @@
+"""Step builders: jit-able train / prefill / decode steps with shardings.
+
+Everything here works on abstract values (ShapeDtypeStruct) so the dry-run
+never allocates; `repro.launch.train` reuses the same builders with real
+arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSuite
+from repro.models import get_model
+from repro.models.module import abstract, tree_shardings
+from repro.optim import clip_by_global_norm, make_optimizer, microbatch_grads
+from repro.sharding import batch_axes, cache_shardings, make_ctx, make_rules
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+def batch_abstract(cfg: ModelConfig, shape: ShapeSuite) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((B, S), jnp.int32),
+             "labels": sds((B, S), jnp.int32)}
+    if cfg.n_patches > 0:
+        batch["patch_embeds"] = sds((B, cfg.n_patches, 4096), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSuite, mesh: Mesh,
+                    pure_dp: bool = False) -> dict:
+    ba = batch_axes(mesh) + (("model",) if pure_dp else ())
+    B = shape.global_batch
+    # replicate batches too small to split across all batch axes
+    def spec(x):
+        axes = ba
+        while axes and B % _size(mesh, axes):
+            axes = axes[:-1]
+        rest = (None,) * (len(x.shape) - 1)
+        return NamedSharding(mesh, P(axes if axes else None, *rest))
+    return jax.tree.map(spec, batch_abstract(cfg, shape))
+
+
+def _size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSuite, mesh: Mesh):
+    """ShapeDtypeStruct stand-ins + NamedShardings for every model input."""
+    if shape.kind == "train":
+        return batch_abstract(cfg, shape), batch_shardings(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        b = batch_abstract(cfg, shape)
+        s = batch_shardings(cfg, shape, mesh)
+        b.pop("labels"), s.pop("labels")
+        return b, s
+    # decode: one token + positions + cache
+    B, S = shape.global_batch, shape.seq_len
+    api = get_model(cfg)
+    cache_abs = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    ba = batch_axes(mesh)
+    bsh = batch_shardings(cfg, shape, mesh)["tokens"].spec[0]
+    args = {"token": tok, "pos": pos, "cache": cache_abs}
+    shards = {"token": NamedSharding(mesh, P(bsh, None)),
+              "pos": NamedSharding(mesh, P(bsh)),
+              "cache": cache_shardings(cache_abs, cfg, mesh)}
+    return args, shards
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Callable                 # python callable (pre-jit)
+    jitted: Any                  # jax.jit(...) with shardings
+    args_abstract: tuple
+    donate: tuple = ()
+
+
+def default_optimizer(cfg: ModelConfig):
+    return make_optimizer(cfg.optimizer, lr=3e-4)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSuite,
+                    opt=None) -> BuiltStep:
+    api = get_model(cfg)
+    opt = opt or default_optimizer(cfg)
+    pure_dp = (cfg.train_pure_dp
+               and shape.global_batch % _size(mesh, batch_axes(mesh) + ("model",)) == 0)
+    rules = make_rules(cfg, mesh, pure_dp=pure_dp)
+    from repro.models.module import ShardCtx
+    ctx = ShardCtx(mesh, rules)
+
+    specs = api.specs(cfg)
+    params_abs = abstract(specs)
+    params_sh = tree_shardings(specs, rules, mesh)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    opt_sh = mirror_opt_shardings(opt_abs, params_abs, params_sh, mesh)
+
+    def loss(params, batch):
+        return api.loss_fn(cfg, params, batch, ctx)
+
+    def train_step(params, opt_state, batch, step):
+        lv, grads = microbatch_grads(loss, params, batch, cfg.n_microbatches)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        metrics = {"loss": lv.astype(jnp.float32), "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    b_abs = batch_abstract(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, mesh, pure_dp=pure_dp)
+    rep = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(params_sh, opt_sh, b_sh, rep),
+        out_shardings=(params_sh, opt_sh, {"loss": rep, "grad_norm": rep}),
+        donate_argnums=(0, 1),
+    )
+    args = (params_abs, opt_abs, b_abs, jax.ShapeDtypeStruct((), jnp.int32))
+    return BuiltStep(train_step, jitted, args, donate=(0, 1))
+
+
+def mirror_opt_shardings(opt_abs, params_abs, params_sh, mesh: Mesh):
+    """Opt state sharded leaf-for-leaf like params where shapes match
+    (adamw/lion/sgdm); factored leaves (adafactor vr/vc) replicate."""
+    p_struct = jax.tree.structure(params_abs)
+    rep = NamedSharding(mesh, P())
+
+    def sub(sub_abs):
+        try:
+            if jax.tree.structure(sub_abs) == p_struct:
+                ok = all(a.shape == p.shape for a, p in zip(
+                    jax.tree.leaves(sub_abs), jax.tree.leaves(params_abs)))
+                if ok:
+                    return jax.tree.unflatten(p_struct,
+                                              jax.tree.leaves(params_sh))
+        except Exception:
+            pass
+        return jax.tree.map(lambda _: rep, sub_abs)
+
+    return {k: sub(v) for k, v in opt_abs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def _prefill_callable(cfg: ModelConfig, api, ctx):
+    if cfg.family == "decoder":
+        def f(params, batch):
+            return api.prefill(cfg, params, batch["tokens"],
+                               batch.get("patch_embeds"), ctx)
+    elif cfg.family == "encdec":
+        def f(params, batch):
+            return api.prefill(cfg, params, batch["tokens"], batch["frames"], ctx)
+    else:
+        def f(params, batch):
+            return api.prefill(cfg, params, batch["tokens"], ctx)
+    return f
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSuite) -> BuiltStep:
+    api = get_model(cfg)
+    ctx = make_ctx(cfg, mesh)
+    rules = make_rules(cfg, mesh)
+    # inference: no remat needed, no FSDP gather churn (params stay sharded)
+    icfg = cfg.replace(remat="none")
+    api_i = get_model(icfg)
+
+    params_abs = abstract(api_i.specs(icfg))
+    params_sh = tree_shardings(api_i.specs(icfg), rules, mesh)
+    b_abs, b_sh = input_specs(icfg, shape, mesh)
+
+    fn = _prefill_callable(icfg, api_i, ctx)
+    B, S = shape.global_batch, shape.seq_len
+    cache_abs = jax.eval_shape(lambda: api_i.init_cache(icfg, B, S))
+    cache_sh = cache_shardings(cache_abs, icfg, mesh)
+    ba = b_sh["tokens"].spec[0]
+    logits_sh = NamedSharding(mesh, P(ba, "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None))
+
+    jitted = jax.jit(fn, in_shardings=(params_sh, b_sh),
+                     out_shardings=(logits_sh, cache_sh))
+    return BuiltStep(fn, jitted, (params_abs, b_abs))
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSuite) -> BuiltStep:
+    api = get_model(cfg)
+    ctx = make_ctx(cfg, mesh)
+    rules = make_rules(cfg, mesh)
+    icfg = cfg.replace(remat="none")
+
+    params_abs = abstract(api.specs(icfg))
+    params_sh = tree_shardings(api.specs(icfg), rules, mesh)
+    args, shards = input_specs(icfg, shape, mesh)
+
+    def fn(params, token, cache, pos):
+        return api.decode_step(icfg, params, token, cache, pos, ctx)
+
+    ba = shards["token"].spec[0]
+    logits_sh = NamedSharding(mesh, P(ba, "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None))
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, shards["token"], shards["cache"], shards["pos"]),
+        out_shardings=(logits_sh, shards["cache"]),
+        donate_argnums=(2,),
+    )
+    return BuiltStep(fn, jitted,
+                     (params_abs, args["token"], args["cache"], args["pos"]))

@@ -1,0 +1,45 @@
+"""Model zoo: unified API over the four families.
+
+``get_model(cfg)`` returns a :class:`ModelAPI` with:
+  specs(cfg)                      -> ParamSpec tree
+  loss_fn(cfg, params, batch)    -> scalar training loss
+  prefill(cfg, params, ...)      -> (logits, cache)
+  decode_step(cfg, params, token, cache, pos) -> (logits, cache)
+  init_cache(cfg, B, S)          -> cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    family: str
+    specs: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "decoder":
+        from repro.models import transformer as m
+        return ModelAPI("decoder", m.decoder_specs, m.loss_fn, m.prefill,
+                        m.decode_step, m.init_cache)
+    if cfg.family == "encdec":
+        from repro.models import encdec as m
+        return ModelAPI("encdec", m.encdec_specs, m.loss_fn, m.prefill,
+                        m.decode_step, m.init_cache)
+    if cfg.family == "rglru":
+        from repro.models import rglru as m
+        return ModelAPI("rglru", m.rglru_model_specs, m.loss_fn, m.prefill,
+                        m.decode_step, m.init_cache)
+    if cfg.family == "rwkv6":
+        from repro.models import rwkv as m
+        return ModelAPI("rwkv6", m.rwkv_model_specs, m.loss_fn, m.prefill,
+                        m.decode_step, m.init_cache)
+    raise ValueError(f"unknown family {cfg.family!r}")

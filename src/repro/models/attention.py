@@ -1,0 +1,300 @@
+"""GQA attention: chunked-flash (training/prefill) + cached decode.
+
+The chunked implementation is the memory-safe XLA path (online softmax over
+KV blocks, with *actual* causal/local block skipping via `lax.cond` so skipped
+blocks cost nothing at runtime).  `repro.kernels.flash` provides the Pallas
+TPU kernel with the same blocking; `ref.py` cross-checks both.
+
+`flash_kv_block` / `flash_q_chunk` are module-level so the dry-run cost model
+can lower them standalone (loop bodies are otherwise counted once by XLA cost
+analysis — see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rmsnorm, softcap
+from repro.models.module import NULL_CTX, ParamSpec, ShardCtx, fan_in_normal
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, dh, pd = cfg.d_model, cfg.head_dim, cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, cfg.n_heads * dh), pd, fan_in_normal(), ("embed_tp", "q_out")),
+        "wk": ParamSpec((d, cfg.n_kv_heads * dh), pd, fan_in_normal(), ("embed_tp", "kv_out")),
+        "wv": ParamSpec((d, cfg.n_kv_heads * dh), pd, fan_in_normal(), ("embed_tp", "kv_out")),
+        "wo": ParamSpec((cfg.n_heads * dh, d), pd, fan_in_normal(), ("q_out", "embed_tp")),
+    }
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = ParamSpec((dh,), pd, lambda k, s, t: jnp.ones(s, t), ("head_dim",))
+        specs["k_norm"] = ParamSpec((dh,), pd, lambda k, s, t: jnp.ones(s, t), ("head_dim",))
+    return specs
+
+
+def _scale(cfg: ModelConfig) -> float:
+    return cfg.attn_logits_scale or cfg.head_dim ** -0.5
+
+
+def project_q(cfg: ModelConfig, p: dict, x: jax.Array, positions, *,
+              rope: bool = True) -> jax.Array:
+    """-> [B, S, H, Dh]"""
+    dt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    q = q.reshape(*q.shape[:-1], cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if rope and cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(cfg: ModelConfig, p: dict, x: jax.Array, positions, *,
+               rope: bool = True) -> tuple[jax.Array, jax.Array]:
+    """-> k, v: [B, Skv, KV, Dh]"""
+    dt = cfg.compute_dtype
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt))
+    k = k.reshape(*k.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(*v.shape[:-1], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm and "k_norm" in p:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope and cfg.pos_emb == "rope":
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (XLA path)
+# ---------------------------------------------------------------------------
+
+def _fit_chunk(seq: int, target: int) -> int:
+    """Largest divisor of `seq` that is <= target (trace-time only)."""
+    c = min(target, seq)
+    while seq % c:
+        c -= 1
+    return c
+
+
+class _Acc(NamedTuple):
+    m: jax.Array     # [B, KV, G, Cq]      running max (f32)
+    l: jax.Array     # [B, KV, G, Cq]      running denom (f32)
+    o: jax.Array     # [B, KV, G, Cq, Dh]  running numerator (f32)
+
+
+def _block_scores(q, k, scale, cap):
+    # q: [B, Cq, KV, G, Dh]  k: [B, Ck, KV, Dh] -> [B, KV, G, Cq, Ck] f32
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32)
+    return softcap(s * scale, cap)
+
+
+def flash_kv_block(q, k_blk, v_blk, acc: _Acc, *, q_pos, kv_pos, causal,
+                   window, scale, cap, masked: bool = True) -> _Acc:
+    """One (q-chunk, kv-chunk) flash step. All compute in f32.
+
+    masked=False is the interior fast path: the caller proved every (q, kv)
+    pair in this block is valid, so the iota/compare/select chain is elided
+    (~25% of the per-element flops at 32k — see EXPERIMENTS.md §Perf/qwen3).
+    """
+    s = _block_scores(q, k_blk, scale, cap)                       # [B,KV,G,Cq,Ck]
+    if masked:
+        mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(acc.m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(acc.m - m_new)
+    l_new = acc.l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                    preferred_element_type=jnp.float32)
+    o_new = acc.o * corr[..., None] + pv
+    return _Acc(m_new, l_new, o_new)
+
+
+def flash_q_chunk(cfg: ModelConfig, q, k, v, q_start, *, causal, window):
+    """Flash for one query chunk against the full [B,Skv,KV,Dh] k/v.
+
+    Scans over KV chunks; fully-masked blocks are skipped with lax.cond
+    (runtime skip — this realises causal/local FLOP savings in XLA too).
+    """
+    B, Cq, H, Dh = q.shape
+    KV = cfg.n_kv_heads
+    G = H // KV
+    Ck = _fit_chunk(k.shape[1], cfg.attn_kv_chunk)
+    n_kv = k.shape[1] // Ck
+    qg = q.reshape(B, Cq, KV, G, Dh)
+    q_pos = q_start + jnp.arange(Cq)
+    scale, cap = _scale(cfg), cfg.attn_softcap
+
+    acc0 = _Acc(
+        m=jnp.full((B, KV, G, Cq), NEG_INF, jnp.float32),
+        l=jnp.zeros((B, KV, G, Cq), jnp.float32),
+        o=jnp.zeros((B, KV, G, Cq, Dh), jnp.float32),
+    )
+
+    def body(acc, j):
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * Ck, Ck, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * Ck, Ck, axis=1)
+        kv_pos = j * Ck + jnp.arange(Ck)
+        needed = jnp.array(True)
+        interior = jnp.array(True)     # every (q, kv) pair valid -> no mask
+        if causal:   # block fully above diagonal -> skip
+            needed &= (j * Ck) <= (q_start + Cq - 1)
+            interior &= ((j + 1) * Ck - 1) <= q_start
+        if window > 0:  # block fully left of the window -> skip
+            needed &= ((j + 1) * Ck - 1) >= (q_start - window + 1)
+            interior &= ((q_start + Cq - 1) - j * Ck) < window
+        if not causal and window == 0:
+            interior = jnp.array(True) & (kv_pos[-1] * 0 == 0)
+
+        def run(masked):
+            def f(a):
+                return flash_kv_block(qg, k_blk, v_blk, a, q_pos=q_pos,
+                                      kv_pos=kv_pos, causal=causal,
+                                      window=window, scale=scale, cap=cap,
+                                      masked=masked)
+            return f
+
+        acc = jax.lax.cond(
+            needed,
+            lambda a: jax.lax.cond(interior, run(False), run(True), a),
+            lambda a: a,
+            acc)
+        return acc, None
+
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(n_kv))
+    out = acc.o / jnp.maximum(acc.l, 1e-30)[..., None]
+    return out.reshape(B, KV * G, Cq, Dh).swapaxes(1, 2).astype(cfg.compute_dtype)
+
+
+def flash_attention(cfg: ModelConfig, q, k, v, *, causal=True, window=0,
+                    ctx: ShardCtx = NULL_CTX):
+    """q: [B,S,H,Dh], k/v: [B,Skv,KV,Dh] -> [B,S,H,Dh]."""
+    B, S, H, Dh = q.shape
+    Cq = _fit_chunk(S, cfg.attn_q_chunk)
+    n_q = S // Cq
+    q_chunk_fn = functools.partial(flash_q_chunk, cfg, causal=causal, window=window)
+    if cfg.remat != "none":
+        q_chunk_fn = jax.checkpoint(q_chunk_fn, static_argnums=())
+
+    if n_q == 1:
+        return q_chunk_fn(q, k, v, jnp.int32(0))
+
+    def body(_, i):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, i * Cq, Cq, axis=1)
+        return None, q_chunk_fn(q_blk, k, v, i * Cq)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_q))   # [n_q, B, Cq, H, Dh]
+    return outs.swapaxes(0, 1).reshape(B, S, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode attention (one new token)
+# ---------------------------------------------------------------------------
+
+def decode_attention(cfg: ModelConfig, q, k_cache, v_cache, cur_pos, *,
+                     window=0, slot_pos=None):
+    """q: [B,1,H,Dh]; caches: [B,Smax,KV,Dh]; cur_pos: [B] absolute positions.
+
+    `slot_pos` [B,Smax] gives the absolute position stored in each cache slot
+    (ring buffers for local layers); defaults to arange (linear cache).
+    """
+    B, _, H, Dh = q.shape
+    KV, G = cfg.n_kv_heads, H // cfg.n_kv_heads
+    Smax = k_cache.shape[1]
+    if slot_pos is None:
+        slot_pos = jnp.broadcast_to(jnp.arange(Smax), (B, Smax))
+    qg = q.reshape(B, 1, KV, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * _scale(cfg)
+    s = softcap(s, cfg.attn_softcap)
+    # slot_pos < 0 marks ring-buffer slots not yet written (pos - k*Smax < 0)
+    valid = (slot_pos <= cur_pos[:, None]) & (slot_pos >= 0)  # [B, Smax]
+    if window > 0:
+        valid &= (cur_pos[:, None] - slot_pos) < window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, KV * G, 1, Dh).swapaxes(1, 2).astype(cfg.compute_dtype)
+
+
+def out_proj(cfg: ModelConfig, p: dict, attn_out: jax.Array) -> jax.Array:
+    B, S = attn_out.shape[:2]
+    flat = attn_out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", flat, p["wo"].astype(cfg.compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Full blocks
+# ---------------------------------------------------------------------------
+
+def self_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions, *,
+                   causal=True, window=0, ctx: ShardCtx = NULL_CTX):
+    q = project_q(cfg, p, x, positions)
+    k, v = project_kv(cfg, p, x, positions)
+    o = flash_attention(cfg, q, k, v, causal=causal, window=window, ctx=ctx)
+    return out_proj(cfg, p, o)
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x: jax.Array, enc: jax.Array,
+                    ctx: ShardCtx = NULL_CTX):
+    """Decoder cross-attention (whisper): no rope, full (non-causal) mask."""
+    pos_q = jnp.arange(x.shape[1])
+    q = project_q(cfg, p, x, pos_q, rope=False)
+    k, v = project_kv(cfg, p, enc, jnp.arange(enc.shape[1]), rope=False)
+    o = flash_attention(cfg, q, k, v, causal=False, window=0, ctx=ctx)
+    return out_proj(cfg, p, o)
+
+
+def self_attention_decode(cfg: ModelConfig, p: dict, x, cache: dict, pos, *,
+                          window=0):
+    """x: [B,1,d]; cache: {'k','v': [B,Smax,KV,Dh]}  pos: [B] int32.
+
+    Returns (out [B,1,d], new_cache).  Local layers use a ring buffer of size
+    `window` (slot = pos % Smax).
+    """
+    B = x.shape[0]
+    Smax = cache["k"].shape[1]
+    slot = pos % Smax if window > 0 else jnp.minimum(pos, Smax - 1)
+    k_new, v_new = project_kv(cfg, p, x, pos[:, None])
+    barange = jnp.arange(B)
+    k_cache = cache["k"].at[barange, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[barange, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    if window > 0:
+        # ring buffer: the most recent write to slot i happened at the largest
+        # p' <= pos with p' % Smax == i, i.e. slot_pos = pos - ((pos - i) mod Smax)
+        idx = jnp.arange(Smax)
+        slot_pos = pos[:, None] - ((pos[:, None] - idx[None, :]) % Smax)
+    else:
+        slot_pos = None
+    q = project_q(cfg, p, x, pos[:, None])
+    o = decode_attention(cfg, q, k_cache, v_cache, pos, window=window,
+                         slot_pos=slot_pos)
+    return out_proj(cfg, p, o), {"k": k_cache, "v": v_cache}
+
+
+def cross_attention_decode(cfg: ModelConfig, p: dict, x, enc_kv: dict):
+    """Cross-attn at decode: enc K/V precomputed at prefill."""
+    B = x.shape[0]
+    q = project_q(cfg, p, x, jnp.zeros((B, 1), jnp.int32), rope=False)
+    o = decode_attention(cfg, q, enc_kv["k"], enc_kv["v"],
+                         jnp.full((B,), enc_kv["k"].shape[1] - 1, jnp.int32))
+    return out_proj(cfg, p, o)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, window: int = 0) -> dict:
+    smax = min(seq, window) if window > 0 else seq
+    shape = (batch, smax, cfg.n_kv_heads, cfg.head_dim)
+    dt = jnp.bfloat16 if cfg.compute_dtype == jnp.bfloat16 else cfg.compute_dtype
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

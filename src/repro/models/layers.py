@@ -1,0 +1,129 @@
+"""Shared layers: norms, rotary embeddings, token embedding, MLPs."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import (NULL_CTX, ParamSpec, ShardCtx, fan_in_normal,
+                                 normal, ones_init, zeros_init)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(dim: int, dtype) -> ParamSpec:
+    return ParamSpec((dim,), dtype, ones_init(), ("embed",))
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+            zero_centered: bool = False) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if zero_centered else scale.astype(jnp.float32)
+    return (y * s).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary / sinusoidal position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                   # [..., S, 1, D/2]
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(seq: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-math.log(10_000.0) * jnp.arange(0, dim, 2, jnp.float32) / dim)
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "tok": ParamSpec((cfg.vocab_size, cfg.d_model), cfg.param_dtype,
+                         normal(1.0 / math.sqrt(cfg.d_model)), ("vocab", "embed")),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((cfg.d_model, cfg.vocab_size), cfg.param_dtype,
+                                  fan_in_normal(), ("embed_tp", "vocab"))
+    return specs
+
+
+def embed_tokens(cfg: ModelConfig, emb: dict, tokens: jax.Array,
+                 ctx: ShardCtx = NULL_CTX) -> jax.Array:
+    x = jnp.take(emb["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return ctx.cons(x, ("batch", "seq", None))
+
+
+def lm_logits(cfg: ModelConfig, emb: dict, x: jax.Array,
+              ctx: ShardCtx = NULL_CTX) -> jax.Array:
+    table = emb["tok"].T if cfg.tie_embeddings else emb["head"]
+    logits = jnp.einsum("...d,dv->...v", x, table.astype(cfg.compute_dtype),
+                        preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    return ctx.cons(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU / GELU / ReLU^2)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    gated = cfg.mlp_act in ("swiglu", "geglu")
+    d, f, pd = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    specs = {
+        "wi": ParamSpec((d, f), pd, fan_in_normal(), ("embed_tp", "mlp")),
+        "wo": ParamSpec((f, d), pd, fan_in_normal(), ("mlp", "embed_tp")),
+    }
+    if gated:
+        specs["wg"] = ParamSpec((d, f), pd, fan_in_normal(), ("embed_tp", "mlp"))
+    return specs
+
+
+def _act(cfg: ModelConfig, h: jax.Array, g: jax.Array | None) -> jax.Array:
+    if cfg.mlp_act == "swiglu":
+        return jax.nn.silu(g) * h
+    if cfg.mlp_act == "geglu":
+        return jax.nn.gelu(g, approximate=True) * h
+    if cfg.mlp_act == "gelu":
+        return jax.nn.gelu(h, approximate=True)
+    if cfg.mlp_act == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    raise ValueError(cfg.mlp_act)
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array, ctx: ShardCtx = NULL_CTX) -> jax.Array:
+    dt = cfg.compute_dtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt)) if "wg" in p else None
+    h = ctx.cons(_act(cfg, h, g), ("batch", "seq", "mlp"))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))

@@ -1,0 +1,224 @@
+"""Minimal functional parameter-tree module system.
+
+Design: a model is described by a tree of :class:`ParamSpec` leaves (shape,
+dtype, initializer, *logical* axis names).  From that single description we
+derive
+
+  * concrete parameters           (``materialize``)
+  * abstract parameters           (``abstract`` -> ShapeDtypeStruct, used by
+                                   the dry-run so nothing is ever allocated)
+  * NamedShardings for any mesh   (``tree_shardings`` via logical-axis rules)
+
+No flax / haiku dependency — everything is a plain pytree of jnp arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal(stddev: float = 0.02) -> Callable:
+    def init(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return init
+
+
+def fan_in_normal(axis: int = -2) -> Callable:
+    """LeCun-style init: stddev = 1/sqrt(fan_in). fan_in axis defaults to -2."""
+    def init(key, shape, dtype):
+        fan_in = shape[axis] if len(shape) >= 2 else shape[0]
+        std = 1.0 / math.sqrt(max(1, fan_in))
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return init
+
+
+def zeros_init() -> Callable:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Callable:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def constant_init(value: float) -> Callable:
+    return lambda key, shape, dtype: jnp.full(shape, value, dtype)
+
+
+def uniform_init(lo: float, hi: float) -> Callable:
+    def init(key, shape, dtype):
+        return jax.random.uniform(key, shape, jnp.float32, lo, hi).astype(dtype)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+    shape: tuple
+    dtype: Any = jnp.bfloat16
+    init: Callable = normal(0.02)
+    axes: tuple = ()          # logical axis names, len == ndim (None = replicated)
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_map(fn: Callable, tree: Tree) -> Tree:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Materialisation
+# ---------------------------------------------------------------------------
+
+def materialize(tree: Tree, key: jax.Array) -> Tree:
+    """Instantiate every ParamSpec with a unique fold of `key`."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if is_spec(leaf):
+            out.append(leaf.init(jax.random.fold_in(key, i), leaf.shape, leaf.dtype))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract(tree: Tree) -> Tree:
+    """ShapeDtypeStruct stand-ins — used by the dry-run (no allocation)."""
+    return spec_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def stack_specs(tree: Tree, n: int, axis_name: str = "layers") -> Tree:
+    """Prepend a stacking dim (for scan-over-layers parameter stacking)."""
+    def stack(s: ParamSpec) -> ParamSpec:
+        axes = (axis_name,) + (tuple(s.axes) if s.axes else (None,) * len(s.shape))
+        def init(key, shape, dtype, _inner=s.init, _n=n):
+            ks = jax.random.split(key, _n)
+            return jax.vmap(lambda k: _inner(k, shape[1:], dtype))(ks)
+        return ParamSpec((n,) + tuple(s.shape), s.dtype, init, axes)
+    return spec_map(stack, tree)
+
+
+def count_params(tree: Tree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_spec):
+        total += leaf.size if is_spec(leaf) else int(np.prod(jnp.shape(leaf)))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Logical axis rules -> shardings
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to mesh axis names (or tuples thereof)."""
+    rules: Mapping[str, Any]
+
+    def mesh_axes(self, logical: str | None):
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+
+def _axis_size(mesh: Mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def pspec_for(spec_axes: Sequence, shape: Sequence[int], rules: ShardingRules,
+              mesh: Mesh) -> P:
+    """PartitionSpec with divisibility fallback.
+
+    If a dim is not divisible by the product of its assigned mesh axes the
+    assignment is dropped (replicated) — this is what lets one rule-set serve
+    archs with e.g. 8 query heads on a 16-way model axis.  Also guarantees a
+    mesh axis is used at most once per tensor (GSPMD requirement).
+    """
+    used: set = set()
+    entries = []
+    axes = tuple(spec_axes) if spec_axes else (None,) * len(shape)
+    for dim, logical in zip(shape, axes):
+        mesh_axes = rules.mesh_axes(logical)
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        # drop axes already used by another dim of this tensor
+        mesh_axes = tuple(a for a in mesh_axes if a not in used and a in mesh.shape)
+        while mesh_axes and dim % _axis_size(mesh, mesh_axes) != 0:
+            mesh_axes = mesh_axes[:-1]     # shed trailing axes until divisible
+        if not mesh_axes:
+            entries.append(None)
+        else:
+            used.update(mesh_axes)
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(tree: Tree, rules: ShardingRules, mesh: Mesh) -> Tree:
+    """NamedSharding tree matching a ParamSpec tree."""
+    return spec_map(
+        lambda s: NamedSharding(mesh, pspec_for(s.axes, s.shape, rules, mesh)),
+        tree)
+
+
+def tree_pspecs(tree: Tree, rules: ShardingRules, mesh: Mesh) -> Tree:
+    return spec_map(lambda s: pspec_for(s.axes, s.shape, rules, mesh), tree)
+
+
+def logical_constraint(x: jax.Array, axes: Sequence, rules: ShardingRules,
+                       mesh: Mesh | None) -> jax.Array:
+    """with_sharding_constraint via logical axes (no-op without a mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, pspec_for(axes, x.shape, rules, mesh)))
+
+
+# A context-free handle passed down the model call stack.
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh | None
+    rules: ShardingRules
+
+    def cons(self, x: jax.Array, axes: Sequence) -> jax.Array:
+        return logical_constraint(x, axes, self.rules, self.mesh)
+
+
+NULL_CTX = ShardCtx(None, ShardingRules({}))

@@ -1,0 +1,326 @@
+"""Top-k Mixture-of-Experts with sort-based capacity dispatch (EP-ready).
+
+Dispatch is the GShard/MegaBlocks-lineage pattern adapted to static shapes:
+
+  router -> top-k -> flatten (token, slot) pairs -> stable-sort by expert
+  -> position-in-expert via searchsorted -> capacity-bounded scatter into an
+  [E, C, d] buffer -> per-expert FFN einsum (experts sharded over the `model`
+  mesh axis; GSPMD inserts the all-to-all) -> gather + weighted combine.
+
+No [T, E, C] one-hot dispatch tensors are ever built (T can be ~1M tokens for
+kimi-k2), so memory stays O(T·k + E·C·d).  ``moe_dense`` is the tiny-config
+oracle used by tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act
+from repro.models.module import NULL_CTX, ParamSpec, ShardCtx, fan_in_normal
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, E, pd = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.param_dtype
+    gated = cfg.mlp_act in ("swiglu", "geglu")
+    specs = {
+        "router": ParamSpec((d, E), jnp.float32, fan_in_normal(), ("embed", "experts_r")),
+        "wi": ParamSpec((E, d, f), pd, fan_in_normal(), ("experts", "embed_tp", "mlp_e")),
+        "wo": ParamSpec((E, f, d), pd, fan_in_normal(), ("experts", "mlp_e", "embed_tp")),
+    }
+    if gated:
+        specs["wg"] = ParamSpec((E, d, f), pd, fan_in_normal(),
+                                ("experts", "embed_tp", "mlp_e"))
+    return specs
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8 (TPU sublane)
+
+
+def router_probs(cfg: ModelConfig, p: dict, xt: jax.Array):
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    return jax.nn.softmax(logits, axis=-1)          # [T, E] f32
+
+
+def load_balance_loss(probs: jax.Array, expert_idx: jax.Array, n_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    f = counts / (T * expert_idx.shape[-1])
+    pbar = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * pbar)
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, ebuf: jax.Array) -> jax.Array:
+    """ebuf: [E, C, d] -> [E, C, d]"""
+    dt = cfg.compute_dtype
+    h = jnp.einsum("ecd,edf->ecf", ebuf, p["wi"].astype(dt))
+    if "wg" in p:
+        g = jnp.einsum("ecd,edf->ecf", ebuf, p["wg"].astype(dt))
+    else:
+        g = None
+    h = _act(cfg, h, g)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+
+
+def moe_block(cfg: ModelConfig, p: dict, x: jax.Array,
+              ctx: ShardCtx = NULL_CTX):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    if cfg.moe_impl == "blockwise":
+        return moe_block_blockwise(cfg, p, x, ctx)
+    if cfg.moe_impl == "shardmap":
+        B_, S_, _ = x.shape
+        D_ = 1
+        if ctx.mesh is not None and not ctx.mesh.empty:
+            for a in ("pod", "data"):
+                D_ *= ctx.mesh.shape.get(a, 1)
+        # explicit EP pays a full expert-weight gather per layer; below ~1
+        # token per expert per shard (decode) the GSPMD dispatch is cheaper
+        if (ctx.mesh is None or ctx.mesh.empty
+                or "model" not in ctx.mesh.shape
+                or (B_ * S_) // D_ < cfg.n_experts):
+            pass          # fall through to 'dispatch'
+        else:
+            return moe_block_shardmap(cfg, p, x, ctx)
+    B, S, d = x.shape
+    T, k, E = B * S, cfg.top_k, cfg.n_experts
+    xt = x.reshape(T, d)
+
+    probs = router_probs(cfg, p, xt)
+    gate, expert_idx = jax.lax.top_k(probs, k)            # [T, k]
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)).astype(cfg.compute_dtype)
+    aux = load_balance_loss(probs, expert_idx, E)
+
+    if cfg.moe_impl == "dense":
+        return _moe_dense_combine(cfg, p, x, gate, expert_idx), aux
+    # 'dispatch', or 'shardmap' without a mesh (oracle tests / CPU smoke)
+    assert cfg.moe_impl in ("dispatch", "shardmap"), cfg.moe_impl
+
+    C = capacity(cfg, T)
+    xt = ctx.cons(xt, ("batch", None))
+    e_flat = expert_idx.reshape(T * k)
+    tok_flat = jnp.arange(T * k) // k
+    order = jnp.argsort(e_flat, stable=True)
+    es = e_flat[order]                                    # sorted expert ids
+    starts = jnp.searchsorted(es, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * k) - starts[es]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, es * C + pos_in_e, E * C)      # sentinel slot E*C
+
+    src = jnp.take(xt, tok_flat[order], axis=0)           # [T*k, d]
+    src = ctx.cons(src, ("batch", None))
+    # dropped pairs carry the OOB sentinel slot E*C -> mode='drop' discards
+    buf = jnp.zeros((E * C, d), cfg.compute_dtype)
+    buf = ctx.cons(buf, ("experts_cap_flat", None))
+    buf = buf.at[slot].set(src, mode="drop", indices_are_sorted=True,
+                           unique_indices=True)
+    ebuf_axes = ("experts", None, "embed_moe") if cfg.moe_dshard \
+        else ("experts", "expert_cap", None)
+    ebuf = ctx.cons(buf.reshape(E, C, d), ebuf_axes)
+
+    eout = _expert_ffn(cfg, p, ebuf)
+    eout = ctx.cons(eout, ebuf_axes)
+
+    flat_out = ctx.cons(eout.reshape(E * C, d), ("experts_cap_flat", None))
+    y_pairs = jnp.take(flat_out, slot, axis=0, mode="fill", fill_value=0)
+    y_pairs = ctx.cons(y_pairs, ("batch", None))
+    y_pairs = y_pairs * gate.reshape(T * k)[order][:, None]
+    yt = ctx.cons(jnp.zeros((T, d), cfg.compute_dtype), ("batch", None))
+    yt = yt.at[tok_flat[order]].add(y_pairs)
+    yt = ctx.cons(yt, ("batch", None))
+    return yt.reshape(B, S, d), aux
+
+
+def moe_block_blockwise(cfg: ModelConfig, p: dict, x: jax.Array,
+                        ctx: ShardCtx = NULL_CTX):
+    """Data-block-local dispatch (perf variant, see EXPERIMENTS.md §Perf).
+
+    Tokens are reshaped to [D, T/D, d] with D = the data-parallel degree so
+    that the leading dim is exactly the `data` sharding.  Sort/scatter then
+    happen *within* each block (leading sharded batch dim -> no cross-data
+    communication), and the combine is a scatter-add of the model-sharded
+    expert outputs into a model-replicated [D, T/D, d] buffer (partial sums
+    + one all-reduce) instead of an all-gather of the whole expert buffer.
+
+    Per-block capacity C_loc = capacity(T/D) (standard EP behaviour: drops
+    under inter-block imbalance are possible; the oracle test uses ample
+    capacity_factor)."""
+    B, S, d = x.shape
+    T, k, E = B * S, cfg.top_k, cfg.n_experts
+    D = 1
+    if ctx.mesh is not None and not ctx.mesh.empty:
+        for a in ("pod", "data"):
+            D *= ctx.mesh.shape.get(a, 1)
+    if T % D or (T // D) % 1:
+        D = 1
+    xt = x.reshape(T, d)
+    probs = router_probs(cfg, p, xt)
+    gate, expert_idx = jax.lax.top_k(probs, k)                    # [T, k]
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)).astype(cfg.compute_dtype)
+    aux = load_balance_loss(probs, expert_idx, E)
+
+    Tl = T // D
+    C = capacity(cfg, Tl)
+    xs = ctx.cons(xt.reshape(D, Tl, d), ("data_blk", None, None))
+    e_flat = expert_idx.reshape(D, Tl * k)
+    gate_b = gate.reshape(D, Tl * k)
+    tok_flat = jnp.broadcast_to(jnp.arange(Tl * k) // k, (D, Tl * k))
+
+    order = jnp.argsort(e_flat, axis=1, stable=True)              # [D, Tl*k]
+    es = jnp.take_along_axis(e_flat, order, axis=1)
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(es)
+    pos = jnp.arange(Tl * k)[None, :] - jnp.take_along_axis(starts, es, axis=1)
+    keep = pos < C
+    slot = jnp.where(keep, es * C + pos, E * C)                   # [D, Tl*k]
+    tok_sorted = jnp.take_along_axis(tok_flat, order, axis=1)
+    gate_sorted = jnp.take_along_axis(gate_b, order, axis=1)
+
+    diota = jnp.arange(D)[:, None]
+    src = jnp.take_along_axis(xs, tok_sorted[..., None], axis=1)  # [D,Tl*k,d]
+    src = ctx.cons(src, ("data_blk", None, None))
+    buf = ctx.cons(jnp.zeros((D, E * C, d), cfg.compute_dtype),
+                   ("data_blk", "experts_cap_flat", None))
+    buf = buf.at[diota, slot].set(src, mode="drop")
+    ebuf = ctx.cons(buf.reshape(D, E, C, d),
+                    ("data_blk", "experts", None, None))
+
+    dt = cfg.compute_dtype
+    h = jnp.einsum("xecd,edf->xecf", ebuf, p["wi"].astype(dt))
+    g = jnp.einsum("xecd,edf->xecf", ebuf, p["wg"].astype(dt)) if "wg" in p else None
+    h = _act(cfg, h, g)
+    eout = jnp.einsum("xecf,efd->xecd", h, p["wo"].astype(dt))
+    flat = ctx.cons(eout.reshape(D, E * C, d),
+                    ("data_blk", "experts_cap_flat", None))
+
+    # combine: scatter-add expert outputs (model-sharded rows) into a
+    # model-replicated token buffer -> partial sums + one all-reduce
+    tok_for_slot = jnp.full((D, E * C), Tl, jnp.int32)
+    tok_for_slot = tok_for_slot.at[diota, slot].set(tok_sorted, mode="drop")
+    gate_for_slot = jnp.zeros((D, E * C), dt)
+    gate_for_slot = gate_for_slot.at[diota, slot].set(gate_sorted, mode="drop")
+    y = ctx.cons(jnp.zeros((D, Tl, d), dt), ("data_blk", None, None))
+    y = y.at[diota, tok_for_slot].add(flat * gate_for_slot[..., None],
+                                      mode="drop")
+    y = ctx.cons(y, ("data_blk", None, None))
+    return y.reshape(B, S, d), aux
+
+
+def moe_block_shardmap(cfg: ModelConfig, p: dict, x: jax.Array,
+                       ctx: ShardCtx):
+    """Explicit-EP dispatch (the §Perf winner for kimi-k2): full-manual
+    shard_map over the whole mesh.
+
+    Key structural fact: activations are data-sharded and model-REPLICATED,
+    so every device already holds the tokens of its data row — dispatch to
+    the device's own expert slice needs NO communication at all (GSPMD's
+    scatter partitioner instead all-gathers the 240 GB update array; see
+    EXPERIMENTS.md §Perf/kimi).  Per layer the only collectives left are
+      * the FSDP all-gather of the local expert weights over 'data', and
+      * one psum over 'model' of the combined token outputs.
+    """
+    import functools
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    B, S, d = x.shape
+    T, k, E = B * S, cfg.top_k, cfg.n_experts
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    fsdp_ax = tuple(a for a in cfg.fsdp_axes if a in mesh.shape) \
+        if cfg.fsdp else ()
+    M = mesh.shape["model"]
+    assert E % M == 0, (E, M)
+    E_loc = E // M
+
+    w_spec = lambda interior: P("model", interior, None)
+    in_specs = (
+        P(batch_ax, None, None),                      # x over all batch axes
+        P(),                                          # router (replicated in)
+        w_spec(fsdp_ax or None),                      # wi
+        w_spec(fsdp_ax or None),                      # wg (or dummy)
+        P("model", None, fsdp_ax or None),            # wo
+    )
+
+    def local(x_blk, router, wi, wg, wo):
+        Bl, Sl, _ = x_blk.shape
+        Tl = Bl * Sl
+        C = capacity(cfg, Tl)
+        if fsdp_ax:
+            wi = jax.lax.all_gather(wi, fsdp_ax, axis=1, tiled=True)
+            if wg is not None:
+                wg = jax.lax.all_gather(wg, fsdp_ax, axis=1, tiled=True)
+            wo = jax.lax.all_gather(wo, fsdp_ax, axis=2, tiled=True)
+        xt = x_blk.reshape(Tl, d)
+        probs = jax.nn.softmax(
+            jnp.einsum("td,de->te", xt.astype(jnp.float32), router), axis=-1)
+        gate, expert_idx = jax.lax.top_k(probs, k)
+        gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+                ).astype(cfg.compute_dtype)
+        aux = load_balance_loss(probs, expert_idx, E)
+        aux = jax.lax.pmean(aux, batch_ax)
+
+        e_flat = expert_idx.reshape(Tl * k)
+        tok_flat = jnp.arange(Tl * k) // k
+        order = jnp.argsort(e_flat, stable=True)
+        es = e_flat[order]
+        starts = jnp.searchsorted(es, jnp.arange(E), side="left")
+        pos = jnp.arange(Tl * k) - starts[es]
+        # this device owns experts [m0, m0 + E_loc)
+        m0 = jax.lax.axis_index("model") * E_loc
+        eloc = es - m0
+        mine = (eloc >= 0) & (eloc < E_loc) & (pos < C)
+        slot = jnp.where(mine, eloc * C + pos, E_loc * C)     # OOB -> dropped
+
+        src = jnp.take(xt, tok_flat[order], axis=0)
+        ebuf = jnp.zeros((E_loc * C, d), cfg.compute_dtype)
+        ebuf = ebuf.at[slot].set(src, mode="drop",
+                                 indices_are_sorted=True, unique_indices=True)
+        ebuf = ebuf.reshape(E_loc, C, d)
+
+        dt = cfg.compute_dtype
+        h = jnp.einsum("ecd,edf->ecf", ebuf, wi.astype(dt))
+        if wg is not None:
+            h = _act(cfg, h, jnp.einsum("ecd,edf->ecf", ebuf, wg.astype(dt)))
+        else:
+            h = _act(cfg, h, None)
+        eout = jnp.einsum("ecf,efd->ecd", h, wo.astype(dt)).reshape(E_loc * C, d)
+
+        # combine: local scatter-add of my experts' outputs, psum over model
+        tok_sorted = tok_flat[order]
+        gate_sorted = gate.reshape(Tl * k)[order]
+        tok_for_slot = jnp.full((E_loc * C,), Tl, jnp.int32).at[slot].set(
+            tok_sorted, mode="drop")
+        gate_for_slot = jnp.zeros((E_loc * C,), dt).at[slot].set(
+            gate_sorted, mode="drop")
+        y = jnp.zeros((Tl, d), dt).at[tok_for_slot].add(
+            eout * gate_for_slot[:, None], mode="drop")
+        y = jax.lax.psum(y, "model")
+        return y.reshape(Bl, Sl, d), aux
+
+    wg = p.get("wg")
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=in_specs if wg is not None else
+        (in_specs[0], in_specs[1], in_specs[2], P(), in_specs[4]),
+        out_specs=(P(batch_ax, None, None), P()),
+        check_vma=False)
+    y, aux = fn(x, p["router"],
+                p["wi"].astype(cfg.compute_dtype), wg, p["wo"])
+    return y, aux
+
+
+def _moe_dense_combine(cfg: ModelConfig, p: dict, x: jax.Array, gate, expert_idx):
+    """Oracle path: run every expert on every token (tiny configs / tests)."""
+    B, S, d = x.shape
+    T, E, k = B * S, cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+    all_out = _expert_ffn(cfg, p, jnp.broadcast_to(xt, (E, T, d)))   # [E, T, d]
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=cfg.compute_dtype)  # [T, k, E]
+    w = jnp.einsum("tk,tke->te", gate, onehot)                       # [T, E]
+    yt = jnp.einsum("te,etd->td", w, all_out)
+    return yt.reshape(B, S, d)

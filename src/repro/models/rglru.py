@@ -1,0 +1,344 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern 1 attention : 2 recurrent — repeating unit (rec, rec, attn),
+remainder layers appended unscanned (38 = 12*3 + 2).
+
+The RG-LRU recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+is *diagonal*, which matters twice here:
+ 1. training uses `lax.associative_scan` (log-depth, no while loop — fully
+    visible to XLA cost analysis);
+ 2. the paper's exact-RTRL machinery collapses to O(p) eligibility traces for
+    diagonal Jacobians — see `repro.core.diag_rtrl` (train_mode='rtrl').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (embed_tokens, embedding_specs, lm_logits,
+                                 mlp, mlp_specs, rmsnorm_spec)
+from repro.models.module import (NULL_CTX, ParamSpec, ShardCtx, fan_in_normal,
+                                 constant_init, stack_specs, uniform_init)
+from repro.models.transformer import _maybe_remat, _norm, chunked_ce_loss
+
+C_RGLRU = 8.0   # recurrence-gate exponent constant (Griffin)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d, w, pd = cfg.d_model, cfg.lru_width, cfg.param_dtype
+    return {
+        "wx": ParamSpec((d, w), pd, fan_in_normal(), ("embed_tp", "lru")),
+        "wy": ParamSpec((d, w), pd, fan_in_normal(), ("embed_tp", "lru")),
+        "conv_w": ParamSpec((cfg.conv_width, w), pd, fan_in_normal(0),
+                            (None, "lru")),
+        "conv_b": ParamSpec((w,), pd, constant_init(0.0), ("lru",)),
+        # input & recurrence gates (per-channel diagonal-ish linear, Griffin
+        # uses block-diagonal; we use dense for generality)
+        "w_in_gate": ParamSpec((w, w), pd, fan_in_normal(), ("lru", "lru_tp")),
+        "w_a_gate": ParamSpec((w, w), pd, fan_in_normal(), ("lru", "lru_tp")),
+        "lambda": ParamSpec((w,), jnp.float32, uniform_init(2.2, 5.5), ("lru",)),
+        "wo": ParamSpec((w, d), pd, fan_in_normal(), ("lru", "embed_tp")),
+    }
+
+
+def rec_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln_mix": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "lru": rglru_specs(cfg),
+        "ln_mlp": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def attn_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln_attn": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "attn": attn.attn_specs(cfg),
+        "ln_mlp": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+UNIT_LAYOUT = ("rec", "rec2", "attn")
+
+
+def n_units(cfg: ModelConfig) -> tuple[int, int]:
+    """(full units, remainder rec layers)."""
+    return cfg.n_layers // 3, cfg.n_layers % 3
+
+
+def unit_specs(cfg: ModelConfig) -> dict:
+    return {"rec": rec_layer_specs(cfg), "rec2": rec_layer_specs(cfg),
+            "attn": attn_layer_specs(cfg)}
+
+
+def rglru_model_specs(cfg: ModelConfig) -> dict:
+    U, rem = n_units(cfg)
+    specs: dict[str, Any] = {"emb": embedding_specs(cfg)}
+    u = unit_specs(cfg)
+    specs["units"] = stack_specs(u, U, "layers") if cfg.scan_layers \
+        else [u for _ in range(U)]
+    specs["rem"] = [rec_layer_specs(cfg) for _ in range(rem)]
+    specs["ln_f"] = rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def _gates(cfg: ModelConfig, p: dict, u: jax.Array):
+    """u: [..., w] conv output -> (log_a [..., w] f32, gated input [..., w])."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_a_gate"].astype(cfg.compute_dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_in_gate"].astype(cfg.compute_dtype)))
+    log_a = -C_RGLRU * r * jax.nn.softplus(p["lambda"])          # < 0
+    a2 = jnp.exp(2.0 * log_a)
+    x_in = (i * u).astype(jnp.float32) * jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9))
+    return log_a, x_in
+
+
+def rglru_scan(log_a: jax.Array, x_in: jax.Array, h0: jax.Array | None = None):
+    """Associative scan of h_t = a_t h_{t-1} + x_t along axis 1 (time).
+
+    log_a, x_in: [B, T, w] (f32). Returns h: [B, T, w]."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        x_in = x_in.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h
+
+
+def conv1d_causal(cfg: ModelConfig, p: dict, x: jax.Array,
+                  state: jax.Array | None = None):
+    """Depthwise causal conv, width K. x: [B,T,w]. state: [B,K-1,w] history."""
+    K = cfg.conv_width
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(K))
+    return out + p["conv_b"].astype(x.dtype), xp[:, -(K - 1):]
+
+
+def rglru_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                ctx: ShardCtx = NULL_CTX):
+    """Griffin recurrent temporal-mixing block (training/prefill, full seq)."""
+    dt = cfg.compute_dtype
+    ux = jnp.einsum("btd,dw->btw", x, p["wx"].astype(dt))
+    uy = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["wy"].astype(dt)),
+                     approximate=True)
+    ux, _ = conv1d_causal(cfg, p, ux)
+    log_a, x_in = _gates(cfg, p, ux)
+    h = rglru_scan(log_a, x_in).astype(dt)
+    h = ctx.cons(h, ("batch", "seq", "lru"))
+    return jnp.einsum("btw,wd->btd", h * uy, p["wo"].astype(dt))
+
+
+def rglru_block_decode(cfg: ModelConfig, p: dict, x, state: dict):
+    """x: [B,1,d]; state: {'h': [B,w] f32, 'conv': [B,K-1,w]}."""
+    dt = cfg.compute_dtype
+    ux = jnp.einsum("btd,dw->btw", x, p["wx"].astype(dt))
+    uy = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["wy"].astype(dt)),
+                     approximate=True)
+    ux, conv_state = conv1d_causal(cfg, p, ux, state["conv"])
+    log_a, x_in = _gates(cfg, p, ux)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + x_in[:, 0]           # [B,w]
+    out = jnp.einsum("bw,wd->bd", h.astype(dt) * uy[:, 0], p["wo"].astype(dt))
+    return out[:, None], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Layers / model
+# ---------------------------------------------------------------------------
+
+def run_layer(cfg: ModelConfig, p: dict, x, positions, kind: str,
+              ctx: ShardCtx = NULL_CTX):
+    if kind == "attn":
+        h = attn.self_attention(cfg, p["attn"], _norm(cfg, p["ln_attn"], x),
+                                positions, causal=True,
+                                window=cfg.local_window, ctx=ctx)
+    else:
+        h = rglru_block(cfg, p["lru"], _norm(cfg, p["ln_mix"], x), ctx)
+    x = ctx.cons(x + h, ("batch", "seq", None))
+    x = x + mlp(cfg, p["mlp"], _norm(cfg, p["ln_mlp"], x), ctx)
+    return ctx.cons(x, ("batch", "seq", None))
+
+
+def run_unit(cfg: ModelConfig, p: dict, x, positions, ctx: ShardCtx = NULL_CTX):
+    for kind in UNIT_LAYOUT:
+        x = run_layer(cfg, p[kind], x, positions, "attn" if kind == "attn" else "rec", ctx)
+    return x
+
+
+def backbone(cfg: ModelConfig, params: dict, x, positions,
+             ctx: ShardCtx = NULL_CTX):
+    unit_fn = _maybe_remat(cfg, functools.partial(run_unit, cfg, ctx=ctx))
+    if cfg.scan_layers:
+        def body(x, up):
+            return unit_fn(up, x, positions), None
+        x, _ = jax.lax.scan(body, x, params["units"])
+    else:
+        for up in params["units"]:
+            x = unit_fn(up, x, positions)
+    for lp in params["rem"]:
+        x = run_layer(cfg, lp, x, positions, "rec", ctx)
+    return _norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ShardCtx = NULL_CTX):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_tokens(cfg, params["emb"], tokens, ctx)
+    h = backbone(cfg, params, x, jnp.arange(tokens.shape[1]), ctx)
+    return chunked_ce_loss(cfg, params, h, labels, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def _rec_state(cfg: ModelConfig, batch: int) -> dict:
+    return {"h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width),
+                              cfg.compute_dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    U, rem = n_units(cfg)
+    win = min(cfg.local_window, seq)
+    unit = {"rec": _rec_state(cfg, batch), "rec2": _rec_state(cfg, batch),
+            "attn": attn.init_kv_cache(cfg, batch, seq, cfg.local_window)}
+    cache: dict[str, Any] = {}
+    if cfg.scan_layers:
+        cache["units"] = jax.tree.map(
+            lambda c: jnp.broadcast_to(c[None], (U,) + c.shape), unit)
+    else:
+        cache["units"] = [unit for _ in range(U)]
+    cache["rem"] = [_rec_state(cfg, batch) for _ in range(rem)]
+    return cache
+
+
+def layer_decode(cfg: ModelConfig, p: dict, x, lc, pos, kind: str):
+    if kind == "attn":
+        h, nc = attn.self_attention_decode(
+            cfg, p["attn"], _norm(cfg, p["ln_attn"], x), lc, pos,
+            window=cfg.local_window)
+    else:
+        h, nc = rglru_block_decode(cfg, p["lru"], _norm(cfg, p["ln_mix"], x), lc)
+    x = x + h
+    x = x + mlp(cfg, p["mlp"], _norm(cfg, p["ln_mlp"], x))
+    return x, nc
+
+
+def unit_decode(cfg: ModelConfig, p: dict, x, uc, pos):
+    new = {}
+    for kind in UNIT_LAYOUT:
+        x, new[kind] = layer_decode(cfg, p[kind], x, uc[kind], pos,
+                                    "attn" if kind == "attn" else "rec")
+    return x, new
+
+
+def decode_step(cfg: ModelConfig, params: dict, token, cache, pos,
+                ctx: ShardCtx = NULL_CTX):
+    x = embed_tokens(cfg, params["emb"], token, ctx)
+    if cfg.scan_layers:
+        def body(x, xs):
+            up, uc = xs
+            x, nc = unit_decode(cfg, up, x, uc, pos)
+            return x, nc
+        x, new_units = jax.lax.scan(body, x, (params["units"], cache["units"]))
+    else:
+        new_units = []
+        for up, uc in zip(params["units"], cache["units"]):
+            x, nc = unit_decode(cfg, up, x, uc, pos)
+            new_units.append(nc)
+    new_rem = []
+    for lp, lc in zip(params["rem"], cache["rem"]):
+        x, nc = layer_decode(cfg, lp, x, lc, pos, "rec")
+        new_rem.append(nc)
+    h = _norm(cfg, params["ln_f"], x)
+    logits = lm_logits(cfg, params["emb"], h, ctx)[:, 0]
+    return logits, {"units": new_units, "rem": new_rem}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, ctx: ShardCtx = NULL_CTX):
+    """Sequential-prefill via full forward, then states extracted.
+
+    For RG-LRU the prefill state is the scan's final h; for attention layers
+    the last `window` K/V.  Implemented by re-running blocks with state
+    extraction (full-seq compute, same FLOPs as training forward).
+    """
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params["emb"], tokens, ctx)
+    positions = jnp.arange(S)
+    cache = init_cache(cfg, B, S)
+
+    def rec_prefill(p, x, st):
+        dt = cfg.compute_dtype
+        xin = _norm(cfg, p["ln_mix"], x)
+        ux = jnp.einsum("btd,dw->btw", xin, p["lru"]["wx"].astype(dt))
+        uy = jax.nn.gelu(jnp.einsum("btd,dw->btw", xin, p["lru"]["wy"].astype(dt)), approximate=True)
+        ux, conv_state = conv1d_causal(cfg, p["lru"], ux)
+        log_a, x_in = _gates(cfg, p["lru"], ux)
+        h = rglru_scan(log_a, x_in)
+        new_st = {"h": h[:, -1], "conv": conv_state.astype(cfg.compute_dtype)}
+        o = jnp.einsum("btw,wd->btd", h.astype(dt) * uy, p["lru"]["wo"].astype(dt))
+        x = x + o
+        x = x + mlp(cfg, p["mlp"], _norm(cfg, p["ln_mlp"], x), ctx)
+        return x, new_st
+
+    def attn_prefill(p, x, st):
+        hin = _norm(cfg, p["ln_attn"], x)
+        q = attn.project_q(cfg, p["attn"], hin, positions)
+        k, v = attn.project_kv(cfg, p["attn"], hin, positions)
+        smax = st["k"].shape[1]
+        nc = {"k": k[:, -smax:].astype(st["k"].dtype),
+              "v": v[:, -smax:].astype(st["v"].dtype)}
+        o = attn.flash_attention(cfg, q, k, v, causal=True,
+                                 window=cfg.local_window, ctx=ctx)
+        x = x + attn.out_proj(cfg, p["attn"], o)
+        x = x + mlp(cfg, p["mlp"], _norm(cfg, p["ln_mlp"], x), ctx)
+        return x, nc
+
+    def unit_prefill(up, uc, x):
+        nc = {}
+        x, nc["rec"] = rec_prefill(up["rec"], x, uc["rec"])
+        x, nc["rec2"] = rec_prefill(up["rec2"], x, uc["rec2"])
+        x, nc["attn"] = attn_prefill(up["attn"], x, uc["attn"])
+        return x, nc
+
+    if cfg.scan_layers:
+        def body(x, xs):
+            up, uc = xs
+            x, nc = unit_prefill(up, uc, x)
+            return x, nc
+        x, new_units = jax.lax.scan(body, x, (params["units"], cache["units"]))
+    else:
+        new_units = []
+        for up, uc in zip(params["units"], cache["units"]):
+            x, nc = unit_prefill(up, uc, x)
+            new_units.append(nc)
+    new_rem = []
+    for lp, lc in zip(params["rem"], cache["rem"]):
+        x, nc = rec_prefill(lp, x, lc)
+        new_rem.append(nc)
+    h = _norm(cfg, params["ln_f"], x)
+    logits = lm_logits(cfg, params["emb"], h[:, -1:], ctx)[:, 0]
+    return logits, {"units": new_units, "rem": new_rem}

@@ -1,0 +1,384 @@
+"""RWKV6 "Finch": data-dependent decay linear recurrence (attention-free).
+
+Time-mix state per head:  S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t,
+                          o_t = r_tᵀ (diag(u) k_t ⊗ v_t + S_{t-1})
+with per-channel decay w_t = exp(-exp(ww_t)) ∈ (0,1) from a data-dependent
+LoRA, plus data-dependent token-shift lerps (ddlerp) for r/k/v/w/g.
+
+Training uses a *chunked* evaluation (GLA-style): within a chunk of length L
+the pairwise decay ratios  exp(logP_{i-1} - logP_j), j ≤ i-1  are ≤ 1, so the
+intra-chunk term is computed with a joint (clamped) exponent — numerically
+safe for arbitrary decays — while the state crosses chunks through a scan.
+This is also the blocking the Pallas `wkv` kernel uses (state tile resident
+in VMEM across the chunk; see repro/kernels/wkv.py).
+
+The diagonal recurrence makes exact RTRL collapse to O(p) eligibility traces
+(`repro.core.diag_rtrl`) — the paper's technique applied to this family.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (embed_tokens, embedding_specs, lm_logits,
+                                 rmsnorm_spec)
+from repro.models.module import (NULL_CTX, ParamSpec, ShardCtx, constant_init,
+                                 fan_in_normal, normal, ones_init, stack_specs,
+                                 zeros_init)
+from repro.models.transformer import _maybe_remat, _norm, chunked_ce_loss
+
+LORA_R = 32      # ddlerp LoRA rank
+LORA_W = 64      # decay LoRA rank
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def time_mix_specs(cfg: ModelConfig) -> dict:
+    d, pd = cfg.d_model, cfg.param_dtype
+    H, D = n_heads(cfg), cfg.head_dim
+    s: dict[str, Any] = {"mu_x": ParamSpec((d,), pd, normal(0.1), ("embed",))}
+    for c in ("w", "k", "v", "r", "g"):
+        s[f"mu_{c}"] = ParamSpec((d,), pd, normal(0.1), ("embed",))
+    # fused ddlerp LoRAs: one [d, 4, r] matmul for (k,v,r,g) + one for w
+    # (one backward dx-psum instead of five — see EXPERIMENTS.md §Perf/rwkv)
+    s["lora_kvrg_a"] = ParamSpec((d, 4, LORA_R), pd, fan_in_normal(0),
+                                 ("embed", None, None))
+    s["lora_w_a"] = ParamSpec((d, LORA_W), pd, fan_in_normal(), ("embed", None))
+    for c in ("w", "k", "v", "r", "g"):
+        rank = LORA_W if c == "w" else LORA_R
+        s[f"lora_{c}_b"] = ParamSpec((rank, d), pd, zeros_init(), (None, "embed_tp"))
+    s["w0"] = ParamSpec((d,), jnp.float32, constant_init(-0.7), ("embed",))
+    s["u"] = ParamSpec((H, D), jnp.float32, normal(0.3), ("heads", "head_dim"))
+    # fused r/k/v/g projection: [d, 4, d] (one matmul, one dx-psum)
+    s["W_rkvg"] = ParamSpec((d, 4, d), pd, fan_in_normal(0),
+                            ("embed_tp", None, "q_out"))
+    s["Wo"] = ParamSpec((d, d), pd, fan_in_normal(), ("q_out", "embed_tp"))
+    s["ln_x_scale"] = ParamSpec((d,), pd, ones_init(), ("embed",))
+    s["ln_x_bias"] = ParamSpec((d,), pd, zeros_init(), ("embed",))
+    return s
+
+
+def channel_mix_specs(cfg: ModelConfig) -> dict:
+    d, f, pd = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    return {
+        "mu_k": ParamSpec((d,), pd, normal(0.1), ("embed",)),
+        "mu_r": ParamSpec((d,), pd, normal(0.1), ("embed",)),
+        "Wk": ParamSpec((d, f), pd, fan_in_normal(), ("embed_tp", "mlp")),
+        "Wv": ParamSpec((f, d), pd, fan_in_normal(), ("mlp", "embed_tp")),
+        "Wr": ParamSpec((d, d), pd, fan_in_normal(), ("embed_tp", "q_out")),
+    }
+
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "tm": time_mix_specs(cfg),
+        "ln2": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "cm": channel_mix_specs(cfg),
+    }
+
+
+def rwkv_model_specs(cfg: ModelConfig) -> dict:
+    specs: dict[str, Any] = {"emb": embedding_specs(cfg)}
+    specs["ln0"] = rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+    u = layer_specs(cfg)
+    specs["units"] = stack_specs(u, cfg.n_layers, "layers") if cfg.scan_layers \
+        else [u for _ in range(cfg.n_layers)]
+    specs["ln_f"] = rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# ddlerp projections (full sequence)
+# ---------------------------------------------------------------------------
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Token shift: y_t = x_{t-1}; prev: [B,d] state for t=0 (zeros if None)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def ddlerp_inputs(cfg: ModelConfig, p: dict, x: jax.Array, prev=None):
+    """-> dict of mixed inputs per channel c: x_c = x + (shift(x)-x)*(mu_c+lora_c).
+
+    The five LoRA down-projections are fused into two matmuls (4x rank-32
+    + 1x rank-64) so the backward pass emits 2 dx all-reduces, not 5."""
+    dt = cfg.compute_dtype
+    sx = _shift(x, prev) - x
+    xxx = x + sx * p["mu_x"].astype(dt)
+    low4 = jnp.tanh(jnp.einsum("btd,dcr->btcr", xxx,
+                               p["lora_kvrg_a"].astype(dt)))   # [B,T,4,32]
+    low_w = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["lora_w_a"].astype(dt)))
+    out = {}
+    for i, c in enumerate(("k", "v", "r", "g")):
+        lora = jnp.einsum("btr,rd->btd", low4[:, :, i],
+                          p[f"lora_{c}_b"].astype(dt))
+        out[c] = x + sx * (p[f"mu_{c}"].astype(dt) + lora)
+    lora_w = jnp.einsum("btr,rd->btd", low_w, p["lora_w_b"].astype(dt))
+    out["w"] = x + sx * (p["mu_w"].astype(dt) + lora_w)
+    return out
+
+
+def _heads(x: jax.Array, H: int, D: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], H, D)
+
+
+def group_norm_heads(cfg: ModelConfig, p: dict, o: jax.Array) -> jax.Array:
+    """Per-head LayerNorm (GroupNorm with H groups) on [B,T,H,D]."""
+    of = o.astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    of = (of - mu) * jax.lax.rsqrt(var + 64e-5)
+    flat = of.reshape(*o.shape[:-2], -1)
+    return (flat * p["ln_x_scale"].astype(jnp.float32)
+            + p["ln_x_bias"].astype(jnp.float32)).astype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked WKV
+# ---------------------------------------------------------------------------
+
+def wkv_chunk(r, k, v, logw, u, S_prev):
+    """One chunk. r/k/v: [B,H,L,D]; logw: [B,H,L,D] (≤0, f32); u: [H,D];
+    S_prev: [B,H,D,Dv].  Returns (o [B,H,L,D], S_new)."""
+    logP = jnp.cumsum(logw, axis=2)                      # [B,H,L,D]
+    logP_prev = logP - logw                              # logP_{i-1}
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+
+    # inter-chunk: o_inter[i] = (r_i ⊙ exp(logP_{i-1})) @ S_prev
+    q_inter = rf * jnp.exp(logP_prev)
+    o_inter = jnp.einsum("bhld,bhdv->bhlv", q_inter, S_prev)
+
+    # intra-chunk: A[i,j] = Σ_d r_i k_j exp(logP_{i-1,d} - logP_{j,d}) (j<i)
+    #              A[i,i] = Σ_d r_i k_i u_d     -- joint clamped exponent is
+    # ≤ 0 on the needed triangle, so the 3-tensor is numerically safe.
+    delta = logP_prev[:, :, :, None, :] - logP[:, :, None, :, :]   # [B,H,L,L,D]
+    delta = jnp.minimum(delta, 0.0)
+    L = r.shape[2]
+    ii = jnp.arange(L)
+    diag = (ii[:, None] == ii[None, :])
+    tri = (ii[:, None] > ii[None, :])
+    w_pair = jnp.where(diag[None, None, :, :, None], u[None, :, None, None, :],
+                       jnp.exp(delta))
+    w_pair = jnp.where((tri | diag)[None, None, :, :, None], w_pair, 0.0)
+    A = jnp.einsum("bhid,bhijd,bhjd->bhij", rf, w_pair, kf)
+    o_intra = jnp.einsum("bhij,bhjv->bhiv", A, v.astype(jnp.float32))
+
+    # state update: S_new = diag(exp(logP_L)) S_prev + Σ_j (k_j e^{logP_L-logP_j}) ⊗ v_j
+    logP_L = logP[:, :, -1:, :]                          # [B,H,1,D]
+    k_tail = kf * jnp.exp(logP_L - logP)
+    S_new = (jnp.exp(logP_L[:, :, 0, :])[..., None] * S_prev
+             + jnp.einsum("bhld,bhlv->bhdv", k_tail, v.astype(jnp.float32)))
+    return o_inter + o_intra, S_new
+
+
+def wkv_full(cfg: ModelConfig, r, k, v, logw, u, S0=None):
+    """Chunk-scanned WKV over full sequence. r/k/v/logw: [B,T,H,D]."""
+    B, T, H, D = r.shape
+    L = min(cfg.rwkv_chunk, T)
+    n = T // L
+    tr = lambda x: x.reshape(B, n, L, H, D).transpose(1, 0, 3, 2, 4)  # [n,B,H,L,D]
+    rc, kc, vc, wc = tr(r), tr(k), tr(v), tr(logw.astype(jnp.float32))
+    S = jnp.zeros((B, H, D, D), jnp.float32) if S0 is None else S0
+
+    chunk_fn = wkv_chunk
+    if cfg.remat != "none":
+        chunk_fn = jax.checkpoint(chunk_fn)
+
+    def body(S, xs):
+        rc, kc, vc, wc = xs
+        o, S = chunk_fn(rc, kc, vc, wc, u, S)
+        return S, o
+
+    S, o = jax.lax.scan(body, S, (rc, kc, vc, wc))       # o: [n,B,H,L,D]
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, T, H, D)
+    return o.astype(cfg.compute_dtype), S
+
+
+def wkv_step(r1, k1, v1, logw1, u, S):
+    """Single decode step. r1/k1/v1/logw1: [B,H,D]; S: [B,H,D,Dv]."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r1, k1, v1))
+    kv = kf[..., None] * vf[:, :, None, :]                 # k ⊗ v  [B,H,D,Dv]
+    o = jnp.einsum("bhd,bhdv->bhv", rf, S + u[None, ..., None] * kv)
+    S_new = jnp.exp(logw1)[..., None] * S + kv
+    return o, S_new
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def decay_logw(cfg: ModelConfig, p: dict, xw: jax.Array) -> jax.Array:
+    """ww = w0 + lora_w(x_w); logw = -exp(ww) (clipped for safety)."""
+    dt = cfg.compute_dtype
+    lora = jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["lora_w_a"].astype(dt))),
+        p["lora_w_b"].astype(dt)).astype(jnp.float32)
+    ww = p["w0"] + lora
+    return -jnp.exp(jnp.clip(ww, -20.0, 10.0))
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jax.Array, ctx: ShardCtx = NULL_CTX,
+             state=None):
+    """x: [B,T,d] -> (out [B,T,d], (S_final, x_last))."""
+    dt = cfg.compute_dtype
+    H, D = n_heads(cfg), cfg.head_dim
+    prev = None if state is None else state["x_tm"]
+    mixed = ddlerp_inputs(cfg, p, x, prev)
+    # fused r/k/v/g projection: stack mixed inputs -> one [d,4,d] einsum
+    mixed4 = jnp.stack([mixed["r"], mixed["k"], mixed["v"], mixed["g"]], 2)
+    proj = jnp.einsum("btcd,dce->btce", mixed4, p["W_rkvg"].astype(dt))
+    r = _heads(proj[:, :, 0], H, D)
+    k = _heads(proj[:, :, 1], H, D)
+    v = _heads(proj[:, :, 2], H, D)
+    g = jax.nn.silu(proj[:, :, 3])
+    logw = _heads(decay_logw(cfg, p, mixed["w"]), H, D)
+    S0 = None if state is None else state["S"]
+    o, S = wkv_full(cfg, r, k, v, logw, p["u"], S0)
+    o = group_norm_heads(cfg, p, o)
+    out = jnp.einsum("btd,de->bte", o * g, p["Wo"].astype(dt))
+    return ctx.cons(out, ("batch", "seq", None)), {"S": S, "x_tm": x[:, -1]}
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                ctx: ShardCtx = NULL_CTX, state=None):
+    dt = cfg.compute_dtype
+    prev = None if state is None else state["x_cm"]
+    sx = _shift(x, prev) - x
+    xk = x + sx * p["mu_k"].astype(dt)
+    xr = x + sx * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["Wk"].astype(dt))))
+    vv = jnp.einsum("btf,fd->btd", kk, p["Wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["Wr"].astype(dt)))
+    return rr * vv, {"x_cm": x[:, -1]}
+
+
+def run_layer(cfg: ModelConfig, p: dict, x: jax.Array,
+              ctx: ShardCtx = NULL_CTX):
+    h, _ = time_mix(cfg, p["tm"], _norm(cfg, p["ln1"], x), ctx)
+    x = ctx.cons(x + h, ("batch", "seq", None))
+    h, _ = channel_mix(cfg, p["cm"], _norm(cfg, p["ln2"], x), ctx)
+    return ctx.cons(x + h, ("batch", "seq", None))
+
+
+def backbone(cfg: ModelConfig, params: dict, x: jax.Array,
+             ctx: ShardCtx = NULL_CTX):
+    x = _norm(cfg, params["ln0"], x)
+    layer_fn = _maybe_remat(cfg, functools.partial(run_layer, cfg, ctx=ctx))
+    if cfg.scan_layers:
+        def body(x, lp):
+            return layer_fn(lp, x), None
+        x, _ = jax.lax.scan(body, x, params["units"])
+    else:
+        for lp in params["units"]:
+            x = layer_fn(lp, x)
+    return _norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ShardCtx = NULL_CTX):
+    x = embed_tokens(cfg, params["emb"], batch["tokens"], ctx)
+    h = backbone(cfg, params, x, ctx)
+    return chunked_ce_loss(cfg, params, h, batch["labels"], ctx)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def _layer_state(cfg: ModelConfig, batch: int) -> dict:
+    H, D = n_heads(cfg), cfg.head_dim
+    return {"S": jnp.zeros((batch, H, D, D), jnp.float32),
+            "x_tm": jnp.zeros((batch, cfg.d_model), cfg.compute_dtype),
+            "x_cm": jnp.zeros((batch, cfg.d_model), cfg.compute_dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Any:
+    st = _layer_state(cfg, batch)
+    if cfg.scan_layers:
+        return jax.tree.map(
+            lambda c: jnp.broadcast_to(c[None], (cfg.n_layers,) + c.shape), st)
+    return [st for _ in range(cfg.n_layers)]
+
+
+def layer_decode(cfg: ModelConfig, p: dict, x, st):
+    """x: [B,1,d] one token."""
+    dt = cfg.compute_dtype
+    H, D = n_heads(cfg), cfg.head_dim
+    xin = _norm(cfg, p["ln1"], x)
+    mixed = ddlerp_inputs(cfg, p["tm"], xin, st["x_tm"])
+    mixed4 = jnp.stack([mixed["r"], mixed["k"], mixed["v"], mixed["g"]], 2)
+    proj = jnp.einsum("btcd,dce->btce", mixed4, p["tm"]["W_rkvg"].astype(dt))
+    hd = lambda z: _heads(z, H, D)[:, 0]
+    r, k, v = hd(proj[:, :, 0]), hd(proj[:, :, 1]), hd(proj[:, :, 2])
+    g = jax.nn.silu(proj[:, :, 3])
+    logw = _heads(decay_logw(cfg, p["tm"], mixed["w"]), H, D)[:, 0]
+    o, S = wkv_step(r, k, v, logw, p["tm"]["u"], st["S"])
+    o = group_norm_heads(cfg, p["tm"], o[:, None, :, :])   # [B,1,H*D]
+    x = x + jnp.einsum("btd,de->bte", o * g, p["tm"]["Wo"].astype(dt))
+    x_tm = xin[:, -1]
+    xin2 = _norm(cfg, p["ln2"], x)
+    h, _ = channel_mix(cfg, p["cm"], xin2, state={"x_cm": st["x_cm"]})
+    x = x + h
+    return x, {"S": S, "x_tm": x_tm, "x_cm": xin2[:, -1]}
+
+
+def decode_step(cfg: ModelConfig, params: dict, token, cache, pos,
+                ctx: ShardCtx = NULL_CTX):
+    del pos   # attention-free: position enters only through state
+    x = embed_tokens(cfg, params["emb"], token, ctx)
+    x = _norm(cfg, params["ln0"], x)
+    if cfg.scan_layers:
+        def body(x, xs):
+            lp, lc = xs
+            x, nc = layer_decode(cfg, lp, x, lc)
+            return x, nc
+        x, new_cache = jax.lax.scan(body, x, (params["units"], cache))
+    else:
+        new_cache = []
+        for lp, lc in zip(params["units"], cache):
+            x, nc = layer_decode(cfg, lp, x, lc)
+            new_cache.append(nc)
+    h = _norm(cfg, params["ln_f"], x)
+    return lm_logits(cfg, params["emb"], h, ctx)[:, 0], new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, ctx: ShardCtx = NULL_CTX):
+    """Full-seq forward collecting per-layer final states."""
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params["emb"], tokens, ctx)
+    x = _norm(cfg, params["ln0"], x)
+
+    def one_layer(lp, x):
+        xin = _norm(cfg, lp["ln1"], x)
+        h, st_tm = time_mix(cfg, lp["tm"], xin, ctx)
+        x = x + h
+        xin2 = _norm(cfg, lp["ln2"], x)
+        h, st_cm = channel_mix(cfg, lp["cm"], xin2, ctx)
+        x = x + h
+        return x, {"S": st_tm["S"], "x_tm": xin[:, -1], "x_cm": xin2[:, -1]}
+
+    if cfg.scan_layers:
+        def body(x, lp):
+            x, st = one_layer(lp, x)
+            return x, st
+        x, cache = jax.lax.scan(body, x, params["units"])
+    else:
+        cache = []
+        for lp in params["units"]:
+            x, st = one_layer(lp, x)
+            cache.append(st)
+    h = _norm(cfg, params["ln_f"], x)
+    return lm_logits(cfg, params["emb"], h[:, -1:], ctx)[:, 0], cache

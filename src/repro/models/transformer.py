@@ -1,0 +1,316 @@
+"""Decoder-only transformer LM family.
+
+Covers: olmoe-1b-7b, kimi-k2-1t-a32b (MoE), qwen3-8b, gemma2-2b (local/global
+alternating + softcaps), minitron-8b, yi-6b (dense), internvl2-2b (VLM backbone
+with stubbed patch embeddings prepended).
+
+Layers are grouped into a repeating *unit* (1 layer, or a (local, global) pair
+for gemma2) and scanned with stacked parameters; remat policy wraps the unit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (embed_tokens, embedding_specs, lm_logits,
+                                 mlp, mlp_specs, rmsnorm, rmsnorm_spec)
+from repro.models.module import (NULL_CTX, ParamSpec, ShardCtx, fan_in_normal,
+                                 stack_specs)
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "ln_attn": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "attn": attn.attn_specs(cfg),
+        "ln_mlp": rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "mlp": moe_lib.moe_specs(cfg) if cfg.moe else mlp_specs(cfg),
+    }
+    if cfg.sandwich_norm:
+        specs["ln_attn_post"] = rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+        specs["ln_mlp_post"] = rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+    return specs
+
+
+def unit_layout(cfg: ModelConfig) -> list[str]:
+    """Layer kinds inside one repeating unit."""
+    if cfg.layer_pattern == "local_global":
+        return ["local", "global"]
+    return ["global"]
+
+
+def n_units(cfg: ModelConfig) -> int:
+    u = len(unit_layout(cfg))
+    assert cfg.n_layers % u == 0, (cfg.n_layers, u)
+    return cfg.n_layers // u
+
+
+def unit_specs(cfg: ModelConfig) -> dict:
+    return {kind: layer_specs(cfg) for kind in unit_layout(cfg)}
+
+
+def decoder_specs(cfg: ModelConfig) -> dict:
+    specs: dict[str, Any] = {"emb": embedding_specs(cfg)}
+    u = unit_specs(cfg)
+    if cfg.scan_layers:
+        specs["units"] = stack_specs(u, n_units(cfg), "layers")
+    else:
+        specs["units"] = [u for _ in range(n_units(cfg))]
+    specs["ln_f"] = rmsnorm_spec(cfg.d_model, cfg.param_dtype)
+    if cfg.n_patches > 0:   # VLM projector (internvl2 mlp1: vit 4096 -> d)
+        specs["vproj"] = {
+            "w1": ParamSpec((4096, cfg.d_model), cfg.param_dtype, fan_in_normal(),
+                            ("vit", "embed")),
+            "w2": ParamSpec((cfg.d_model, cfg.d_model), cfg.param_dtype,
+                            fan_in_normal(), ("embed", "embed")),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, scale, x):
+    return rmsnorm(x, scale, cfg.norm_eps, cfg.zero_centered_norm)
+
+
+def run_layer(cfg: ModelConfig, p: dict, x: jax.Array, positions, kind: str,
+              ctx: ShardCtx = NULL_CTX):
+    """Pre-norm block; returns (x, aux_loss)."""
+    window = cfg.local_window if kind == "local" else 0
+    h = attn.self_attention(cfg, p["attn"], _norm(cfg, p["ln_attn"], x),
+                            positions, causal=True, window=window, ctx=ctx)
+    if cfg.sandwich_norm:
+        h = _norm(cfg, p["ln_attn_post"], h)
+    x = ctx.cons(x + h, ("batch", "seq", None))
+    hin = _norm(cfg, p["ln_mlp"], x)
+    if cfg.moe:
+        h, aux = moe_lib.moe_block(cfg, p["mlp"], hin, ctx)
+    else:
+        h, aux = mlp(cfg, p["mlp"], hin, ctx), jnp.float32(0)
+    if cfg.sandwich_norm:
+        h = _norm(cfg, p["ln_mlp_post"], h)
+    return ctx.cons(x + h, ("batch", "seq", None)), aux
+
+
+def run_unit(cfg: ModelConfig, p: dict, x: jax.Array, positions,
+             ctx: ShardCtx = NULL_CTX):
+    aux = jnp.float32(0)
+    for kind in unit_layout(cfg):
+        x, a = run_layer(cfg, p[kind], x, positions, kind, ctx)
+        aux = aux + a
+    return x, aux
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def backbone(cfg: ModelConfig, params: dict, x: jax.Array, positions,
+             ctx: ShardCtx = NULL_CTX):
+    """Embedded input -> final-norm hidden states. Returns (x, aux_loss)."""
+    unit_fn = _maybe_remat(cfg, functools.partial(run_unit, cfg, ctx=ctx))
+
+    if cfg.scan_layers:
+        def body(carry, unit_p):
+            x, aux = carry
+            x, a = unit_fn(unit_p, x, positions)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), params["units"])
+    else:
+        aux = jnp.float32(0)
+        for up in params["units"]:
+            x, a = unit_fn(up, x, positions)
+            aux = aux + a
+    return _norm(cfg, params["ln_f"], x), aux
+
+
+def embed_inputs(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 patch_embeds=None, ctx: ShardCtx = NULL_CTX):
+    """Token embedding; for VLM, the first n_patches positions come from the
+    (stubbed) vision frontend through the projector."""
+    x = embed_tokens(cfg, params["emb"], tokens, ctx)
+    if cfg.n_patches > 0 and patch_embeds is not None:
+        v = patch_embeds.astype(cfg.compute_dtype)
+        v = jnp.einsum("bpd,de->bpe", v, params["vproj"]["w1"].astype(cfg.compute_dtype))
+        v = jax.nn.gelu(v, approximate=True)
+        v = jnp.einsum("bpd,de->bpe", v, params["vproj"]["w2"].astype(cfg.compute_dtype))
+        x = jnp.concatenate([v, x[:, cfg.n_patches:]], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Loss (sequence-chunked cross entropy, vocab-sharding friendly)
+# ---------------------------------------------------------------------------
+
+def ce_chunk(cfg: ModelConfig, emb: dict, h_chunk: jax.Array, labels_chunk,
+             ctx: ShardCtx = NULL_CTX):
+    """h: [B,C,d], labels: [B,C] (−1 = masked) -> (sum_nll, sum_z2, n_valid)."""
+    logits = lm_logits(cfg, emb, h_chunk, ctx)                 # f32 [B,C,V]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lbl = jnp.maximum(labels_chunk, 0)
+    gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    valid = (labels_chunk >= 0).astype(jnp.float32)
+    nll = (lse - gold) * valid
+    return nll.sum(), (jnp.square(lse) * valid).sum(), valid.sum()
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: dict, h: jax.Array, labels,
+                    ctx: ShardCtx = NULL_CTX, chunk: int = 512,
+                    z_loss: float = 1e-4):
+    B, S, _ = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    fn = functools.partial(ce_chunk, cfg, params["emb"], ctx=ctx)
+    if cfg.remat != "none":
+        fn = jax.checkpoint(fn)
+    if n == 1:
+        nll, z2, cnt = fn(h, labels)
+    else:
+        def body(carry, i):
+            h_c = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+            l_c = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+            a, b, c = fn(h_c, l_c)
+            return (carry[0] + a, carry[1] + b, carry[2] + c), None
+        (nll, z2, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), jnp.arange(n))
+    denom = jnp.maximum(cnt, 1.0)
+    return nll / denom + z_loss * z2 / denom
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ShardCtx = NULL_CTX):
+    """batch: tokens [B,S] int32, labels [B,S] int32 (-1 masked), optional
+    patch_embeds [B,P,4096].  Returns scalar loss (CE + z + MoE aux)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_inputs(cfg, params, tokens, batch.get("patch_embeds"), ctx)
+    positions = jnp.arange(tokens.shape[1])
+    h, aux = backbone(cfg, params, x, positions, ctx)
+    ce = chunked_ce_loss(cfg, params, h, labels, ctx)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    unit = {}
+    for kind in unit_layout(cfg):
+        window = cfg.local_window if kind == "local" else 0
+        unit[kind] = attn.init_kv_cache(cfg, batch, seq, window)
+    U = n_units(cfg)
+    if cfg.scan_layers:
+        return jax.tree.map(
+            lambda c: jnp.broadcast_to(c[None], (U,) + c.shape), unit)
+    return [jax.tree.map(lambda c: c, unit) for _ in range(U)]
+
+
+def unit_decode(cfg: ModelConfig, p: dict, x, cache: dict, pos,
+                ctx: ShardCtx = NULL_CTX):
+    new_cache = {}
+    for kind in unit_layout(cfg):
+        lp = p[kind]
+        window = cfg.local_window if kind == "local" else 0
+        h = _norm(cfg, lp["ln_attn"], x)
+        h, new_cache[kind] = attn.self_attention_decode(
+            cfg, lp["attn"], h, cache[kind], pos, window=window)
+        if cfg.sandwich_norm:
+            h = _norm(cfg, lp["ln_attn_post"], h)
+        x = x + h
+        hin = _norm(cfg, lp["ln_mlp"], x)
+        if cfg.moe:
+            h, _ = moe_lib.moe_block(cfg, lp["mlp"], hin, ctx)
+        else:
+            h = mlp(cfg, lp["mlp"], hin, ctx)
+        if cfg.sandwich_norm:
+            h = _norm(cfg, lp["ln_mlp_post"], h)
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, token, cache, pos,
+                ctx: ShardCtx = NULL_CTX):
+    """token: [B,1] int32; pos: [B] int32 -> (logits [B,V] f32, new_cache)."""
+    x = embed_tokens(cfg, params["emb"], token, ctx)
+    if cfg.scan_layers:
+        def body(x, xs):
+            unit_p, unit_c = xs
+            x, new_c = unit_decode(cfg, unit_p, x, unit_c, pos, ctx)
+            return x, new_c
+        x, new_cache = jax.lax.scan(body, x, (params["units"], cache))
+    else:
+        new_cache = []
+        for up, uc in zip(params["units"], cache):
+            x, nc = unit_decode(cfg, up, x, uc, pos, ctx)
+            new_cache.append(nc)
+    h = _norm(cfg, params["ln_f"], x)
+    logits = lm_logits(cfg, params["emb"], h, ctx)[:, 0]
+    return logits, new_cache
+
+
+def unit_prefill(cfg: ModelConfig, p: dict, x, positions, cache,
+                 ctx: ShardCtx = NULL_CTX):
+    """Like run_unit but also fills the KV cache (and skips MoE aux)."""
+    new_cache = {}
+    for kind in unit_layout(cfg):
+        lp = p[kind]
+        window = cfg.local_window if kind == "local" else 0
+        h = _norm(cfg, lp["ln_attn"], x)
+        q = attn.project_q(cfg, lp["attn"], h, positions)
+        k, v = attn.project_kv(cfg, lp["attn"], h, positions)
+        smax = cache[kind]["k"].shape[1]
+        new_cache[kind] = {"k": k[:, -smax:].astype(cache[kind]["k"].dtype),
+                           "v": v[:, -smax:].astype(cache[kind]["v"].dtype)}
+        o = attn.flash_attention(cfg, q, k, v, causal=True, window=window, ctx=ctx)
+        h = attn.out_proj(cfg, lp["attn"], o)
+        if cfg.sandwich_norm:
+            h = _norm(cfg, lp["ln_attn_post"], h)
+        x = x + h
+        hin = _norm(cfg, lp["ln_mlp"], x)
+        if cfg.moe:
+            h, _ = moe_lib.moe_block(cfg, lp["mlp"], hin, ctx)
+        else:
+            h = mlp(cfg, lp["mlp"], hin, ctx)
+        if cfg.sandwich_norm:
+            h = _norm(cfg, lp["ln_mlp_post"], h)
+        x = x + h
+    return x, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, patch_embeds=None,
+            ctx: ShardCtx = NULL_CTX):
+    """tokens: [B,S] -> (next-token logits [B,V], cache)."""
+    B, S = tokens.shape
+    x = embed_inputs(cfg, params, tokens, patch_embeds, ctx)
+    positions = jnp.arange(S)
+    cache = init_cache(cfg, B, S)
+    if cfg.scan_layers:
+        def body(x, xs):
+            unit_p, unit_c = xs
+            x, new_c = unit_prefill(cfg, unit_p, x, positions, unit_c, ctx)
+            return x, new_c
+        x, cache = jax.lax.scan(body, x, (params["units"], cache))
+    else:
+        new_cache = []
+        for up, uc in zip(params["units"], cache):
+            x, nc = unit_prefill(cfg, up, x, positions, uc, ctx)
+            new_cache.append(nc)
+        cache = new_cache
+    h = _norm(cfg, params["ln_f"], x)
+    logits = lm_logits(cfg, params["emb"], h[:, -1:], ctx)[:, 0]
+    return logits, cache

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw, lion,
+                                    make_optimizer, masked, sgdm)
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup
+from repro.optim.grad import (clip_by_global_norm, global_norm,
+                              microbatch_grads)
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "lion", "sgdm", "masked",
+    "make_optimizer", "constant", "cosine_warmup", "linear_warmup",
+    "clip_by_global_norm", "global_norm", "microbatch_grads",
+]

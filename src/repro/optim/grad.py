@@ -1,0 +1,54 @@
+"""Gradient utilities: global-norm clipping, microbatch accumulation."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree: Tree, max_norm: float) -> tuple[Tree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+def microbatch_grads(loss_fn: Callable, params: Tree, batch: Tree,
+                     n_micro: int) -> tuple[jax.Array, Tree]:
+    """Gradient accumulation: split the batch into `n_micro` slices along
+    axis 0 and scan, accumulating mean loss and grads in f32.
+
+    Shrinks activation peak by ~n_micro while keeping the same global batch —
+    the standard fit-1T-activations lever (remat composes with this).
+    """
+    if n_micro <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def slice_batch(b, i):
+        def f(x):
+            mb = x.shape[0] // n_micro
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+        return jax.tree.map(f, b)
+
+    def body(carry, i):
+        loss_acc, grads_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, slice_batch(batch, i))
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+        return (loss_acc + loss, grads_acc), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros),
+                                    jnp.arange(n_micro))
+    inv = 1.0 / n_micro
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)

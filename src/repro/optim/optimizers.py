@@ -1,0 +1,223 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+An :class:`Optimizer` is (init, update):
+    state            = opt.init(params)          # works on abstract params too
+    params', state'  = opt.update(grads, state, params, step)
+
+Optimizer state mirrors the parameter tree structure, so the same sharding
+rules apply leaf-for-leaf (ZeRO: opt state is sharded exactly like params).
+
+``masked(opt, mask)`` freezes pruned parameters — the fixed-parameter-sparsity
+contract of the paper (§5: "fixed random sparsity mask at initialisation ...
+trained with this sparsity mask throughout").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Tree], Tree]
+    update: Callable[[Tree, Tree, Tree, jax.Array], tuple[Tree, Tree]]
+
+
+def _cast_like(new, ref):
+    return jax.tree.map(lambda n, r: n.astype(r.dtype), new, ref)
+
+
+def _sched(lr) -> Callable:
+    return lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def leaf(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * upd
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"m": m_new, "v": v_new}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Lion (momentum-only, bf16 state — the 1T-param fit: 2 bytes/param of state)
+# ---------------------------------------------------------------------------
+
+def lion(lr=1e-4, b1=0.9, b2=0.99, weight_decay=0.0,
+         moment_dtype=jnp.bfloat16) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype),
+                                  params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def leaf(g, m, p):
+            g = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32)
+            upd = jnp.sign(b1 * mf + (1 - b1) * g)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * upd
+            m_new = b2 * mf + (1 - b2) * g
+            return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+        out = jax.tree.map(leaf, grads, state["m"], params)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"m": m_new}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment: O(n+m) state per [n,m] matrix)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps))
+                upd = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            p_new = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            return p_new, new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        p_new = treedef.unflatten([o[0] for o in outs])
+        s_new = treedef.unflatten([o[1] for o in outs])
+        return p_new, {"f": s_new}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgdm(lr=1e-2, momentum=0.9) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def leaf(g, m, p):
+            m_new = momentum * m + g.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr_t * m_new).astype(p.dtype)
+            return p_new, m_new
+
+        out = jax.tree.map(leaf, grads, state["m"], params)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"m": m_new}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Masked wrapper (fixed parameter sparsity) + registry
+# ---------------------------------------------------------------------------
+
+def masked(opt: Optimizer, mask: Tree) -> Optimizer:
+    """Zero both gradients and updates where mask == 0 (pruned weights stay
+    pruned and their optimizer state stays zero — exact Table-1 memory)."""
+
+    def init(params):
+        return opt.init(params)
+
+    def _mask_tree(tree):
+        # mask-first walk: None masks an entire (dense) subtree untouched
+        return jax.tree.map(
+            lambda mk, t: t if mk is None else t * mk.astype(t.dtype),
+            mask, tree, is_leaf=lambda x: x is None)
+
+    def update(grads, state, params, step):
+        p_new, s_new = opt.update(_mask_tree(grads), state, params, step)
+        return _mask_tree(p_new), s_new
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr=None, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr if lr is not None else 1e-3, **kw)
+    if name == "lion":
+        return lion(lr if lr is not None else 1e-4, **kw)
+    if name == "adafactor":
+        return adafactor(lr if lr is not None else 1e-2, **kw)
+    if name == "sgdm":
+        return sgdm(lr if lr is not None else 1e-2, **kw)
+    raise ValueError(name)

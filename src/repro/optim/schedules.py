@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step -> lr, jittable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return jnp.float32(lr) * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    return f
+
+
+def cosine_warmup(lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * warm * cos
+    return f

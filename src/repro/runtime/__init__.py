@@ -1,0 +1,4 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.compression import compressed_psum, ef_int8_allreduce
+
+__all__ = ["Trainer", "TrainerConfig", "compressed_psum", "ef_int8_allreduce"]

@@ -1,0 +1,133 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching (lite) over the jit'd steps from repro.launch.steps.
+
+The decode step is position-vectorised ([B] positions), so slots can hold
+sequences of different lengths; finished slots are refilled from the queue
+without re-jitting (static batch shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.models.module import materialize
+from repro.sharding import make_ctx
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 4
+    max_seq: int = 128
+    temperature: float = 0.0       # 0 = greedy
+    eos_token: int = -1            # -1: never stops early
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params=None,
+                 mesh=None):
+        self.cfg = cfg.replace(remat="none", scan_layers=cfg.scan_layers)
+        self.scfg = scfg
+        self.api = get_model(self.cfg)
+        self.ctx = make_ctx(self.cfg, mesh) if mesh is not None else None
+        if params is None:
+            params = materialize(self.api.specs(self.cfg), jax.random.key(0))
+        self.params = params
+        B, S = scfg.batch_slots, scfg.max_seq
+
+        def decode(params, token, cache, pos):
+            ctx = self.ctx
+            if ctx is None:
+                return self.api.decode_step(self.cfg, params, token, cache, pos)
+            return self.api.decode_step(self.cfg, params, token, cache, pos, ctx)
+
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+        # de-alias: identical zeros constants can share buffers, which breaks
+        # donation (same buffer donated twice); .copy() forces distinct ones
+        self.cache = jax.tree.map(lambda x: x.copy(),
+                                  self.api.init_cache(self.cfg, B, S))
+        self.pos = np.zeros((B,), np.int32)
+        self.live = np.zeros((B,), bool)
+        self.tokens: list[list[int]] = [[] for _ in range(B)]
+
+    # -- slot management ------------------------------------------------------
+
+    def add_request(self, prompt_tokens: list[int]) -> int | None:
+        """Claim a free slot; prompt is consumed token-by-token (teacher-forced
+        prefill through the decode path keeps the engine single-program)."""
+        free = np.where(~self.live)[0]
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        self.live[slot] = True
+        self.pos[slot] = 0
+        self.tokens[slot] = list(prompt_tokens)
+        return slot
+
+    def _sample(self, logits: np.ndarray, key) -> np.ndarray:
+        if self.scfg.temperature <= 0.0:
+            return np.argmax(logits, axis=-1)
+        g = jax.random.gumbel(key, logits.shape)
+        return np.asarray(jnp.argmax(logits / self.scfg.temperature + g, -1))
+
+    def step(self, key) -> dict[int, int]:
+        """One engine step: feeds each live slot its next token (prompt token
+        if still prefilling, else the model's own last sample)."""
+        B = self.scfg.batch_slots
+        feed = np.zeros((B, 1), np.int32)
+        for b in range(B):
+            if not self.live[b]:
+                continue
+            hist = self.tokens[b]
+            feed[b, 0] = hist[min(self.pos[b], len(hist) - 1)]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(feed), self.cache, jnp.asarray(self.pos))
+        nxt = self._sample(np.asarray(logits), key)
+        emitted = {}
+        for b in range(B):
+            if not self.live[b]:
+                continue
+            self.pos[b] += 1
+            if self.pos[b] >= len(self.tokens[b]):       # past the prompt
+                tok = int(nxt[b])
+                self.tokens[b].append(tok)
+                emitted[b] = tok
+                if tok == self.scfg.eos_token or \
+                        self.pos[b] >= self.scfg.max_seq - 1:
+                    self.live[b] = False
+        return emitted
+
+    def generate(self, prompts: list[list[int]], max_new: int = 16):
+        """Serve a list of prompts to completion; returns generated suffixes."""
+        outputs = {i: [] for i in range(len(prompts))}
+        slot_of = {}
+        pending = list(enumerate(prompts))
+        key = jax.random.key(self.scfg.seed)
+        steps = 0
+        budget = {i: max_new for i in range(len(prompts))}
+        while pending or self.live.any():
+            while pending:
+                rid, pr = pending[0]
+                slot = self.add_request(pr)
+                if slot is None:
+                    break
+                slot_of[slot] = rid
+                pending.pop(0)
+            key, sub = jax.random.split(key)
+            emitted = self.step(sub)
+            for slot, tok in emitted.items():
+                rid = slot_of[slot]
+                outputs[rid].append(tok)
+                budget[rid] -= 1
+                if budget[rid] <= 0:
+                    self.live[slot] = False
+            steps += 1
+            if steps > 10_000:
+                raise RuntimeError("serve loop did not terminate")
+        return [outputs[i] for i in range(len(prompts))]

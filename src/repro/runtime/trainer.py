@@ -1,0 +1,144 @@
+"""Fault-tolerant training loop.
+
+Features exercised by tests/test_fault_tolerance.py:
+  * periodic async checkpoints (atomic, retained N)
+  * auto-resume from the latest valid checkpoint (params + opt state + step)
+  * failure injection (crash at step K) + supervised restart
+  * straggler watchdog: per-step wall-time EMA; steps slower than
+    `straggler_factor` x EMA are logged and counted (on a real pod the hook
+    triggers work re-sharding / hot-spare swap; here it is observable state)
+  * elastic re-mesh: resume onto a different mesh (shardings recomputed)
+  * deterministic data sharding keyed by (seed, step) so restarts replay
+    exactly (repro.data.tokens)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    fail_at_step: int = -1          # failure injection (once)
+    straggler_factor: float = 3.0
+    metrics_path: str | None = None
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable,
+                 params: Any, opt_state: Any, data_it,
+                 shardings: tuple | None = None):
+        # data_it: an iterator, or a callable step -> batch (deterministic
+        # replay across restarts — a restarted worker re-reads its shard)
+        self.cfg = cfg
+        self.step_fn = step_fn                   # (params, opt, batch, step)
+        self.params = params
+        self.opt_state = opt_state
+        self.data_it = data_it
+        self.shardings = shardings               # (param_sh, opt_sh) for re-mesh
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        self.step = 0
+        self.stragglers = 0
+        self._ema = None
+        self._failed_once = False
+        self.metrics: list[dict] = []
+
+    # -- checkpoint/restore -------------------------------------------------
+
+    def save(self):
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"step": self.step})
+
+    def try_resume(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest < 0:
+            return False
+        sh = None
+        if self.shardings is not None:
+            sh = {"params": self.shardings[0], "opt": self.shardings[1]}
+        tree, step = self.ckpt.restore(
+            {"params": self.params, "opt": self.opt_state}, sh)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+        return True
+
+    # -- loop -----------------------------------------------------------------
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        while self.step < cfg.total_steps:
+            if self.step == cfg.fail_at_step and not self._failed_once:
+                self._failed_once = True
+                raise InjectedFailure(f"injected failure at step {self.step}")
+            if callable(self.data_it):
+                batch = self.data_it(self.step)   # step-keyed: replay-exact
+            else:
+                batch = next(self.data_it)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, m = self.step_fn(
+                self.params, self.opt_state, batch, self.step)
+            jax.block_until_ready(m)
+            dt = time.perf_counter() - t0
+            self._watch_straggler(dt)
+            self.step += 1
+            if self.step % cfg.ckpt_every == 0:
+                self.save()
+            if self.step % cfg.log_every == 0 or self.step == cfg.total_steps:
+                rec = {"step": self.step, "dt_s": round(dt, 4),
+                       **{k: float(np.asarray(v)) for k, v in m.items()}}
+                self.metrics.append(rec)
+                if cfg.metrics_path:
+                    with open(cfg.metrics_path, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+        self.save()
+        self.ckpt.wait()
+        return {"final_step": self.step, "stragglers": self.stragglers,
+                "metrics": self.metrics}
+
+    def _watch_straggler(self, dt: float):
+        if self._ema is None:
+            self._ema = dt
+        if dt > self.cfg.straggler_factor * self._ema:
+            self.stragglers += 1          # real pod: trigger replacement here
+        self._ema = 0.9 * self._ema + 0.1 * dt
+
+
+def run_with_restart(make_trainer: Callable[..., Trainer],
+                     max_restarts: int = 3) -> dict:
+    """Supervisor: restart-from-checkpoint on failure (the pod controller).
+
+    `make_trainer(attempt)` lets callers disarm one-shot failure injection
+    on restarted attempts (a real crash happens once, not on every retry)."""
+    restarts = 0
+    while True:
+        try:
+            trainer = make_trainer(restarts)
+        except TypeError:
+            trainer = make_trainer()
+        trainer.try_resume()
+        try:
+            out = trainer.run()
+            out["restarts"] = restarts
+            return out
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

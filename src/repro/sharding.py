@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules: DP / FSDP(ZeRO-3) / TP / EP / SP.
+
+One rule-set serves every architecture because ``pspec_for`` drops
+non-divisible assignments per-tensor (e.g. gemma2's 8 query heads on a
+16-way model axis fall back to replicated heads while its d_ff/vocab still
+shard 16-way).
+
+Axis conventions
+  batch       activations' batch dim             -> (pod, data)
+  vocab       embedding/logits vocab dim         -> model   (2D-sharded tables)
+  embed       param tables' d_model dim          -> fsdp axes (ZeRO-3)
+  embed_tp    weight-matrix reduction dim        -> fsdp axes
+  q_out/kv_out/mlp/mlp_e/lru  weight output dims -> model   (TP)
+  experts     expert dim of MoE stacks           -> model   (EP)
+  expert_cap  capacity dim of dispatch buffers   -> data
+  kv_seq      KV-cache sequence dim              -> model   (SP / flash-decoding)
+  heads       per-head params (rwkv u, ...)      -> model
+"""
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ShardCtx, ShardingRules, pspec_for
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool | None = None,
+               pure_dp: bool = False) -> ShardingRules:
+    if fsdp is None:
+        fsdp = cfg.fsdp
+    fsdp_axes = tuple(a for a in cfg.fsdp_axes if a in mesh.shape) if fsdp else ()
+    if pure_dp:
+        # batch over the whole mesh; no tensor parallelism (params replicated
+        # over 'model', FSDP over 'data' kept)
+        rules = {
+            "batch": batch_axes(mesh) + ("model",),
+            "seq": None, "vocab": None,
+            "embed": fsdp_axes or None, "embed_tp": fsdp_axes or None,
+            "q_out": None, "kv_out": None, "mlp": None, "mlp_e": None,
+            "experts": None, "experts_r": None, "expert_cap": None,
+            "experts_cap_flat": None, "embed_moe": None, "data_blk": None,
+            "heads": None, "head_dim": None, "kv_heads": None, "kv_seq": None,
+            "lru": None, "lru_tp": None, "layers": None, "vit": None,
+        }
+        return ShardingRules(rules)
+    rules = {
+        "batch": batch_axes(mesh),
+        "seq": None,
+        "vocab": "model",
+        "embed": fsdp_axes or None,
+        "embed_tp": fsdp_axes or None,
+        "q_out": "model",
+        "kv_out": "model",
+        "mlp": "model",
+        "mlp_e": None,
+        "experts": "model",
+        "experts_r": None,
+        "expert_cap": "data",
+        "experts_cap_flat": "model",
+        "embed_moe": "data",
+        "data_blk": ("pod", "data"),
+        "heads": "model",
+        "head_dim": None,
+        "kv_heads": "model",
+        "kv_seq": "model",
+        "lru": "model",
+        "lru_tp": None,
+        "layers": None,
+        "vit": None,
+    }
+    return ShardingRules(rules)
+
+
+def make_ctx(cfg: ModelConfig, mesh: Mesh) -> ShardCtx:
+    return ShardCtx(mesh, make_rules(cfg, mesh))
+
+
+# Cache leaf sharding: axes by rank & role.
+_CACHE_AXES = {
+    # kv caches [B, S, KV, Dh]
+    4: ("batch", "kv_seq", "kv_heads", "head_dim"),
+    # rwkv state [B, H, D, D] handled separately (see cache_pspec)
+    # token-shift / lru h [B, d]
+    2: ("batch", "lru"),
+    # conv state [B, K-1, w]
+    3: ("batch", None, "lru"),
+}
+
+
+def cache_pspec(path_leafname: str, shape, rules: ShardingRules, mesh: Mesh,
+                scanned: bool) -> P:
+    """PartitionSpec for one cache leaf. `scanned` -> leading layer dim."""
+    rank = len(shape) - (1 if scanned else 0)
+    if path_leafname == "S" and rank == 4:          # rwkv state [B,H,D,D]
+        axes = ("batch", "heads", None, None)
+    else:
+        axes = _CACHE_AXES.get(rank, (None,) * rank)
+        if rank == 4 and path_leafname not in ("k", "v"):
+            axes = ("batch", None, None, None)
+    if scanned:
+        axes = (None,) + axes
+    return pspec_for(axes, shape, rules, mesh)
+
+
+def cache_shardings(cache_abs, cfg: ModelConfig, mesh: Mesh):
+    """NamedSharding tree for a cache pytree (from eval_shape)."""
+    rules = make_rules(cfg, mesh)
+
+    def leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        return NamedSharding(
+            mesh, cache_pspec(name, x.shape, rules, mesh, cfg.scan_layers))
+
+    import jax
+    return jax.tree_util.tree_map_with_path(leaf, cache_abs)

@@ -1,0 +1,145 @@
+"""Sharding rules, MoE dispatch-vs-dense oracle, gradient compression,
+diag-RTRL exactness, data determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, smoke_config
+from repro.models.module import ShardingRules, pspec_for
+
+
+# --- sharding rules ----------------------------------------------------------
+
+def test_pspec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules({"heads": "model", "mlp": "model"})
+    # 8 heads on a 16-way axis -> dropped; use a fake big mesh via shape math
+    import repro.models.module as M
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = pspec_for(("heads", "mlp"), (8, 9216), rules, FakeMesh())
+    assert spec == P(None, "model")
+
+
+def test_pspec_axis_used_once():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    rules = ShardingRules({"a": "model", "b": "model"})
+    spec = pspec_for(("a", "b"), (32, 32), rules, FakeMesh())
+    assert spec == P("model")        # second use dropped (trailing None trimmed)
+
+
+# --- MoE: dispatch vs dense oracle ------------------------------------------
+
+@pytest.mark.parametrize("cf", [1.5, 8.0])
+def test_moe_dispatch_matches_dense(cf):
+    """With ample capacity the sort-based dispatch must equal the run-every-
+    expert oracle; with tight capacity it may drop tokens (subset check)."""
+    from repro.models import moe as moe_lib
+    cfg = smoke_config(get_config("olmoe-1b-7b")).replace(
+        capacity_factor=cf, moe_impl="dispatch")
+    key = jax.random.key(0)
+    from repro.models.module import materialize
+    p = materialize(moe_lib.moe_specs(cfg), key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model))
+    y_disp, aux1 = moe_lib.moe_block(cfg, p, x)
+    y_dense, aux2 = moe_lib.moe_block(cfg.replace(moe_impl="dense"), p, x)
+    if cf >= 8.0:     # capacity >= tokens: nothing dropped -> exact match
+        np.testing.assert_allclose(np.asarray(y_disp), np.asarray(y_dense),
+                                   atol=1e-4, rtol=1e-4)
+    assert abs(float(aux1 - aux2)) < 1e-5
+
+
+def test_moe_aux_loss_uniform_router_is_one():
+    from repro.models.moe import load_balance_loss
+    T, E, k = 128, 8, 2
+    probs = jnp.full((T, E), 1.0 / E)
+    idx = jnp.stack([jnp.arange(T) % E, (jnp.arange(T) + 1) % E], 1)
+    assert abs(float(load_balance_loss(probs, idx, E)) - 1.0) < 1e-5
+
+
+# --- gradient compression ----------------------------------------------------
+
+def test_compressed_psum_error_feedback():
+    """Mean over the pod axis; with error feedback the *accumulated* update
+    over steps converges to the true accumulated mean."""
+    from repro.runtime.compression import compressed_psum, init_error_state
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    g = {"w": jnp.linspace(-1.0, 1.0, 64).reshape(8, 8)}
+    err = init_error_state(g)
+    total_hat = jnp.zeros((8, 8))
+    for _ in range(8):
+        g_hat, err = compressed_psum(g, err, mesh)
+        total_hat = total_hat + g_hat["w"]
+    total_true = 8 * g["w"]
+    # error feedback keeps the accumulated deviation at quantization scale
+    assert float(jnp.max(jnp.abs(total_hat - total_true))) < 0.05
+
+
+def test_int8_quant_roundtrip_bounds():
+    from repro.runtime.compression import _quant_int8
+    x = jax.random.normal(jax.random.key(0), (128,))
+    q, s = _quant_int8(x)
+    err = jnp.abs(q.astype(jnp.float32) * s - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+# --- diagonal-recurrence exact RTRL ------------------------------------------
+
+def test_diag_rtrl_matches_bptt():
+    from repro.core import diag_rtrl as D
+    cfg = D.DiagCellConfig(n=16, n_in=8, n_out=3)
+    params = D.init_params(cfg, jax.random.key(0))
+    xs = jax.random.normal(jax.random.key(1), (12, 4, 8))
+    labels = jnp.array([0, 1, 2, 0])
+    loss_r, grads_r = D.rtrl_loss_and_grads(cfg, params, xs, labels)
+    loss_b, grads_b = D.bptt_loss_and_grads(cfg, params, xs, labels)
+    assert abs(float(loss_r - loss_b)) < 1e-5
+    for k in ("Wx", "Wa", "lam"):
+        np.testing.assert_allclose(np.asarray(grads_r[k]),
+                                   np.asarray(grads_b[k]),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# --- data determinism ---------------------------------------------------------
+
+def test_token_stream_deterministic_and_sharded():
+    from repro.data.tokens import synthetic_token_batches
+    a = next(synthetic_token_batches(8, 16, 1000, seed=5))
+    b = next(synthetic_token_batches(8, 16, 1000, seed=5))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    s0 = next(synthetic_token_batches(8, 16, 1000, seed=5, shard=0, n_shards=2))
+    s1 = next(synthetic_token_batches(8, 16, 1000, seed=5, shard=1, n_shards=2))
+    np.testing.assert_array_equal(
+        np.concatenate([s0["tokens"], s1["tokens"]]).reshape(2, 4, 16)
+        .swapaxes(0, 1).reshape(8, 16), a["tokens"])
+
+
+def test_spiral_dataset_properties():
+    from repro.data.spiral import spiral_dataset
+    xs, labels = spiral_dataset(2000, T=17)
+    assert xs.shape == (2000, 17, 2)
+    assert 0.45 < labels.mean() < 0.55
+    # orientation: cross product sign of consecutive displacement vectors
+    v = np.diff(xs, axis=1)
+    cross = v[:, :-1, 0] * v[:, 1:, 1] - v[:, :-1, 1] * v[:, 1:, 0]
+    sign = (np.median(cross, axis=1) > 0).astype(int)
+    assert (sign == labels).mean() > 0.95
+
+
+# --- opt-state sharding mirror -------------------------------------------------
+
+def test_mirror_opt_shardings():
+    from repro.launch.steps import mirror_opt_shardings
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import NamedSharding
+    p_abs = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    p_sh = {"w": NamedSharding(mesh, P("data", "model"))}
+    opt_abs = {"m": {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)},
+               "f": {"w": {"vr": jax.ShapeDtypeStruct((8,), jnp.float32)}}}
+    sh = mirror_opt_shardings(opt_abs, p_abs, p_sh, mesh)
+    assert sh["m"]["w"].spec == P("data", "model")
+    assert sh["f"]["w"]["vr"].spec == P()

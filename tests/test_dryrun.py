@@ -1,0 +1,32 @@
+"""Integration test for the multi-pod dry-run launcher (subprocess: the
+512-device XLA_FLAGS must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.mark.parametrize("arch,shape,mesh", [
+    ("rwkv6-3b", "long_500k", "single"),
+    ("recurrentgemma-9b", "long_500k", "multi"),
+])
+def test_dryrun_cell_compiles(tmp_path, arch, shape, mesh):
+    env = dict(os.environ)
+    root = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(root / "src")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp_path),
+         "--skip-parts"],
+        env=env, capture_output=True, text=True, timeout=420, cwd=root)
+    assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
+    rec = json.loads(next(tmp_path.glob("*.json")).read_text())
+    assert rec["status"] == "ok"
+    assert rec["mesh_shape"]["model"] == 16
+    if mesh == "multi":
+        assert rec["mesh_shape"]["pod"] == 2
+    assert rec["cost_analysis"]["flops"] > 0
+    assert "roofline" in rec and rec["roofline"]["n_chips"] in (256, 512)

@@ -1,0 +1,81 @@
+"""End-to-end fault tolerance: crash, restart, resume, identical results."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import make_optimizer
+from repro.runtime.trainer import (InjectedFailure, Trainer, TrainerConfig,
+                                   run_with_restart)
+
+
+def _quad_setup(tmp_path, fail_at=-1, steps=12):
+    opt = make_optimizer("adamw", lr=1e-2)
+
+    def step_fn(params, opt_state, batch, step):
+        def loss(p):
+            return jnp.mean(jnp.square(p["w"] @ batch["x"] - batch["y"]))
+        lv, grads = jax.value_and_grad(loss)(params)
+        params, opt_state = opt.update(grads, opt_state, params,
+                                       jnp.int32(step))
+        return params, opt_state, {"loss": lv}
+
+    def data_at(step):
+        key = jax.random.key(step)           # deterministic per step
+        return {"x": jax.random.normal(key, (4, 4)),
+                "y": jax.random.normal(jax.random.fold_in(key, 1), (3, 4))}
+
+    def make_trainer(attempt=0):
+        params = {"w": jnp.ones((3, 4))}
+        opt_state = jax.jit(opt.init)(params)
+        cfg = TrainerConfig(total_steps=steps, ckpt_every=4,
+                            ckpt_dir=str(tmp_path),
+                            fail_at_step=fail_at if attempt == 0 else -1,
+                            log_every=1)
+        return Trainer(cfg, step_fn, params, opt_state, data_at)
+
+    return make_trainer
+
+
+def test_crash_restart_resume(tmp_path):
+    make_trainer = _quad_setup(tmp_path, fail_at=7)
+    out = run_with_restart(make_trainer)
+    assert out["final_step"] == 12
+    assert out["restarts"] == 1
+
+
+def test_restart_is_deterministic(tmp_path):
+    """Training with a crash+resume produces the same final params as an
+    uninterrupted run (deterministic data keyed by step + exact resume)."""
+    mk_a = _quad_setup(tmp_path / "a", fail_at=7)
+    out_a = run_with_restart(mk_a)
+    mk_b = _quad_setup(tmp_path / "b", fail_at=-1)
+    out_b = run_with_restart(mk_b)
+    # compare final checkpoints
+    from repro.checkpoint import load_checkpoint
+    like = {"params": {"w": jnp.zeros((3, 4))},
+            "opt": {"m": {"w": jnp.zeros((3, 4))}, "v": {"w": jnp.zeros((3, 4))}}}
+    ta, _ = load_checkpoint(tmp_path / "a", like)
+    tb, _ = load_checkpoint(tmp_path / "b", like)
+    # resume restarts from step 4 (last ckpt < 7) and replays 4..12
+    np.testing.assert_allclose(np.asarray(ta["params"]["w"]),
+                               np.asarray(tb["params"]["w"]), atol=1e-6)
+
+
+def test_exceeding_max_restarts_raises(tmp_path):
+    def make_always_fail(attempt=0):
+        mk = _quad_setup(tmp_path, fail_at=2)
+        t = mk(0)                         # fail armed every attempt
+        return t
+
+    import pytest
+    with pytest.raises(InjectedFailure):
+        run_with_restart(make_always_fail, max_restarts=2)
+
+
+def test_straggler_counter(tmp_path):
+    import time
+    make_trainer = _quad_setup(tmp_path, steps=6)
+    t = make_trainer()
+    t.cfg.straggler_factor = 0.0          # every step counts as a straggler
+    out = t.run()
+    assert out["stragglers"] >= 5

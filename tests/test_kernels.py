@@ -1,0 +1,174 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes, dtypes and sparsity levels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import compact, ops, ref
+
+
+@pytest.mark.parametrize("B,n,P", [(1, 8, 128), (4, 32, 256), (2, 64, 384),
+                                   (3, 24, 130)])
+@pytest.mark.parametrize("beta", [0.0, 0.5, 0.9])
+def test_influence_kernel_matches_ref(B, n, P, beta):
+    key = jax.random.key(int(B * n + P + beta * 100))
+    ks = jax.random.split(key, 6)
+    hp = jax.random.uniform(ks[0], (B, n))
+    hp = jnp.where(jax.random.uniform(ks[1], (B, n)) < beta, 0.0, hp)
+    Jhat = jax.random.normal(ks[2], (B, n, n))
+    M = jax.random.normal(ks[3], (B, n, P))
+    M = jnp.where(jax.random.uniform(ks[4], (B, n, 1)) < 0.3, 0.0, M)
+    Mbar = jax.random.normal(ks[5], (B, n, P))
+    out_k = ops.influence_update(hp, Jhat, M, Mbar)
+    out_r = ref.influence_ref(hp, Jhat, M, Mbar)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("omega", [0.0, 0.6, 0.9])
+def test_influence_kernel_with_param_masks(omega):
+    key = jax.random.key(3)
+    B, n, P = 2, 32, 256
+    ks = jax.random.split(key, 6)
+    jmask = (jax.random.uniform(ks[0], (n, n)) > omega).astype(jnp.float32)
+    col_mask = (jax.random.uniform(ks[1], (P,)) > omega).astype(jnp.float32)
+    hp = jax.random.uniform(ks[2], (B, n))
+    Jhat = jax.random.normal(ks[3], (B, n, n)) * jmask.T[None]
+    M = jax.random.normal(ks[4], (B, n, P)) * col_mask[None, None]
+    Mbar = jax.random.normal(ks[5], (B, n, P)) * col_mask[None, None]
+    out_k = ops.influence_update(hp, Jhat, M, Mbar, jmask=jmask,
+                                 col_mask=col_mask)
+    out_r = ref.influence_ref(hp, Jhat, M, Mbar)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("B,n,m", [(2, 16, 128), (4, 64, 256), (1, 40, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_event_matmul_matches_ref(B, n, m, dtype):
+    key = jax.random.key(B + n + m)
+    a = (jax.random.uniform(key, (B, n)) > 0.7).astype(dtype)
+    R = jax.random.normal(jax.random.fold_in(key, 1), (n, m)).astype(dtype)
+    y_k = ops.event_matmul(a, R)
+    y_r = ref.event_matmul_ref(a, R)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("steps", [1, 3])
+def test_compact_influence_exact_when_capacity_sufficient(steps):
+    key = jax.random.key(0)
+    B, n, P, K = 3, 24, 64, 20
+    J = jax.random.normal(jax.random.fold_in(key, 99), (B, n, n))
+    M_dense = jnp.zeros((B, n, P))
+    Mc = compact.compact_init(B, K, P)
+    for t in range(steps):
+        ks = jax.random.split(jax.random.fold_in(key, t), 3)
+        hp = jnp.where(jax.random.uniform(ks[0], (B, n)) < 0.5, 0.0,
+                       jax.random.uniform(ks[1], (B, n)))
+        Mbar = jax.random.normal(ks[2], (B, n, P)) * (hp != 0)[..., None]
+        M_dense = ref.influence_ref(hp, J, M_dense, Mbar)
+        Mc, overflow = compact.compact_influence_step(hp, J, Mc, Mbar, K=K)
+        assert int(overflow.max()) == 0
+    np.testing.assert_allclose(
+        np.asarray(compact.compact_to_dense(Mc, n)), np.asarray(M_dense),
+        atol=1e-5, rtol=1e-5)
+
+
+def test_compact_overflow_reported():
+    B, n, P, K = 1, 16, 8, 4
+    hp = jnp.ones((B, n))           # all rows active >> capacity
+    J = jnp.zeros((B, n, n))
+    Mc = compact.compact_init(B, K, P)
+    Mc, overflow = compact.compact_influence_step(
+        hp, J, Mc, jnp.ones((B, n, P)), K=K)
+    assert int(overflow[0]) == n - K
+
+
+# --- chunked flash attention vs naive oracle --------------------------------
+
+@pytest.mark.parametrize("S,H,KV,causal,window",
+                         [(64, 4, 4, True, 0), (64, 4, 2, True, 0),
+                          (64, 4, 2, False, 0), (128, 4, 2, True, 32),
+                          (96, 6, 2, True, 0)])
+def test_chunked_flash_matches_naive(S, H, KV, causal, window):
+    from repro.configs import get_config, smoke_config
+    from repro.models.attention import flash_attention
+    cfg = smoke_config(get_config("yi-6b")).replace(
+        n_heads=H, n_kv_heads=KV, head_dim=16, attn_q_chunk=16,
+        attn_kv_chunk=32, local_window=window)
+    key = jax.random.key(0)
+    B = 2
+    q = jax.random.normal(key, (B, S, H, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, 16))
+    out = flash_attention(cfg, q, k, v, causal=causal, window=window)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_chunked_flash_grads_flow():
+    """lax.cond block skipping must stay differentiable."""
+    from repro.configs import get_config, smoke_config
+    from repro.models.attention import flash_attention
+    cfg = smoke_config(get_config("yi-6b")).replace(
+        n_heads=2, n_kv_heads=2, head_dim=8, attn_q_chunk=8, attn_kv_chunk=8)
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (1, 32, 2, 8))
+
+    def f(q):
+        return flash_attention(cfg, q, q, q, causal=True).sum()
+
+    g = jax.grad(f)(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.abs(g).sum()) > 0
+
+
+# --- WKV chunked form vs sequential recurrence ------------------------------
+
+@pytest.mark.parametrize("L,D", [(8, 8), (16, 16)])
+def test_wkv_chunk_matches_sequential(L, D):
+    from repro.models.rwkv import wkv_chunk
+    key = jax.random.key(1)
+    B, H = 2, 3
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, H, L, D))
+    k = jax.random.normal(ks[1], (B, H, L, D))
+    v = jax.random.normal(ks[2], (B, H, L, D))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, L, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    S0 = jax.random.normal(jax.random.fold_in(key, 9), (B, H, D, D))
+    o_c, S_c = wkv_chunk(r, k, v, logw, u, S0)
+    o_r, S_r = ref.wkv_chunk_ref(r, k, v, logw, u, S0)
+    np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_r),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S_r),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("T,D,L", [(32, 8, 8), (64, 16, 16)])
+def test_wkv_pallas_kernel_matches_sequential(T, D, L):
+    """State-in-VMEM Pallas WKV (interpret mode) vs the exact recurrence."""
+    from repro.kernels.wkv import wkv_pallas
+    key = jax.random.key(0)
+    B, H = 2, 3
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, H, T, D))
+    k = jax.random.normal(ks[1], (B, H, T, D))
+    v = jax.random.normal(ks[2], (B, H, T, D))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, T, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    o_k = wkv_pallas(r, k, v, logw, u, chunk=L)
+    S = jnp.zeros((B, H, D, D))
+    outs = []
+    for c in range(T // L):
+        sl = slice(c * L, (c + 1) * L)
+        o, S = ref.wkv_chunk_ref(r[:, :, sl], k[:, :, sl], v[:, :, sl],
+                                 logw[:, :, sl], u, S)
+        outs.append(o)
+    o_r = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=5e-4, rtol=5e-4)

@@ -1,0 +1,70 @@
+"""Optimizer + gradient-utility tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, clip_by_global_norm, lion,
+                         make_optimizer, microbatch_grads, sgdm)
+
+
+def _quad_losses(opt, steps=150):
+    params = {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array(4.0)}
+    state = opt.init(params)
+    losses = []
+
+    def loss_fn(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.square(p["b"])
+
+    for i in range(steps):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params, jnp.int32(i))
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("opt", [adamw(1e-1), lion(5e-2), adafactor(5e-1),
+                                 sgdm(1e-1)], ids=["adamw", "lion",
+                                                   "adafactor", "sgdm"])
+def test_optimizers_descend_quadratic(opt):
+    losses = _quad_losses(opt)
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - np.sqrt(1000.0)) < 1e-3
+    from repro.optim import global_norm
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_microbatch_grads_match_full_batch():
+    key = jax.random.key(0)
+    params = {"w": jax.random.normal(key, (8, 4))}
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 1), (16, 8)),
+             "y": jax.random.normal(jax.random.fold_in(key, 2), (16, 4))}
+
+    def loss(p, b):
+        return jnp.mean(jnp.square(b["x"] @ p["w"] - b["y"]))
+
+    l1, g1 = microbatch_grads(loss, params, batch, 1)
+    l4, g4 = microbatch_grads(loss, params, batch, 4)
+    assert abs(float(l1 - l4)) < 1e-6
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g4["w"]),
+                               atol=1e-6)
+
+
+def test_lion_state_is_2_bytes_per_param():
+    params = {"w": jnp.zeros((128, 128), jnp.bfloat16)}
+    state = lion().init(params)
+    leaves = jax.tree.leaves(state)
+    assert all(l.dtype == jnp.bfloat16 for l in leaves)
+    assert sum(l.size for l in leaves) == 128 * 128   # momentum only
+
+
+def test_adafactor_state_is_sublinear():
+    params = {"w": jnp.zeros((256, 512))}
+    state = adafactor().init(params)
+    n_state = sum(l.size for l in jax.tree.leaves(state))
+    assert n_state == 256 + 512      # factored second moment only

@@ -1,0 +1,90 @@
+"""The paper's central claim: these savings come WITHOUT approximation.
+
+BPTT, generic RTRL (jacrev oracle) and structured sparse RTRL must produce
+the same loss and the same gradients to float32 tolerance, with and without
+parameter-sparsity masks; SnAp-1/2 are approximations and must NOT match in
+general (but SnAp's error must shrink as the kept pattern grows).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bptt, cells, rtrl, snap, sparse_rtrl
+from repro.core.cells import EGRUConfig
+
+
+def _setup(kind, dense=False, seed=0, n=8, T=7, B=4, n_in=3):
+    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=2, kind=kind, dense=dense)
+    params = cells.init_params(cfg, jax.random.key(seed))
+    xs = jax.random.normal(jax.random.key(seed + 1), (T, B, n_in))
+    labels = jnp.array([i % 2 for i in range(B)])
+    return cfg, params, xs, labels
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("kind", ["rnn", "gru"])
+@pytest.mark.parametrize("dense", [False, True])
+def test_bptt_rtrl_sparse_identical(kind, dense):
+    cfg, params, xs, labels = _setup(kind, dense)
+    l1, g1, _ = bptt.bptt_loss_and_grads(cfg, params, xs, labels)
+    l2, g2, _ = rtrl.rtrl_loss_and_grads(cfg, params, xs, labels)
+    l3, g3, _ = sparse_rtrl.sparse_rtrl_loss_and_grads(cfg, params, xs, labels)
+    assert abs(float(l1 - l2)) < 1e-5 and abs(float(l1 - l3)) < 1e-5
+    assert _maxdiff(g1, g2) < 1e-5
+    assert _maxdiff(g2, g3) < 1e-5
+
+
+@pytest.mark.parametrize("kind", ["rnn", "gru"])
+@pytest.mark.parametrize("sparsity", [0.5, 0.9])
+def test_exactness_with_parameter_masks(kind, sparsity):
+    cfg, params, xs, labels = _setup(kind)
+    masks = sparse_rtrl.make_masks(cfg, jax.random.key(7), sparsity)
+    params = sparse_rtrl.apply_masks(params, masks)
+    l1, g1, _ = bptt.bptt_loss_and_grads(cfg, params, xs, labels)
+    l3, g3, _ = sparse_rtrl.sparse_rtrl_loss_and_grads(cfg, params, xs, labels,
+                                                       masks)
+    assert abs(float(l1 - l3)) < 1e-5
+    # gradients agree on every SURVIVING parameter (masked grads are zeroed
+    # by the masked optimizer; BPTT produces nonzero grads for pruned params)
+    g1m = sparse_rtrl.apply_masks(g1, masks)
+    g3m = sparse_rtrl.apply_masks(g3, masks)
+    assert _maxdiff(g1m, g3m) < 1e-5
+
+
+def test_snap_is_approximate_but_ordered():
+    cfg, params, xs, labels = _setup("rnn")
+    _, g_exact, _ = bptt.bptt_loss_and_grads(cfg, params, xs, labels)
+    _, g1, _ = snap.snap_loss_and_grads(cfg, params, xs, labels, order=1)
+    _, g2, _ = snap.snap_loss_and_grads(cfg, params, xs, labels, order=2)
+    d1 = _maxdiff(g_exact, g1)
+    d2 = _maxdiff(g_exact, g2)
+    assert d1 > 1e-6        # SnAp-1 differs from the exact gradient
+    # SnAp-2 with a dense pattern == exact RTRL (pattern covers everything)
+    assert d2 < 1e-5
+
+
+def test_online_rtrl_reduces_loss():
+    cfg, params, xs, labels = _setup("gru", T=20, B=8)
+    from repro.optim import make_optimizer
+    opt = make_optimizer("adamw", lr=5e-3)
+    opt_state = jax.jit(opt.init)(params)
+    p1, s1, step, loss_first = rtrl.rtrl_online_train(
+        cfg, params, xs, labels, opt, opt_state, jnp.int32(0))
+    for _ in range(10):
+        p1, s1, step, loss_last = rtrl.rtrl_online_train(
+            cfg, p1, xs, labels, opt, s1, step)
+    assert float(loss_last) < float(loss_first)
+
+
+def test_rtrl_memory_independent_of_T():
+    """RTRL state (influence matrix) has the same shape for any T."""
+    cfg = EGRUConfig(n_hidden=8, n_in=3)
+    M = sparse_rtrl.init_influence(cfg, batch=4)
+    sizes = {g: m.shape for g, m in M.items()}
+    assert all("17" not in str(s) for s in sizes.values())
+    n, m1 = cfg.n_hidden, cfg.n_in + cfg.n_hidden + 1
+    assert M["u"].shape == (4, n, n, m1)

@@ -1,0 +1,96 @@
+"""Scaled (row-compact, shardable) sparse RTRL: exactness + invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bptt, cells
+from repro.core import scaled_rtrl as SR
+
+
+def _setup(n=48, n_in=12, B=3, capacity=1.0, sparsity=0.8, seed=0):
+    cfg = SR.ScaledRTRLConfig(n=n, n_in=n_in, batch=B,
+                              beta_capacity=capacity, sparsity=sparsity)
+    params, masks = SR.init_params(cfg, jax.random.key(seed))
+    return cfg, params, masks
+
+
+def test_compact_step_equals_dense_step():
+    cfg, params, _ = _setup()
+    w = cells.rec_param_tree(params)
+    xs = jax.random.normal(jax.random.key(1), (6, cfg.batch, cfg.n_in))
+    state = SR.init_state(cfg)
+    a = jnp.zeros((cfg.batch, cfg.n))
+    M = jnp.zeros((cfg.batch, cfg.n, cfg.n, cfg.m))
+    for t in range(6):
+        state, ov = SR.compact_step(cfg, w, state, xs[t])
+        a, M = SR.dense_step(cfg, w, a, M, xs[t])
+        assert int(ov.max()) == 0
+    np.testing.assert_array_equal(np.asarray(state["a"]), np.asarray(a))
+    np.testing.assert_allclose(
+        np.asarray(SR.compact_to_dense_M(cfg, state)), np.asarray(M),
+        atol=1e-6)
+
+
+def test_scaled_rtrl_grads_match_bptt():
+    cfg, params, _ = _setup()
+    xs = jax.random.normal(jax.random.key(2), (8, cfg.batch, cfg.n_in))
+    labels = jnp.arange(cfg.batch) % cfg.n_out
+    loss_c, grads_c = SR.rtrl_grads(cfg, params, xs, labels)
+    loss_b, grads_b, _ = bptt.bptt_loss_and_grads(cfg.cell_cfg(), params,
+                                                  xs, labels)
+    assert abs(float(loss_c - loss_b)) < 1e-5
+    for gc, gb in zip(jax.tree.leaves(grads_c), jax.tree.leaves(grads_b)):
+        np.testing.assert_allclose(np.asarray(gc), np.asarray(gb),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_capacity_is_static_and_memory_beta_scaled():
+    cfg = SR.ScaledRTRLConfig(n=1024, beta_capacity=0.25)
+    st = jax.eval_shape(lambda: SR.init_state(cfg))
+    assert st["vals"].shape[1] == cfg.K
+    assert cfg.K <= 0.27 * cfg.n    # memory = beta~ * n p, not n p
+
+
+def test_compact_flop_scaling():
+    """FLOP count of the compact update scales as K^2 (beta~^2 n^2 p)."""
+    def flops_for(capacity):
+        cfg, params, _ = _setup(n=64, capacity=capacity)
+        w = cells.rec_param_tree(params)
+        x = jnp.zeros((cfg.batch, cfg.n_in))
+        st = SR.init_state(cfg)
+        c = jax.jit(lambda s, x: SR.compact_step(cfg, w, s, x)[0]) \
+            .lower(st, x).compile()
+        return (c.cost_analysis() or {}).get("flops", 0.0), cfg.K
+
+    f_full, k_full = flops_for(1.0)
+    f_half, k_half = flops_for(0.5)
+    ratio = f_half / f_full
+    ideal = (k_half / k_full) ** 2
+    assert ratio < 0.45, (ratio, ideal)   # ~beta~^2, some fixed overhead
+
+
+def test_distributed_step_shards_without_collectives():
+    """On a small host mesh: the influence update emits no collectives."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.costing import parse_collective_bytes
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_host_mesh()
+    cfg, params, _ = _setup(n=32)
+    state_sh, _ = SR.sharded_step_specs(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+
+    def step(params, state, x):
+        w = cells.rec_param_tree(params)
+        return SR.compact_step(cfg, w, state, x)[0]
+
+    params_abs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    st_abs = jax.eval_shape(lambda: SR.init_state(cfg))
+    x_abs = jax.ShapeDtypeStruct((cfg.batch, cfg.n_in), jnp.float32)
+    compiled = jax.jit(step, in_shardings=(
+        jax.tree.map(lambda _: rep, params_abs), state_sh,
+        NamedSharding(mesh, P("data", None)))).lower(
+        params_abs, st_abs, x_abs).compile()
+    coll = parse_collective_bytes(compiled.as_text())
+    assert sum(coll.values()) == 0, coll

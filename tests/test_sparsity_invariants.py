@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) for the paper's structural claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cells, sparse_rtrl
+from repro.core.cells import EGRUConfig
+from repro.core.costs import savings_factor, tpu_block_factor
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000), kind=st.sampled_from(["rnn", "gru"]),
+       eps=st.floats(0.05, 0.6))
+def test_influence_rows_zero_where_hp_zero(seed, kind, eps):
+    """Eq. (10): beta(t) x n rows of M(t) are exactly zero."""
+    cfg = EGRUConfig(n_hidden=8, n_in=3, kind=kind, eps=eps)
+    key = jax.random.key(seed)
+    params = cells.init_params(cfg, key)
+    w = cells.rec_param_tree(params)
+    a = (jax.random.uniform(jax.random.fold_in(key, 1), (4, 8)) > 0.5) * 1.0
+    x = jax.random.normal(jax.random.fold_in(key, 2), (4, 3))
+    a_new, hp, Jhat, mbar = sparse_rtrl.cell_partials(cfg, w, a, x)
+    M_prev = sparse_rtrl.init_influence(cfg, 4)
+    M_prev = jax.tree.map(
+        lambda m: jax.random.normal(jax.random.fold_in(key, 3), m.shape), M_prev)
+    M = sparse_rtrl.influence_update(cfg, M_prev, hp, Jhat, mbar)
+    zero_rows = np.asarray(hp == 0.0)
+    for g, Mg in M.items():
+        flat = np.asarray(Mg).reshape(Mg.shape[0], Mg.shape[1], -1)
+        assert np.all(flat[zero_rows] == 0.0), g
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10_000), sparsity=st.floats(0.2, 0.95))
+def test_masked_columns_stay_zero_forever(seed, sparsity):
+    """Sec. 5: with a fixed mask, pruned parameters' M columns stay zero
+    across timesteps (checked after several updates)."""
+    cfg = EGRUConfig(n_hidden=8, n_in=3, kind="gru")
+    key = jax.random.key(seed)
+    params = cells.init_params(cfg, key)
+    masks = sparse_rtrl.make_masks(cfg, jax.random.fold_in(key, 1), sparsity)
+    params = sparse_rtrl.apply_masks(params, masks)
+    w = cells.rec_param_tree(params)
+    M = sparse_rtrl.init_influence(cfg, 2)
+    a = cells.init_state(cfg, 2)
+    for t in range(4):
+        x = jax.random.normal(jax.random.fold_in(key, 10 + t), (2, 3))
+        a, hp, Jhat, mbar = sparse_rtrl.cell_partials(cfg, w, a, x)
+        M = sparse_rtrl.influence_update(cfg, M, hp, Jhat, mbar, masks)
+    n, n_in = cfg.n_hidden, cfg.n_in
+    for g in ("u", "r", "z"):
+        gm = np.concatenate([np.asarray(masks[g]["W"]).T,
+                             np.asarray(masks[g]["R"]).T,
+                             np.ones((n, 1))], axis=1)     # [q, m]
+        Mg = np.asarray(M[g])                              # [B, k, q, m]
+        dead = gm == 0.0
+        assert np.all(Mg[:, :, dead] == 0.0), g
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10_000), sparsity=st.floats(0.0, 0.9))
+def test_masked_optimizer_keeps_pruned_weights_zero(seed, sparsity):
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import masked
+    cfg = EGRUConfig(n_hidden=8, n_in=3)
+    key = jax.random.key(seed)
+    params = cells.init_params(cfg, key)
+    masks = sparse_rtrl.make_masks(cfg, jax.random.fold_in(key, 1), sparsity)
+    params = sparse_rtrl.apply_masks(params, masks)
+    opt = masked(make_optimizer("adamw", lr=1e-2), masks)
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p), params)
+    for step in range(3):
+        params, state = opt.update(grads, state, params, jnp.int32(step))
+    for g in ("u", "r", "z"):
+        for k in ("W", "R"):
+            p = np.asarray(params[g][k])
+            mk = np.asarray(masks[g][k])
+            assert np.all(p[mk == 0.0] == 0.0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(bt=st.floats(0.0, 1.0), bp=st.floats(0.0, 1.0), om=st.floats(0.0, 1.0))
+def test_savings_factor_bounds(bt, bp, om):
+    f = savings_factor(bt, bp, om)
+    assert 0.0 <= f <= 1.0
+    assert f <= savings_factor(0.0, 0.0, 0.0)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 1000), sparsity=st.floats(0.3, 0.95),
+       block=st.sampled_from([4, 8]))
+def test_block_masks_have_full_block_structure(seed, sparsity, block):
+    cfg = EGRUConfig(n_hidden=32, n_in=8)
+    masks = sparse_rtrl.make_masks(cfg, jax.random.key(seed), sparsity,
+                                   block=block)
+    R = np.asarray(masks["u"]["R"])
+    bf = tpu_block_factor(R, block=block)
+    # every live block is fully dense -> block density == element density
+    assert abs(bf - R.mean()) < 1e-6
+
+
+def test_omega_measurement():
+    cfg = EGRUConfig(n_hidden=64, n_in=16)
+    masks = sparse_rtrl.make_masks(cfg, jax.random.key(0), 0.8)
+    om = float(sparse_rtrl.omega_tilde(masks))
+    assert abs(om - 0.2) < 0.03

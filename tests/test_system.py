@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. The paper's experiment end-to-end: EGRU-16 on spirals trained with exact
+   sparse RTRL at 80% parameter sparsity reaches high accuracy, while
+   measured activity/backward sparsity delivers real compute savings
+   (compute-adjusted iterations << dense iterations).
+2. The LM substrate end-to-end: a smoke decoder trains (loss drops) through
+   the full jit'd train step, and the serving engine generates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cells, sparse_rtrl
+from repro.core.cells import EGRUConfig
+from repro.core.costs import compute_adjusted_iterations
+from repro.data.spiral import spiral_batches
+from repro.optim import make_optimizer
+from repro.optim.optimizers import masked
+
+
+def test_spiral_sparse_rtrl_end_to_end():
+    cfg = EGRUConfig()                    # paper defaults (16 hidden, gru)
+    params = cells.init_params(cfg, jax.random.key(0))
+    masks = sparse_rtrl.make_masks(cfg, jax.random.key(1), sparsity=0.8)
+    params = sparse_rtrl.apply_masks(params, masks)
+    opt = masked(make_optimizer("adamw", lr=cfg.lr), masks)
+    opt_state = jax.jit(opt.init)(params)
+
+    @jax.jit
+    def train_step(params, opt_state, xs, ys, step):
+        loss, grads, stats = sparse_rtrl.sparse_rtrl_loss_and_grads(
+            cfg, params, xs, ys, masks)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        return params, opt_state, loss, stats
+
+    @jax.jit
+    def eval_acc(params, xs, ys):
+        logits_t, _ = cells.sequence_logits(cfg, params, xs)
+        return cells.accuracy(logits_t.mean(0), ys)
+
+    it = spiral_batches(cfg.batch_size, cfg.seq_len)
+    betas = []
+    for i in range(700):
+        xs, ys = next(it)
+        params, opt_state, loss, stats = train_step(
+            params, opt_state, jnp.asarray(xs), jnp.asarray(ys), jnp.int32(i))
+        betas.append(np.asarray(stats["beta"]))
+
+    evx, evy = next(spiral_batches(512, cfg.seq_len, seed=99))
+    acc = float(eval_acc(params, jnp.asarray(evx), jnp.asarray(evy)))
+    assert acc > 0.9, acc
+
+    betas = np.stack(betas)                       # [iters, T]
+    cai = compute_adjusted_iterations(betas, np.roll(betas, 1, 1), omega=0.8)
+    # paper's claim: with 80% parameter sparsity + activity sparsity, total
+    # compute is a few % of dense RTRL for the same number of iterations
+    assert cai[-1] < 0.08 * len(betas)
+    # backward sparsity emerges during training (grows further past 700 iters)
+    assert betas[-100:].mean() > 0.1
+
+
+def test_lm_substrate_end_to_end(tmp_path):
+    from repro.configs import get_config, smoke_config
+    from repro.configs.base import ShapeSuite
+    from repro.data.tokens import synthetic_token_batches
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = smoke_config(get_config("gemma2-2b"))
+    mesh = make_host_mesh()
+    shape = ShapeSuite("t", 32, 4, "train")
+    built = steps_lib.make_train_step(cfg, mesh, shape)
+    from repro.models import get_model
+    from repro.models.module import materialize
+    api = get_model(cfg)
+    params = materialize(api.specs(cfg), jax.random.key(0))
+    opt = steps_lib.default_optimizer(cfg)
+    opt_state = jax.jit(opt.init)(params)
+    it = synthetic_token_batches(4, 32, cfg.vocab_size)
+    losses = []
+    for i in range(30):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = built.jitted(params, opt_state, b, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_serving_engine_generates():
+    from repro.configs import get_config, smoke_config
+    from repro.runtime.serving import Engine, ServeConfig
+    cfg = smoke_config(get_config("rwkv6-3b"))
+    eng = Engine(cfg, ServeConfig(batch_slots=2, max_seq=32))
+    outs = eng.generate([[1, 2, 3], [4, 5]], max_new=6)
+    assert all(len(o) == 6 for o in outs)
+    # greedy decoding is deterministic
+    eng2 = Engine(cfg, ServeConfig(batch_slots=2, max_seq=32))
+    outs2 = eng2.generate([[1, 2, 3], [4, 5]], max_new=6)
+    assert outs == outs2
