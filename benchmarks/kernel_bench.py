@@ -1,20 +1,35 @@
 """Kernel-level benchmark: realized block savings of the Pallas influence
-kernel (block-structured masks) and exact FLOP ratio of the compact path.
+kernel (block-structured masks), exact FLOP ratio of the compact path, and
+MEASURED dense-vs-compact wall clock for the full EGRU RTRL step (the
+paper's flagship cell) on the flat-influence engine.
 
 On CPU the Pallas kernels run in interpret mode (correctness, not speed);
 the *derived* columns are the structural quantities that transfer to TPU:
-executed-block fraction vs the paper's ideal w~^2 b~^2 factor."""
+executed-block fraction vs the paper's ideal w~^2 b~^2 factor.  The EGRU
+step timings ARE real CPU wall clock — XLA executes the same dense einsums
+/ gathered [K, K_prev] contractions either way.
+
+``python benchmarks/kernel_bench.py`` times the EGRU step at n >= 256 and
+records the measured ratio in BENCH_kernels.json at the repo root."""
 from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cells, sparse_rtrl as SP
 from repro.core.cells import EGRUConfig
-from repro.core.costs import savings_factor, tpu_block_factor
+from repro.core.costs import influence_update_flops, savings_factor, tpu_block_factor
 from repro.core.sparse_rtrl import make_masks
 from repro.kernels import ops
-from repro.kernels.compact import compact_influence_step, compact_init
+from repro.kernels.compact import (compact_grads, compact_influence_step,
+                                   compact_init)
 
 
 def run(rows: list):
@@ -49,4 +64,100 @@ def run(rows: list):
         rows.append((f"kernel/compact_flop_ratio/beta{beta}",
                      f"{(K * K) / (n * n):.4f}",
                      f"K={K}_ideal={(1-beta)**2:.4f}"))
+
+    egru_step_bench(rows, n=96, beta=0.8, reps=2)   # smoke-sized wall clock
     return rows
+
+
+def _time_ms(fn, args, reps):
+    out = fn(*args)                                 # warm up (AOT-compiled)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def egru_step_bench(rows: list, n=256, n_in=8, beta=0.8, batch=1,
+                    margin=1.25, reps=3) -> dict:
+    """Dense vs row-compact wall clock for ONE full EGRU RTRL step
+    (partials + influence update + gradient extraction).
+
+    The dense step is the masked-dense per-gate reference (O(n^2 p)
+    regardless of beta); the compact step runs the flat engine at static
+    capacity K = ceil((1-beta) * margin * n) — the paper's beta~^2 savings
+    as measured milliseconds, not op accounting."""
+    # narrow pseudo-derivative (eps) + strong thresholds push the measured
+    # backward sparsity to the target regime (trained EvNNs live there)
+    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=4, kind="gru", eps=0.12)
+    layout = SP.flat_layout(cfg)
+    K = SP.capacity_K(n, (1.0 - beta) * margin)
+    key = jax.random.key(0)
+    params = cells.init_params(cfg, key)
+    params["theta"] = 0.4 + params["theta"]
+    w = cells.rec_param_tree(params)
+    a = (jax.random.uniform(jax.random.fold_in(key, 1), (batch, n)) > 0.5) * 1.0
+    x = 4.0 * jax.random.normal(jax.random.fold_in(key, 2), (batch, n_in))
+    cbar = jax.random.normal(jax.random.fold_in(key, 3), (batch, n))
+    _, hp, _, _ = SP.cell_partials(cfg, w, a, x)
+    beta_meas = float(jnp.mean(hp == 0.0))
+    n_active = int(jnp.max(jnp.sum(hp != 0.0, axis=1)))
+
+    def dense_step(a, M, x, cbar):
+        a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, a, x)
+        M_new = SP.influence_update(cfg, M, hp, Jhat, mbar)
+        return a_new, M_new, SP.influence_grads(cfg, M_new, cbar)
+
+    def comp_step(a, vals, idx, x, cbar):
+        a_new, hp, vals, idx, count, ov = SP.flat_compact_step(
+            cfg, w, layout, a, vals, idx, x)
+        return a_new, vals, idx, compact_grads(vals, idx, cbar)
+
+    M0 = SP.init_influence(cfg, batch)
+    vals0 = jnp.zeros((batch, K, layout.P_pad), jnp.float32)
+    idx0 = jnp.full((batch, K), -1, jnp.int32)
+
+    f_dense = jax.jit(dense_step).lower(a, M0, x, cbar).compile()
+    f_comp = jax.jit(comp_step).lower(a, vals0, idx0, x, cbar).compile()
+    t_d = _time_ms(f_dense, (a, M0, x, cbar), reps)
+    t_c = _time_ms(f_comp, (a, vals0, idx0, x, cbar), reps)
+
+    ideal = (influence_update_flops(n, layout.P, K)
+             / influence_update_flops(n, layout.P))
+    rec = {"n": n, "n_in": n_in, "batch": batch, "beta_target": beta,
+           "beta_measured": round(beta_meas, 4), "K": K,
+           "max_active_rows": n_active, "overflow": max(0, n_active - K),
+           "P": layout.P,
+           "dense_ms": round(t_d, 3), "compact_ms": round(t_c, 3),
+           "ratio_compact_over_dense": round(t_c / t_d, 4),
+           "speedup": round(t_d / t_c, 2), "ideal_flop_ratio": round(ideal, 4)}
+    rows.append((f"kernel/egru_step/n{n}/dense_ms", f"{t_d:.1f}", "per_step"))
+    rows.append((f"kernel/egru_step/n{n}/compact_ms", f"{t_c:.1f}",
+                 f"x{t_d / t_c:.2f}_speedup_ideal_x{1 / max(ideal, 1e-9):.2f}"))
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, nargs="+", default=[256, 384])
+    ap.add_argument("--beta", type=float, default=0.8)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_kernels.json"))
+    args = ap.parse_args()
+    rows: list = []
+    recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
+            for n in args.n]
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    out = {"egru_step": recs,
+           "note": "dense = masked-dense per-gate reference; compact = "
+                   "flat-influence row-compact engine (sparse_rtrl backend="
+                   "'compact'); CPU wall clock, f32"}
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.out}")

@@ -77,8 +77,8 @@ def dryrun_distributed(n=2048, n_in=512, batch=16):
         jax.tree.map(lambda _: rep, params_abs), state_sh, x_sh)).lower(
         params_abs, state_abs, x_abs)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
-    from repro.launch.costing import parse_collective_bytes
+    from repro.launch.costing import cost_analysis_dict, parse_collective_bytes
+    ca = cost_analysis_dict(compiled)
     coll = parse_collective_bytes(compiled.as_text())
     return {"flops_per_dev": float(ca.get("flops", 0)),
             "bytes_per_dev": float(ca.get("bytes accessed", 0)),

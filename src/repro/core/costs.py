@@ -101,6 +101,18 @@ def tpu_block_factor(mask: np.ndarray, block: int = 8) -> float:
     return float((tiles.sum(axis=(1, 3)) > 0).mean())
 
 
+def influence_update_flops(n: int, P: int, K: int | None = None,
+                           K_prev: int | None = None) -> float:
+    """MXU FLOPs of one influence update (madd = 2 ops).
+
+    Dense (masked or not): 2 n^2 P.  Row-compact with static capacities
+    K/K_prev: 2 K K_prev P — the executable form of the paper's
+    beta~(t) beta~(t-1) n^2 p factor (kernels/compact.py)."""
+    if K is None:
+        return 2.0 * n * n * P
+    return 2.0 * K * (K if K_prev is None else K_prev) * P
+
+
 def measured_op_count(ci: CostInputs, beta_t: float, beta_prev: float) -> dict:
     """Exact op counts for one influence update with given measured sparsity
     (what the hardware-optimal implementation would execute)."""

@@ -5,15 +5,22 @@ alternative to BPTT").
 
 Scaling path for a thresholded RNN with n in the thousands:
 
-  * influence state carried ROW-COMPACT (repro.kernels.compact): values
-    [B, K, n, m] + active-row indices, K = ceil(beta~_max * n) static
+  * influence state carried ROW-COMPACT in the FLAT layout
+    (repro.core.sparse_rtrl.FlatLayout): values [B, K, P] (P = n*m,
+    lane-padded) + active-row indices, K = ceil(beta~_max * n) static
     capacity -> memory realises the paper's beta~ n p factor exactly;
-  * the J @ M contraction runs on gathered [K, K_prev] tiles -> FLOPs
-    realise beta~(t) beta~(t-1) n^2 p exactly (bit-exact vs masked-dense,
-    tests/test_scaled_rtrl.py) — REAL wall-clock speedup, not op accounting;
-  * sharding: batch -> 'data', the per-unit parameter-group axis (q of
-    M[b, k, q, m]) -> 'model'.  The contraction sum_l J[k,l] M[l, q, m] has
-    no cross-q reduction, so the model axis is embarrassingly parallel:
+  * every step runs `sparse_rtrl.flat_compact_step` — the SAME engine the
+    EGRU "compact" backend uses — with the J @ M contraction on gathered
+    [K, K_prev] tiles (for this cell J-hat = R^T, so tiles are looked up
+    from R without materializing [B, n, n]) -> FLOPs realise
+    beta~(t) beta~(t-1) n^2 p exactly (tests/test_scaled_rtrl.py) — REAL
+    wall-clock speedup, not op accounting;
+  * gradient extraction c-bar^T M is fused into the compact form
+    (kernels/compact.py ``compact_grads``): c-bar gathered at the active
+    rows, never scattering M back to dense;
+  * sharding: batch -> 'data', the flat parameter-column axis (p of
+    M[b, k, p], q-major) -> 'model'.  The contraction sum_l J[k,l] M[l, p]
+    has no cross-p reduction, so the model axis is embarrassingly parallel:
     sparse RTRL shards to a full pod with ZERO collectives in the influence
     update (gradients all-reduce once per step like any DP training).
   * parameter sparsity enters through block-structured masks on R/W
@@ -32,7 +39,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import cells
+from repro.core import cells, sparse_rtrl
 from repro.core.cells import EGRUConfig
 
 
@@ -60,6 +67,9 @@ class ScaledRTRLConfig:
         return EGRUConfig(n_hidden=self.n, n_in=self.n_in, n_out=self.n_out,
                           kind="rnn", gamma=self.gamma, eps=self.eps)
 
+    def layout(self) -> "sparse_rtrl.FlatLayout":
+        return sparse_rtrl.flat_layout(self.cell_cfg())
+
 
 def init_params(cfg: ScaledRTRLConfig, key: jax.Array):
     from repro.core.sparse_rtrl import apply_masks, make_masks
@@ -70,77 +80,48 @@ def init_params(cfg: ScaledRTRLConfig, key: jax.Array):
 
 
 # ---------------------------------------------------------------------------
-# Compact influence state at [B, K, n(q), m] granularity
+# Compact influence state: flat [B, K, P] (P = n*m, lane-padded)
 # ---------------------------------------------------------------------------
 
 def init_state(cfg: ScaledRTRLConfig):
-    B, K, n, m = cfg.batch, cfg.K, cfg.n, cfg.m
+    B, K, n = cfg.batch, cfg.K, cfg.n
     return {
         "a": jnp.zeros((B, n), jnp.float32),
-        "vals": jnp.zeros((B, K, n, m), jnp.float32),
+        "vals": jnp.zeros((B, K, cfg.layout().P_pad), jnp.float32),
         "idx": jnp.full((B, K), -1, jnp.int32),
     }
 
 
-def _partials(cfg: ScaledRTRLConfig, w, a_prev, x_t):
-    """Closed-form (vanilla threshold cell): a_new, hp, and the M-bar group
-    vector g = (x, a_prev, 1, -1) (diag coefficient 1)."""
-    ccfg = cfg.cell_cfg()
-    v = x_t @ w["v"]["W"] + a_prev @ w["v"]["R"] + w["v"]["b"] - w["theta"]
-    a_new = cells.heaviside(v)
-    hp = cells.pseudo_derivative(v, ccfg)
-    B = a_prev.shape[0]
-    g = jnp.concatenate([x_t, a_prev, jnp.ones((B, 1)), -jnp.ones((B, 1))], 1)
-    return a_new, hp, g
-
-
 def compact_step(cfg: ScaledRTRLConfig, w, state, x_t):
-    """One RTRL step with row-compact influence.  FLOPs ~ K*K*n*m."""
-    from repro.kernels.compact import compact_rows
-    B, K, n, m = cfg.batch, cfg.K, cfg.n, cfg.m
-    a_prev, vals, idx_prev = state["a"], state["vals"], state["idx"]
-    a_new, hp, g = _partials(cfg, w, a_prev, x_t)
+    """One RTRL step with row-compact flat influence.  FLOPs ~ K*K*n*m.
 
-    idx_new, count = compact_rows(hp != 0.0, K)            # [B,K] (n = empty)
-    bidx = jnp.arange(B)[:, None]
-    safe_new = jnp.minimum(idx_new, n - 1)
-    live_new = idx_new < n
-    safe_prev = jnp.where(idx_prev < 0, n - 1, idx_prev)
-    live_prev = idx_prev >= 0
-
-    # J-hat rows for new-active k, columns for prev-active l: R[l, k]
-    # Jg[b, knew, lprev] = R[idx_prev[l], idx_new[k]]
-    Jg = w["v"]["R"][safe_prev[:, None, :], safe_new[:, :, None]]  # [B,K,Kp]
-    Jg = Jg * live_prev[:, None, :]
-    T = jnp.einsum("bkl,blqm->bkqm", Jg, vals)             # K*Kprev*n*m FLOPs
-
-    # M-bar is diagonal in (k, q): T[b, k, q == idx_new[k], :] += g[b]
-    hp_g = hp[bidx, safe_new] * live_new                   # [B,K]
-    T = T.at[bidx, jnp.arange(K)[None, :], safe_new, :].add(
-        g[:, None, :] * live_new[:, :, None])
-    vals_new = (hp_g)[:, :, None, None] * T
-    overflow = jnp.maximum(count - K, 0)
-    return {"a": a_new, "vals": vals_new,
-            "idx": jnp.where(live_new, idx_new, -1)}, overflow
+    Thin wrapper over `sparse_rtrl.flat_compact_step` (the shared engine);
+    J-hat tiles are looked up straight from R (rnn cell)."""
+    a_new, _, vals, idx, _, overflow = sparse_rtrl.flat_compact_step(
+        cfg.cell_cfg(), w, cfg.layout(), state["a"], state["vals"],
+        state["idx"], x_t)
+    return {"a": a_new, "vals": vals, "idx": idx}, overflow
 
 
 def dense_step(cfg: ScaledRTRLConfig, w, a_prev, M, x_t):
     """Masked-dense reference: M [B, n, n, m]; FLOPs ~ n*n*n*m."""
-    a_new, hp, g = _partials(cfg, w, a_prev, x_t)
-    Jhat = jnp.broadcast_to(w["v"]["R"].T[None], (a_prev.shape[0],) + w["v"]["R"].shape)
+    ccfg = cfg.cell_cfg()
+    a_new, hp, Jhat, mbar = sparse_rtrl.cell_partials(ccfg, w, a_prev, x_t)
     T = jnp.einsum("bkl,blqm->bkqm", Jhat, M)
     n = cfg.n
     idx = jnp.arange(n)
-    T = T.at[:, idx, idx, :].add(g[:, None, :])
+    add = mbar["v_diag_coef"][:, :, None] * mbar["v_g"][:, None, :]
+    T = T.at[:, idx, idx, :].add(add)
     return a_new, hp[:, :, None, None] * T
 
 
 def compact_to_dense_M(cfg: ScaledRTRLConfig, state) -> jax.Array:
     B, K, n, m = cfg.batch, cfg.K, cfg.n, cfg.m
-    out = jnp.zeros((B, n + 1, n, m), jnp.float32)
+    P_pad = state["vals"].shape[-1]
+    out = jnp.zeros((B, n + 1, P_pad), jnp.float32)
     idx = jnp.where(state["idx"] < 0, n, state["idx"])
     out = out.at[jnp.arange(B)[:, None], idx].set(state["vals"])
-    return out[:, :n]
+    return out[:, :n, :n * m].reshape(B, n, n, m)
 
 
 # ---------------------------------------------------------------------------
@@ -148,9 +129,15 @@ def compact_to_dense_M(cfg: ScaledRTRLConfig, state) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
-    """xs: [T, B, n_in]. Exact RTRL with compact influence; O(B K n m) memory."""
+    """xs: [T, B, n_in]. Exact RTRL with compact influence; O(B K n m) memory.
+
+    Gradient extraction is fused into the compact form (compact_grads):
+    c-bar gathered at the active rows — the dense [B, n, n, m] influence is
+    never materialized."""
+    from repro.kernels.compact import compact_grads
     w = cells.rec_param_tree(params)
     T = xs.shape[0]
+    layout = cfg.layout()
 
     def body(carry, x_t):
         state, gw, gout, loss = carry
@@ -161,37 +148,28 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
 
         lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
             params["out"], state["a"])
-        # dL/dw[q, m] = sum_{b, active k} cbar[b, idx[k]] * vals[b, k, q, m]
-        n = cfg.n
-        safe = jnp.minimum(jnp.where(state["idx"] < 0, n - 1, state["idx"]),
-                           n - 1)
-        live = state["idx"] >= 0
-        cbar_k = jnp.take_along_axis(cbar, safe, axis=1) * live    # [B,K]
-        gw_t = jnp.einsum("bk,bkqm->qm", cbar_k, state["vals"])
-        gw = gw + gw_t
+        gw = gw + compact_grads(state["vals"], state["idx"], cbar)
         gout = jax.tree.map(jnp.add, gout, gout_t)
         return (state, gw, gout, loss + lt), None
 
-    gw0 = jnp.zeros((cfg.n, cfg.m), jnp.float32)
+    gw0 = jnp.zeros((layout.P_pad,), jnp.float32)
     gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
                          params["out"])
     (state, gw, gout, loss), _ = jax.lax.scan(
         body, (init_state(cfg), gw0, gout0, jnp.float32(0)), xs)
-    n_in, n = cfg.n_in, cfg.n
-    grads = {"v": {"W": gw[:, :n_in].T, "R": gw[:, n_in:n_in + n].T,
-                   "b": gw[:, n_in + n]},
-             "theta": gw[:, -1], "out": gout}
+    grads = sparse_rtrl.unflatten_flat_grads(cfg.cell_cfg(), layout, gw)
+    grads["out"] = gout
     return loss, grads
 
 
 def sharded_step_specs(cfg: ScaledRTRLConfig, mesh):
-    """NamedShardings for the distributed RTRL step: batch -> data, the
-    parameter-group axis q of the influence state -> model (no cross-shard
+    """NamedShardings for the distributed RTRL step: batch -> data, the flat
+    parameter-column axis p of the influence state -> model (no cross-shard
     reduction exists in the update)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     ba = "data" if "pod" not in mesh.shape else ("pod", "data")
     ns = lambda *spec: NamedSharding(mesh, P(*spec))
-    state_sh = {"a": ns(ba, None), "vals": ns(ba, None, "model", None),
+    state_sh = {"a": ns(ba, None), "vals": ns(ba, None, "model"),
                 "idx": ns(ba, None)}
     x_sh = ns(None, ba, None)
     return state_sh, x_sh

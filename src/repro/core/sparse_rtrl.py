@@ -10,17 +10,35 @@ exploit the structure of Eqs. (6)-(10):
   * fixed parameter-sparsity masks zero columns of Mbar/M permanently and
     sparsify J through R (Sec. 5) — invariants asserted in tests.
 
-The JAX implementation computes masked-dense (TPU adaptation realises the
-savings via row compaction + block-sparse Pallas kernels — see
-repro/kernels/influence.py); `repro.core.costs` does the paper's own
-"compute-adjusted" op accounting from the measured beta/omega.
+Two representations of the influence matrix coexist:
 
-Gradients are bit-identical to `repro.core.rtrl` (generic oracle) and to
-BPTT — the paper's "without any approximations" claim.
+  * the per-gate dict ({u,r,z,theta} / {v}: [B, n, n, m]) used by the
+    masked-dense reference path — the exactness oracle;
+  * the FLAT layout M [B, n, P] (`FlatLayout`): all gates' (q, m) column
+    groups concatenated along one lane-padded axis, so ONE kernel invocation
+    per step covers every gate.  This is the engine's native form — it is
+    what the block-sparse Pallas kernel (repro/kernels/influence.py) and the
+    row-compaction path (repro/kernels/compact.py) consume.
+
+`sparse_rtrl_loss_and_grads(..., backend=)` selects the execution strategy:
+
+  backend="dense"    masked-dense per-gate einsums (reference; default)
+  backend="pallas"   flat layout + block-sparse Pallas kernel, fed per-step
+                     row/col/J block masks derived from hp and the masks
+  backend="compact"  flat layout carried row-compact ([B, K, P] + indices);
+                     FLOPs ~ beta~(t) beta~(t-1) n^2 p, with gradient
+                     extraction c-bar^T M fused into the compact form
+
+All backends produce gradients equal to `repro.core.rtrl` (generic oracle)
+and to BPTT — the paper's "without any approximations" claim; `repro.core.
+costs` does the paper's own "compute-adjusted" op accounting from the
+measured beta/omega.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import math
 from typing import Any
 
 import jax
@@ -30,6 +48,8 @@ from repro.core import cells
 from repro.core.cells import EGRUConfig
 
 Tree = Any
+
+LANE = 128        # TPU lane width: flat influence buffers are lane-padded
 
 
 # ---------------------------------------------------------------------------
@@ -233,46 +253,324 @@ def influence_grads(cfg: EGRUConfig, M: Tree, cbar: jax.Array) -> Tree:
 
 
 # ---------------------------------------------------------------------------
+# Flat influence layout: all gates in one [B, n, P] buffer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static column-layout descriptor of the flat influence buffer.
+
+    Column  gate_offset(g) + q * m + j  holds  d a_k / d (j-th param of unit
+    q's gate-g group), groups ordered (W col, R col, bias[, theta]).  For
+    'rnn' theta is folded into the per-unit group (j == m-1); for 'gru' theta
+    gets its own trailing n-column block.  P == p (the recurrent parameter
+    count); buffers are allocated at P_pad (next LANE multiple) so the last
+    dim is always tile-aligned — padding columns are permanently dead."""
+    kind: str
+    n: int
+    n_in: int
+    gates: tuple
+    m: int                 # per-gate per-unit parameter-group width
+    P: int                 # logical column count (== cfg.n_rec_params)
+    P_pad: int             # P rounded up to a LANE multiple
+
+    def gate_offset(self, g: str) -> int:
+        return self.gates.index(g) * self.n * self.m
+
+    @property
+    def theta_offset(self) -> int:          # gru only: trailing theta block
+        return len(self.gates) * self.n * self.m
+
+
+def flat_layout(cfg: EGRUConfig) -> FlatLayout:
+    n, n_in = cfg.n_hidden, cfg.n_in
+    if cfg.kind == "rnn":
+        gates, m = ("v",), n_in + n + 2              # W, R, b, theta
+        P = n * m
+    else:
+        gates, m = ("u", "r", "z"), n_in + n + 1     # W, R, b
+        P = 3 * n * m + n                            # + theta block
+    assert P == cfg.n_rec_params, (P, cfg.n_rec_params)
+    P_pad = -(-P // LANE) * LANE
+    return FlatLayout(cfg.kind, n, n_in, gates, m, P, P_pad)
+
+
+def init_influence_flat(layout: FlatLayout, batch: int) -> jax.Array:
+    return jnp.zeros((batch, layout.n, layout.P_pad), jnp.float32)
+
+
+def flat_col_mask(layout: FlatLayout, masks: Tree | None) -> jax.Array:
+    """[P_pad] column liveness from the fixed parameter masks (Sec. 5).
+
+    Padding columns are dead, so block-granular backends skip whole padded
+    column blocks even without parameter sparsity."""
+    if masks is None:
+        live = jnp.ones((layout.P,), jnp.float32)
+    else:
+        n = layout.n
+        parts = []
+        for g in layout.gates:
+            mk = masks[g]
+            cols = [mk["W"].T, mk["R"].T, jnp.ones((n, 1))]
+            if layout.kind == "rnn":
+                cols.append(jnp.ones((n, 1)))        # theta column
+            parts.append(jnp.concatenate(cols, axis=1).reshape(-1))
+        if layout.kind != "rnn":
+            parts.append(jnp.ones((n,)))             # theta block
+        live = jnp.concatenate(parts).astype(jnp.float32)
+    return jnp.pad(live, (0, layout.P_pad - layout.P))
+
+
+def flat_jmask(cfg: EGRUConfig, masks: Tree | None) -> jax.Array | None:
+    """Static [n, n] sparsity pattern of J-hat in R layout ([l, k]), or None.
+
+    J inherits the masks' pattern (Sec. 5): for 'rnn' J-hat = R^T exactly;
+    for 'gru' the three R paths union with the diagonal (1-u) term and the
+    two-hop r-path  R_r @ R_z."""
+    if masks is None:
+        return None
+    n = cfg.n_hidden
+    if cfg.kind == "rnn":
+        return (masks["v"]["R"] > 0).astype(jnp.float32)
+    mu, mr, mz = (masks[g]["R"] for g in ("u", "r", "z"))
+    pat = mu + mz + (mr @ mz) + jnp.eye(n)
+    return (pat > 0).astype(jnp.float32)
+
+
+def flat_mbar(cfg: EGRUConfig, layout: FlatLayout, mbar: Tree,
+              col_mask: jax.Array | None = None) -> jax.Array:
+    """Immediate influence M-bar-hat in flat layout [B, n, P_pad] (hp-ungated).
+
+    u/z (and rnn v) gates are diagonal in (k, q); the r gate couples densely
+    through R_z; theta is -I."""
+    n, m = layout.n, layout.m
+    idx = jnp.arange(n)
+    blocks = []
+    if cfg.kind == "rnn":
+        B = mbar["v_g"].shape[0]
+        add = mbar["v_diag_coef"][:, :, None] * mbar["v_g"][:, None, :]
+        M4 = jnp.zeros((B, n, n, m)).at[:, idx, idx, :].set(add)
+        blocks.append(M4.reshape(B, n, n * m))
+    else:
+        B = mbar["u_g"].shape[0]
+        for g in layout.gates:
+            if g == "r":
+                M4 = jnp.einsum("bkq,bm->bkqm", mbar["r_coef"], mbar["r_g"])
+            else:
+                add = (mbar[f"{g}_diag_coef"][:, :, None]
+                       * mbar[f"{g}_g"][:, None, :])
+                M4 = jnp.zeros((B, n, n, m)).at[:, idx, idx, :].set(add)
+            blocks.append(M4.reshape(B, n, n * m))
+        blocks.append(-jnp.broadcast_to(jnp.eye(n)[None], (B, n, n)))
+    flat = jnp.concatenate(blocks, axis=-1)
+    flat = jnp.pad(flat, ((0, 0), (0, 0), (0, layout.P_pad - layout.P)))
+    if col_mask is not None:
+        flat = flat * col_mask[None, None, :]
+    return flat
+
+
+def flat_mbar_rows(cfg: EGRUConfig, layout: FlatLayout, mbar: Tree,
+                   safe_new: jax.Array, col_mask: jax.Array | None = None):
+    """M-bar rows gathered at the active row indices: [B, K, P_pad].
+
+    The dense [B, n, P] (i.e. [B, n, n, m]) immediate-influence tensor is
+    never materialized on the compact path; dead slots (safe_new clamped)
+    produce garbage rows that the caller gates to zero through hp."""
+    n, m = layout.n, layout.m
+    B, K = safe_new.shape
+    bidx = jnp.arange(B)[:, None]
+    slot = jnp.arange(K)[None, :]
+    blocks = []
+    if cfg.kind == "rnn":
+        add = (mbar["v_diag_coef"][bidx, safe_new][:, :, None]
+               * mbar["v_g"][:, None, :])                       # [B, K, m]
+        M4 = jnp.zeros((B, K, n, m)).at[bidx, slot, safe_new, :].set(add)
+        blocks.append(M4.reshape(B, K, n * m))
+    else:
+        for g in layout.gates:
+            if g == "r":
+                coef = mbar["r_coef"][bidx, safe_new]           # [B, K, n]
+                M4 = jnp.einsum("bkq,bm->bkqm", coef, mbar["r_g"])
+            else:
+                add = (mbar[f"{g}_diag_coef"][bidx, safe_new][:, :, None]
+                       * mbar[f"{g}_g"][:, None, :])
+                M4 = jnp.zeros((B, K, n, m)).at[bidx, slot, safe_new, :].set(add)
+            blocks.append(M4.reshape(B, K, n * m))
+        th = jnp.zeros((B, K, n)).at[bidx, slot, safe_new].set(-1.0)
+        blocks.append(th)
+    flat = jnp.concatenate(blocks, axis=-1)
+    flat = jnp.pad(flat, ((0, 0), (0, 0), (0, layout.P_pad - layout.P)))
+    if col_mask is not None:
+        flat = flat * col_mask[None, None, :]
+    return flat
+
+
+def unflatten_flat_grads(cfg: EGRUConfig, layout: FlatLayout,
+                         gw: jax.Array) -> Tree:
+    """Flat gradient [P_pad] -> recurrent parameter tree (inverse layout)."""
+    n, n_in, m = layout.n, layout.n_in, layout.m
+    out: dict = {}
+    for i, g in enumerate(layout.gates):
+        gq = gw[i * n * m:(i + 1) * n * m].reshape(n, m)        # [q, m]
+        out[g] = {"W": gq[:, :n_in].T, "R": gq[:, n_in:n_in + n].T,
+                  "b": gq[:, n_in + n]}
+        if cfg.kind == "rnn":
+            out["theta"] = gq[:, -1]
+    if cfg.kind != "rnn":
+        out["theta"] = gw[layout.theta_offset:layout.theta_offset + layout.n]
+    return out
+
+
+def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
+                      a_prev: jax.Array, vals: jax.Array, idx_prev: jax.Array,
+                      x_t: jax.Array, col_mask: jax.Array | None = None):
+    """One RTRL step with the influence carried row-compact in flat layout.
+
+    vals [B, K, P_pad], idx_prev [B, K] (sentinel -1 = dead slot).  Returns
+    (a_new, hp, vals', idx' (-1 sentinel), count, overflow).  FLOPs of the
+    update are K * K_prev * P — the paper's beta~(t) beta~(t-1) n^2 p made
+    wall-clock-real; `repro.core.scaled_rtrl` and the "compact" backend of
+    `sparse_rtrl_loss_and_grads` both run on this step."""
+    from repro.kernels import compact as CK
+    n = layout.n
+    B, K = idx_prev.shape
+    a_new, hp, Jhat, mbar = cell_partials(cfg, w, a_prev, x_t)
+    idx_new, count = CK.compact_rows(hp != 0.0, K)
+    safe_new = jnp.minimum(idx_new, n - 1)
+    live_new = idx_new < n
+    # rnn J-hat = R^T: lookup tiles straight from R, never building [B, n, n]
+    R = w["v"]["R"] if cfg.kind == "rnn" else None
+    Jgg = CK.gather_j_tiles(None if R is not None else Jhat,
+                            idx_new, idx_prev, R=R)
+    mbar_rows = flat_mbar_rows(cfg, layout, mbar, safe_new, col_mask)
+    bidx = jnp.arange(B)[:, None]
+    hp_rows = hp[bidx, safe_new] * live_new
+    Mc, overflow = CK.compact_update(Jgg, vals, mbar_rows, hp_rows,
+                                     idx_new, count, K)
+    return (a_new, hp, Mc.vals, jnp.where(live_new, idx_new, -1),
+            Mc.count, overflow)
+
+
+def capacity_K(n: int, capacity: float) -> int:
+    """Static row capacity: ceil(capacity * n), 8-aligned, capped at n."""
+    return max(8, min(n, -(-int(math.ceil(capacity * n)) // 8) * 8))
+
+
+# ---------------------------------------------------------------------------
 # Full sequence: loss + grads + sparsity stats (exact, memory O(B n p))
 # ---------------------------------------------------------------------------
 
+BACKENDS = ("dense", "pallas", "compact")
+
+
 def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
-                               labels: jax.Array, masks: Tree | None = None):
+                               labels: jax.Array, masks: Tree | None = None,
+                               *, backend: str = "dense",
+                               capacity: float = 1.0,
+                               interpret: bool | None = None):
     """Structured exact RTRL. Returns (loss, grads, stats).
+
+    backend selects the influence-update execution strategy (see module
+    docstring); all backends are exact — "compact" additionally requires the
+    static row capacity (ceil(capacity * n), 8-aligned) to cover the active
+    rows, and reports dropped rows in stats["overflow"].  interpret forces
+    the Pallas kernel's interpret mode (None = auto: interpret off-TPU).
 
     stats carries per-step alpha/beta (and previous-step beta) so
     `repro.core.costs` can integrate the paper's compute-adjusted iterations.
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     T, B, _ = xs.shape
     w = cells.rec_param_tree(params)
     a0 = cells.init_state(cfg, B)
-    M0 = init_influence(cfg, B)
+
+    def inst_loss(po, ai):
+        return cells.xent(cells.readout({"out": po}, ai), labels) / T
+
+    def step_stats(a_new, hp, beta_prev, row_density):
+        return {"alpha": jnp.mean(a_new == 0.0), "beta": jnp.mean(hp == 0.0),
+                "beta_prev": beta_prev, "m_row_density": row_density}
+
+    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                         params["out"])
+
+    if backend == "dense":
+        M0 = init_influence(cfg, B)
+
+        def body(carry, x_t):
+            a, M, gw_acc, gout, loss, beta_prev = carry
+            a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
+            M_new = influence_update(cfg, M, hp, Jhat, mbar, masks)
+            lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
+                params["out"], a_new)
+            gw_t = influence_grads(cfg, M_new, cbar)
+            gw_acc = jax.tree.map(jnp.add, gw_acc, gw_t)
+            gout = jax.tree.map(jnp.add, gout, gout_t)
+            stats = step_stats(a_new, hp, beta_prev, _row_density(M_new))
+            return (a_new, M_new, gw_acc, gout, loss + lt,
+                    stats["beta"]), stats
+
+        gw0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), w)
+        init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
+        (a, M, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
+        grads = dict(gw)
+        grads["out"] = gout
+        return loss, grads, stats
+
+    layout = flat_layout(cfg)
+    colm = flat_col_mask(layout, masks)
+    gw0 = jnp.zeros((layout.P_pad,), jnp.float32)
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        jm = flat_jmask(cfg, masks)
+        M0 = init_influence_flat(layout, B)
+
+        def body(carry, x_t):
+            a, M, gw_acc, gout, loss, beta_prev = carry
+            a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
+            Mbar = flat_mbar(cfg, layout, mbar, colm)
+            M_new = kops.influence_update(hp, Jhat, M, Mbar, jmask=jm,
+                                          col_mask=colm, interpret=interpret)
+            lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
+                params["out"], a_new)
+            gw_acc = gw_acc + jnp.einsum("bk,bkp->p", cbar, M_new)
+            gout = jax.tree.map(jnp.add, gout, gout_t)
+            row_density = jnp.mean(jnp.any(M_new != 0.0, axis=2))
+            stats = step_stats(a_new, hp, beta_prev, row_density)
+            return (a_new, M_new, gw_acc, gout, loss + lt,
+                    stats["beta"]), stats
+
+        init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
+        (a, M, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
+        grads = unflatten_flat_grads(cfg, layout, gw)
+        grads["out"] = gout
+        return loss, grads, stats
+
+    # backend == "compact"
+    from repro.kernels import compact as CK
+    K = capacity_K(cfg.n_hidden, capacity)
+    vals0 = jnp.zeros((B, K, layout.P_pad), jnp.float32)
+    idx0 = jnp.full((B, K), -1, jnp.int32)
 
     def body(carry, x_t):
-        a, M, gw_acc, gout, loss, beta_prev = carry
-        a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
-        M_new = influence_update(cfg, M, hp, Jhat, mbar, masks)
-
-        def inst_loss(po, ai):
-            return cells.xent(cells.readout({"out": po}, ai), labels) / T
-
+        a, vals, idx, gw_acc, gout, loss, beta_prev = carry
+        a_new, hp, vals_new, idx_new, count, overflow = flat_compact_step(
+            cfg, w, layout, a, vals, idx, x_t, colm)
         lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
             params["out"], a_new)
-        gw_t = influence_grads(cfg, M_new, cbar)
-        gw_acc = jax.tree.map(jnp.add, gw_acc, gw_t)
+        gw_acc = gw_acc + CK.compact_grads(vals_new, idx_new, cbar)
         gout = jax.tree.map(jnp.add, gout, gout_t)
-        beta = jnp.mean(hp == 0.0)
-        stats = {"alpha": jnp.mean(a_new == 0.0), "beta": beta,
-                 "beta_prev": beta_prev,
-                 "m_row_density": _row_density(M_new)}
-        return (a_new, M_new, gw_acc, gout, loss + lt, beta), stats
+        row_density = jnp.sum(idx_new >= 0, axis=1).mean() / cfg.n_hidden
+        stats = step_stats(a_new, hp, beta_prev, row_density)
+        stats["overflow"] = jnp.max(overflow)
+        return (a_new, vals_new, idx_new, gw_acc, gout, loss + lt,
+                stats["beta"]), stats
 
-    gw0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                       cells.rec_param_tree(params))
-    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params["out"])
-    init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
-    (a, M, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-    grads = dict(gw)
+    init = (a0, vals0, idx0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
+    (a, vals, idx, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
+    grads = unflatten_flat_grads(cfg, layout, gw)
     grads["out"] = gout
     return loss, grads, stats
 

@@ -1,20 +1,33 @@
 """Pallas TPU kernels for the RTRL hot-spots (+ pure-jnp oracles in ref.py).
 
+All influence kernels consume the FLAT layout (`repro.core.sparse_rtrl.
+FlatLayout`): every gate's (q, m) parameter columns concatenated into one
+lane-padded [B, n, P] buffer, so one invocation per step covers all gates —
+these are the execution backends of
+`sparse_rtrl_loss_and_grads(..., backend=)`:
+
   influence.py    block-sparse influence update  M = D(hp)[J M + Mbar]
+                  (backend="pallas"; per-step row/col/J block masks via
+                  build_block_masks)
+  compact.py      capacity-based row compaction (backend="compact"):
+                  gather_j_tiles + compact_update carry M as [B, K, P] +
+                  indices; compact_grads fuses  c-bar^T M  extraction
   event_matmul.py activity-sparse forward matmul (EvNN event propagation)
-  compact.py      capacity-based row compaction (unstructured-sparsity path)
   wkv.py          chunked RWKV6 WKV with VMEM-resident state
-  ops.py          jit'd wrappers: padding, masks, interpret-mode dispatch
+  ops.py          jit'd wrappers: padding, block masks, interpret dispatch
   ref.py          pure-jnp oracles for allclose validation
 
 All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
 (8,128)-aligned) and validated on CPU with interpret=True.
 """
 from repro.kernels.ops import event_matmul, influence_update, realized_block_savings
-from repro.kernels.compact import (CompactInfluence, compact_influence_step,
-                                   compact_init, compact_to_dense)
+from repro.kernels.compact import (CompactInfluence, compact_grads,
+                                   compact_influence_step, compact_init,
+                                   compact_to_dense, compact_update,
+                                   gather_j_tiles)
 from repro.kernels.wkv import wkv_pallas
 
 __all__ = ["influence_update", "event_matmul", "realized_block_savings",
            "CompactInfluence", "compact_influence_step", "compact_init",
-           "compact_to_dense", "wkv_pallas"]
+           "compact_to_dense", "compact_grads", "compact_update",
+           "gather_j_tiles", "wkv_pallas"]

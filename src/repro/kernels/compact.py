@@ -47,6 +47,48 @@ def compact_init(B: int, K: int, P: int) -> CompactInfluence:
                             jnp.zeros((B,), jnp.int32))
 
 
+def gather_j_tiles(Jhat: jax.Array | None, idx_new: jax.Array,
+                   idx_prev: jax.Array, *, R: jax.Array | None = None):
+    """Gathered [B, K, K_prev] tiles of the step Jacobian J-hat.
+
+    Rows are taken at the newly-active unit indices, columns at the
+    previously-active ones (dead slots — sentinel < 0 or >= n — contribute
+    zero columns; dead rows are gated by hp downstream).  For cells whose
+    J-hat is the transposed recurrent matrix (the vanilla RNN) pass ``R``
+    [n, n] instead of a dense Jhat: tiles are looked up directly and the
+    [B, n, n] Jacobian is never materialized.  For data-dependent Jacobians
+    (EGRU) pass the dense ``Jhat`` [B, n, n] and tiles are gathered."""
+    n = R.shape[0] if R is not None else Jhat.shape[-1]
+    B, K = idx_new.shape
+    Kp = idx_prev.shape[1]
+    safe_new = jnp.clip(idx_new, 0, n - 1)
+    safe_prev = jnp.clip(idx_prev, 0, n - 1)
+    live_prev = (idx_prev >= 0) & (idx_prev < n)
+    if R is not None:
+        # Jhat[b, k, l] = R[l, k]
+        Jgg = R[safe_prev[:, None, :], safe_new[:, :, None]]    # [B, K, Kp]
+    else:
+        bidx = jnp.arange(B)[:, None]
+        Jg = Jhat[bidx, safe_new]                               # [B, K, n]
+        Jgg = jnp.take_along_axis(
+            Jg, jnp.broadcast_to(safe_prev[:, None, :], (B, K, Kp)), axis=2)
+    return Jgg * live_prev[:, None, :]
+
+
+def compact_update(Jgg: jax.Array, vals_prev: jax.Array, mbar_rows: jax.Array,
+                   hp_rows: jax.Array, idx_new: jax.Array, count: jax.Array,
+                   K: int) -> tuple[CompactInfluence, jax.Array]:
+    """The shared compact contraction:  vals = hp ⊙ (Jgg @ vals_prev + M-bar).
+
+    Jgg [B,K,Kprev] (dead prev columns already zeroed); mbar_rows [B,K,P]
+    gathered at the new active rows; hp_rows [B,K] with dead slots zeroed;
+    idx_new [B,K] with sentinel >= n for dead slots.  K*K_prev*P MXU work."""
+    T = jnp.einsum("bkl,blp->bkp", Jgg, vals_prev)
+    vals = hp_rows[:, :, None] * (T + mbar_rows)
+    overflow = jnp.maximum(count - K, 0)
+    return CompactInfluence(vals, idx_new, jnp.minimum(count, K)), overflow
+
+
 @functools.partial(jax.jit, static_argnames=("K",))
 def compact_influence_step(hp: jax.Array, Jhat: jax.Array,
                            Mc: CompactInfluence, Mbar: jax.Array, K: int):
@@ -56,26 +98,28 @@ def compact_influence_step(hp: jax.Array, Jhat: jax.Array,
     FLOPs scale as K * K * P instead of n * n * P."""
     B, n, P = Mbar.shape
     idx_new, count_new = compact_rows(hp != 0.0, K)             # rows of M_t
-    n_sentinel = n
-
-    # gather J rows (active k) and columns (previously-active l)
     bidx = jnp.arange(B)[:, None]
-    Jg = Jhat[bidx, jnp.minimum(idx_new, n - 1)]                # [B, K, n]
-    prev_idx = jnp.where(Mc.idx < 0, n - 1, Mc.idx)
-    Jgg = jnp.take_along_axis(
-        Jg, jnp.broadcast_to(jnp.minimum(prev_idx, n - 1)[:, None, :],
-                             (B, K, K)), axis=2)                # [B, K, Kprev]
-    # zero contributions from dead slots
-    prev_live = (Mc.idx >= 0) & (Mc.idx < n)
-    Jgg = Jgg * prev_live[:, None, :]
-    T = jnp.einsum("bkl,blp->bkp", Jgg, Mc.vals)                # K*K*P MXU work
-    Mbar_g = Mbar[bidx, jnp.minimum(idx_new, n - 1)]            # [B, K, P]
-    hp_g = hp[bidx, jnp.minimum(idx_new, n - 1)]                # [B, K]
+    safe_new = jnp.minimum(idx_new, n - 1)
     live = idx_new < n
-    vals = (hp_g * live)[:, :, None] * (T + Mbar_g)
-    overflow = jnp.maximum(count_new - K, 0)
-    return CompactInfluence(vals, jnp.where(live, idx_new, -1),
-                            jnp.minimum(count_new, K)), overflow
+    Jgg = gather_j_tiles(Jhat, idx_new, Mc.idx)
+    Mbar_g = Mbar[bidx, safe_new]                               # [B, K, P]
+    hp_g = hp[bidx, safe_new] * live                            # [B, K]
+    Mc_new, overflow = compact_update(
+        Jgg, Mc.vals, Mbar_g, hp_g, idx_new, count_new, K)
+    return Mc_new._replace(idx=jnp.where(live, idx_new, -1)), overflow
+
+
+def compact_grads(vals: jax.Array, idx: jax.Array, cbar: jax.Array):
+    """Fused gradient extraction  dL/dw = c-bar^T M  on the compact form.
+
+    c-bar [B, n] is gathered at the active row indices and contracted with
+    vals [B, K, P] directly — the dense [B, n, P] influence tensor is never
+    scattered back.  Returns the flat gradient [P]."""
+    n = cbar.shape[1]
+    safe = jnp.clip(idx, 0, n - 1)
+    live = (idx >= 0) & (idx < n)
+    cb = jnp.take_along_axis(cbar, safe, axis=1) * live         # [B, K]
+    return jnp.einsum("bk,bkp->p", cb, vals)
 
 
 def compact_to_dense(Mc: CompactInfluence, n: int) -> jax.Array:

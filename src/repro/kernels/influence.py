@@ -2,6 +2,12 @@
 
     out[b] = D(hp[b]) . ( J-hat[b] @ M[b] + M-bar[b] )        (paper Eq. 10)
 
+M/Mbar are in the FLAT layout (`repro.core.sparse_rtrl.FlatLayout`): every
+gate's (q, m) parameter columns concatenated into one lane-padded [B, n, P]
+buffer, so a single kernel invocation per step covers all gates of the EGRU
+cell — this is the `backend="pallas"` hot path of
+`sparse_rtrl_loss_and_grads`.
+
 This is THE compute hot-spot of RTRL (O(n^2 p) per step).  The TPU
 adaptation (DESIGN.md §3) realises the paper's four sparsity factors at
 block granularity via scalar-prefetched masks:
@@ -30,6 +36,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# renamed across JAX versions (TPUCompilerParams -> CompilerParams)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
 
 
 def _kernel(row_mask_ref, prev_mask_ref, col_mask_ref, jmask_ref,
@@ -91,6 +101,8 @@ def influence_update_pallas(hp, Jhat, M, Mbar, *, row_mask, prev_mask,
             out_specs=pl.BlockSpec((1, bk, bp), lambda b, kb, pb, *_: (b, kb, pb)),
         ),
         out_shape=jax.ShapeDtypeStruct((B, n, P), M.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(row_mask, prev_mask, col_mask, jmask, hp, Jhat, M, Mbar)
     return out
@@ -104,3 +116,33 @@ def block_any(x: jax.Array, block: int, axis: int) -> jax.Array:
     shape[axis:axis + 1] = [nb, block]
     xr = x.reshape(shape)
     return jnp.any(xr != 0, axis=axis + 1).astype(jnp.int32)
+
+
+def build_block_masks(hp_p, M_p, col_mask, jmask, *, bk: int, bl: int,
+                      bp: int):
+    """Derive the four per-step block-activity masks the kernel prefetches.
+
+    Inputs are already padded to tile multiples (hp_p [B, n_p], M_p
+    [B, n_p, P_p]); col_mask is the [P] parameter-column liveness and jmask
+    the [n, n] J pattern (both optional, unpadded).  Returns int32
+    (row_mask [B, n_p/bk], prev_mask [B, n_p/bl], col_blocks [P_p/bp],
+    j_blocks [n_p/bk, n_p/bl])."""
+    n_p, P_p = M_p.shape[1], M_p.shape[2]
+    row_mask = block_any(hp_p, bk, axis=1)
+    prev_mask = block_any(jnp.any(M_p != 0, axis=2).astype(jnp.int32),
+                          bl, axis=1)
+    if col_mask is None:
+        col_blocks = jnp.ones((P_p // bp,), jnp.int32)
+    else:
+        cm = col_mask.astype(jnp.int32)
+        cm = jnp.pad(cm, (0, P_p - cm.shape[0]))
+        col_blocks = block_any(cm[None], bp, axis=1)[0]
+    if jmask is None:
+        j_blocks = jnp.ones((n_p // bk, n_p // bl), jnp.int32)
+    else:
+        jmT = jmask.T.astype(jnp.int32)                     # [k, l]
+        jmT = jnp.pad(jmT, ((0, n_p - jmT.shape[0]), (0, n_p - jmT.shape[1])))
+        j_blocks = jnp.any(
+            jmT.reshape(n_p // bk, bk, n_p // bl, bl) != 0,
+            axis=(1, 3)).astype(jnp.int32)
+    return row_mask, prev_mask, col_blocks, j_blocks

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.event_matmul import event_matmul_pallas
-from repro.kernels.influence import block_any, influence_update_pallas
+from repro.kernels.influence import (block_any, build_block_masks,
+                                     influence_update_pallas)
 
 
 def _on_tpu() -> bool:
@@ -52,21 +53,8 @@ def influence_update(hp, Jhat, M, Mbar, jmask=None, col_mask=None, *,
     J_p = jnp.pad(J_p, [(0, 0), (0, n_p - J_p.shape[1]), (0, 0)])[:, :, :n_p] \
         if J_p.shape[1] != n_p else J_p
 
-    row_mask = block_any(hp_p, bk, axis=1)                       # [B, nkb]
-    prev_mask = block_any(jnp.any(M_p != 0, axis=2).astype(jnp.int32),
-                          bl, axis=1)
-    if col_mask is None:
-        col_cols = jnp.ones((P_p // bp,), jnp.int32)
-    else:
-        col_cols = block_any(_pad_to(col_mask.astype(jnp.int32), bp, 0)[None],
-                             bp, axis=1)[0]
-    if jmask is None:
-        jm = jnp.ones((n_p // bk, n_p // bl), jnp.int32)
-    else:
-        jmT = _pad_to(_pad_to(jmask.T.astype(jnp.int32), bk, 0), bl, 1)
-        jm = jnp.any(
-            jmT.reshape(n_p // bk, bk, n_p // bl, bl) != 0,
-            axis=(1, 3)).astype(jnp.int32)
+    row_mask, prev_mask, col_cols, jm = build_block_masks(
+        hp_p, M_p, col_mask, jmask, bk=bk, bl=bl, bp=bp)
 
     out = influence_update_pallas(
         hp_p.astype(jnp.float32), J_p.astype(jnp.float32),

@@ -13,6 +13,15 @@ def influence_ref(hp, Jhat, M, Mbar):
             * (T + Mbar.astype(jnp.float32))).astype(M.dtype)
 
 
+def influence_grads_ref(cbar, M):
+    """Flat gradient extraction  dL/dw = c-bar^T M.  [B,n] x [B,n,P] -> [P].
+
+    Oracle for the fused compact-form extraction (kernels/compact.py
+    ``compact_grads``), which never scatters M back to dense."""
+    return jnp.einsum("bk,bkp->p", cbar.astype(jnp.float32),
+                      M.astype(jnp.float32))
+
+
 def event_matmul_ref(a, R):
     """y[b] = a[b] @ R with a activity-sparse.  [B,n] x [n,m] -> [B,m]."""
     return jnp.einsum("bn,nm->bm", a.astype(jnp.float32),

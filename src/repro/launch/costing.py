@@ -56,6 +56,17 @@ _BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
           "u8": 1, "pred": 1, "c64": 8, "c128": 16}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across JAX versions.
+
+    Older JAX returns a dict, newer returns a list with one dict per
+    program (or None); always hand back a plain dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if ca else {}
+
+
 def parse_collective_bytes(hlo_text: str) -> dict:
     """Sum result-shape bytes per collective kind from optimized HLO."""
     out: dict[str, float] = {}
@@ -89,7 +100,7 @@ class Part:
         if self._measured is None:
             lowered = self.lower()
             compiled = lowered.compile()
-            ca = compiled.cost_analysis() or {}
+            ca = cost_analysis_dict(compiled)
             text = compiled.as_text()
             coll = parse_collective_bytes(text)
             self._measured = {

@@ -12,8 +12,9 @@ import jax
 from repro.configs import SHAPES, get_config
 from repro.launch import steps as steps_lib
 from repro.launch.costing import (HBM_BW, ICI_BW, PEAK_FLOPS, Part,
-                                  family_children, model_flops,
-                                  model_param_counts, parse_collective_bytes)
+                                  cost_analysis_dict, family_children,
+                                  model_flops, model_param_counts,
+                                  parse_collective_bytes)
 from repro.launch.mesh import make_production_mesh
 
 
@@ -69,7 +70,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             rec["compile_s"] = round(time.time() - t1, 1)
 
             print(compiled.memory_analysis())       # proves it fits (or not)
-            ca = compiled.cost_analysis() or {}
+            ca = cost_analysis_dict(compiled)
             print({k: ca.get(k) for k in ("flops", "bytes accessed")})
 
             rec["memory"] = _mem_stats(compiled)

@@ -40,15 +40,27 @@ def microbatch_grads(loss_fn: Callable, params: Tree, batch: Tree,
             return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
         return jax.tree.map(f, b)
 
+    def kahan_add(acc, comp, x):
+        # compensated accumulation: sequential f32 += drifts by ~n_micro ulps,
+        # which is what makes microbatch grads diverge from the full batch
+        y = x - comp
+        t = acc + y
+        return t, (t - acc) - y
+
     def body(carry, i):
-        loss_acc, grads_acc = carry
+        loss_acc, loss_c, grads_acc, grads_c = carry
         loss, grads = jax.value_and_grad(loss_fn)(params, slice_batch(batch, i))
-        grads_acc = jax.tree.map(
-            lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
-        return (loss_acc + loss, grads_acc), None
+        loss_acc, loss_c = kahan_add(loss_acc, loss_c, loss)
+        new = jax.tree.map(lambda a, c, g: kahan_add(a, c, g.astype(jnp.float32)),
+                           grads_acc, grads_c, grads)
+        grads_acc = jax.tree.map(lambda _, p: p[0], grads_acc, new)
+        grads_c = jax.tree.map(lambda _, p: p[1], grads_c, new)
+        return (loss_acc, loss_c, grads_acc, grads_c), None
 
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros),
-                                    jnp.arange(n_micro))
+    zeros_c = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, _, grads, _), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0), zeros, zeros_c),
+        jnp.arange(n_micro))
     inv = 1.0 / n_micro
     return loss * inv, jax.tree.map(lambda g: g * inv, grads)

@@ -55,13 +55,14 @@ def test_capacity_is_static_and_memory_beta_scaled():
 def test_compact_flop_scaling():
     """FLOP count of the compact update scales as K^2 (beta~^2 n^2 p)."""
     def flops_for(capacity):
+        from repro.launch.costing import cost_analysis_dict
         cfg, params, _ = _setup(n=64, capacity=capacity)
         w = cells.rec_param_tree(params)
         x = jnp.zeros((cfg.batch, cfg.n_in))
         st = SR.init_state(cfg)
         c = jax.jit(lambda s, x: SR.compact_step(cfg, w, s, x)[0]) \
             .lower(st, x).compile()
-        return (c.cost_analysis() or {}).get("flops", 0.0), cfg.K
+        return cost_analysis_dict(c).get("flops", 0.0), cfg.K
 
     f_full, k_full = flops_for(1.0)
     f_half, k_half = flops_for(0.5)
