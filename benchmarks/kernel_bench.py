@@ -23,9 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cells, sparse_rtrl as SP
+from repro.core import cells, sparse_rtrl as SP, stacked_rtrl as ST
 from repro.core.cells import EGRUConfig
-from repro.core.costs import influence_update_flops, savings_factor, tpu_block_factor
+from repro.core.costs import (influence_update_flops, savings_factor,
+                              stacked_influence_update_flops,
+                              tpu_block_factor)
 from repro.core.sparse_rtrl import make_masks
 from repro.kernels import ops
 from repro.kernels.compact import (compact_grads, compact_influence_step,
@@ -66,6 +68,7 @@ def run(rows: list):
                      f"K={K}_ideal={(1-beta)**2:.4f}"))
 
     egru_step_bench(rows, n=96, beta=0.8, reps=2)   # smoke-sized wall clock
+    stacked_egru_step_bench(rows, n=96, L=2, beta=0.8, reps=1)
     return rows
 
 
@@ -138,6 +141,110 @@ def egru_step_bench(rows: list, n=256, n_in=8, beta=0.8, batch=1,
     return rec
 
 
+def stacked_egru_step_bench(rows: list, n=256, L=2, n_in=8, beta=0.8,
+                            batch=1, margin=1.25, reps=3) -> dict:
+    """Dense vs row-compact wall clock for ONE full STACKED EGRU RTRL step
+    (per-layer partials + all (l, j) block updates + gradient extraction).
+
+    The dense step carries each layer's blocks at their structural width
+    (columns of layers j <= l) and contracts at n^2; the compact step is
+    `stacked_rtrl.stacked_compact_step` at static per-layer capacity
+    K = ceil((1-beta) * margin * n) — the paper's beta~^2 savings, per
+    block, as measured milliseconds."""
+    base = EGRUConfig(n_hidden=n, n_in=n_in, n_out=4, kind="gru", eps=0.12)
+    scfg = cells.stacked_config(base, L)
+    slayout = ST.stacked_layout(scfg)
+    lcfgs = [scfg.layer_cfg(l) for l in range(L)]
+    key = jax.random.key(0)
+    params = cells.init_stacked_params(scfg, key)
+    # upper layers see binary activity (weaker drive than the scaled input),
+    # so they need a stronger threshold to reach the same beta regime
+    for l, p in enumerate(params["layers"]):
+        p["theta"] = (0.4 if l == 0 else 0.9) + p["theta"]
+    ws = params["layers"]
+    K = SP.capacity_K(n, (1.0 - beta) * margin)
+    a_prevs = tuple(
+        (jax.random.uniform(jax.random.fold_in(key, 10 + l),
+                            (batch, n)) > 0.5) * 1.0 for l in range(L))
+    x = 4.0 * jax.random.normal(jax.random.fold_in(key, 2), (batch, n_in))
+    cbar = jax.random.normal(jax.random.fold_in(key, 3), (batch, n))
+    # structural column widths of the dense reference: layer l carries j <= l
+    widths = [slayout.offsets[l] + slayout.layers[l].P for l in range(L)]
+
+    def dense_step(a_prevs, Ms, x, cbar):
+        inp = x
+        a_news, M_news = [], []
+        for l in range(L):
+            lay = slayout.layers[l]
+            if l == 0:
+                a_new, hp, Jhat, mbar = SP.cell_partials(
+                    lcfgs[l], ws[l], a_prevs[l], inp)
+                cross = 0.0
+            else:
+                a_new, hp, Jhat, Bhat, mbar = SP.cell_partials_full(
+                    lcfgs[l], ws[l], a_prevs[l], inp)
+                cross = jnp.pad(
+                    jnp.einsum("bkj,bjp->bkp", Bhat, M_news[l - 1]),
+                    ((0, 0), (0, 0), (0, widths[l] - widths[l - 1])))
+            Mb = SP.flat_mbar(lcfgs[l], lay, mbar,
+                              offset=slayout.offsets[l],
+                              total_pad=widths[l])
+            M_new = hp[:, :, None] * (
+                jnp.einsum("bkl,blp->bkp", Jhat, Ms[l]) + cross + Mb)
+            a_news.append(a_new)
+            M_news.append(M_new)
+            inp = a_new
+        gw = jnp.einsum("bk,bkp->p", cbar, M_news[-1])
+        return tuple(a_news), tuple(M_news), gw
+
+    def comp_step(a_prevs, vals, idx, x, cbar):
+        a_news, hps, vals_n, idx_n, ov = ST.stacked_compact_step(
+            scfg, ws, slayout, a_prevs, vals, idx, x)
+        return a_news, vals_n, idx_n, compact_grads(vals_n[-1], idx_n[-1],
+                                                    cbar)
+
+    M0 = tuple(jnp.zeros((batch, n, w), jnp.float32) for w in widths)
+    vals0 = tuple(jnp.zeros((batch, K, slayout.P_pad), jnp.float32)
+                  for _ in range(L))
+    idx0 = tuple(jnp.full((batch, K), -1, jnp.int32) for _ in range(L))
+
+    # measured per-layer backward sparsity at this operating point
+    betas, inp = [], x
+    max_active = 0
+    for l in range(L):
+        a_new, hp, _, _ = SP.cell_partials(lcfgs[l], ws[l], a_prevs[l], inp)
+        betas.append(float(jnp.mean(hp == 0.0)))
+        max_active = max(max_active, int(jnp.max(jnp.sum(hp != 0.0, axis=1))))
+        inp = a_new
+
+    f_dense = jax.jit(dense_step).lower(a_prevs, M0, x, cbar).compile()
+    f_comp = jax.jit(comp_step).lower(a_prevs, vals0, idx0, x, cbar).compile()
+    t_d = _time_ms(f_dense, (a_prevs, M0, x, cbar), reps)
+    t_c = _time_ms(f_comp, (a_prevs, vals0, idx0, x, cbar), reps)
+
+    Ps = [lay.P for lay in slayout.layers]
+    ns = list(scfg.layer_sizes)
+    Kf = K / n
+    ideal = (stacked_influence_update_flops(
+                 ns, Ps, betas_t=[1 - Kf] * L, betas_prev=[1 - Kf] * L)
+             ["sparse"]
+             / stacked_influence_update_flops(ns, Ps)["dense"])
+    rec = {"n": n, "L": L, "n_in": n_in, "batch": batch,
+           "beta_target": beta,
+           "beta_measured": [round(b, 4) for b in betas], "K": K,
+           "max_active_rows": max_active, "overflow": max(0, max_active - K),
+           "P_total": slayout.P_total,
+           "dense_ms": round(t_d, 3), "compact_ms": round(t_c, 3),
+           "ratio_compact_over_dense": round(t_c / t_d, 4),
+           "speedup": round(t_d / t_c, 2), "ideal_flop_ratio": round(ideal, 4)}
+    rows.append((f"kernel/stacked_egru_step/n{n}_L{L}/dense_ms",
+                 f"{t_d:.1f}", "per_step"))
+    rows.append((f"kernel/stacked_egru_step/n{n}_L{L}/compact_ms",
+                 f"{t_c:.1f}",
+                 f"x{t_d / t_c:.2f}_speedup_ideal_x{1 / max(ideal, 1e-9):.2f}"))
+    return rec
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -145,6 +252,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, nargs="+", default=[256, 384])
+    ap.add_argument("--stacked-n", type=int, nargs="+", default=[256])
+    ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--beta", type=float, default=0.8)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
@@ -153,11 +262,16 @@ if __name__ == "__main__":
     rows: list = []
     recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
             for n in args.n]
+    stacked_recs = [stacked_egru_step_bench(rows, n=n, L=args.layers,
+                                            beta=args.beta, reps=args.reps)
+                    for n in args.stacked_n]
     for r in rows:
         print(",".join(str(x) for x in r))
     out = {"egru_step": recs,
-           "note": "dense = masked-dense per-gate reference; compact = "
-                   "flat-influence row-compact engine (sparse_rtrl backend="
-                   "'compact'); CPU wall clock, f32"}
+           "stacked_egru_step": stacked_recs,
+           "note": "dense = masked-dense per-gate reference (stacked: "
+                   "structural-width flat blocks); compact = flat-influence "
+                   "row-compact engine (sparse_rtrl backend='compact' / "
+                   "stacked_rtrl.stacked_compact_step); CPU wall clock, f32"}
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"wrote {args.out}")

@@ -1,5 +1,14 @@
-"""Wall-clock scaling of the RTRL variants vs hidden size (CPU timings are
-indicative; the structural claim is the op-count ratio, which is exact)."""
+"""Wall-clock scaling of the RTRL variants vs hidden size and vs DEPTH
+(CPU timings are indicative; the structural claim is the op-count ratio,
+which is exact).
+
+Besides BPTT / the generic jacrev oracle / the structured dense engine,
+this times the engine's actual fast paths — backend="compact" (row
+compaction, real CPU speedup) and backend="pallas" (block-sparse kernel;
+interpret mode off-TPU, so its CPU numbers validate dispatch rather than
+speed) — and the stacked engine's dense-vs-compact wall clock as the layer
+count grows (`repro.core.stacked_rtrl`).
+"""
 from __future__ import annotations
 
 import time
@@ -7,7 +16,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import bptt, cells, rtrl, sparse_rtrl
+from repro.core import bptt, cells, rtrl, sparse_rtrl, stacked_rtrl
 from repro.core.cells import EGRUConfig
 
 
@@ -21,7 +30,8 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6      # us
 
 
-def run(rows: list, sizes=(16, 32, 64), T=17, B=32):
+def run(rows: list, sizes=(16, 32, 64), T=17, B=32, depths=(1, 2, 3),
+        n_depth=32):
     for n in sizes:
         cfg = EGRUConfig(n_hidden=n, n_in=2)
         params = cells.init_params(cfg, jax.random.key(0))
@@ -30,14 +40,41 @@ def run(rows: list, sizes=(16, 32, 64), T=17, B=32):
 
         f_bptt = jax.jit(lambda p, x, y: bptt.bptt_loss_and_grads(cfg, p, x, y)[0])
         f_struct = jax.jit(lambda p, x, y: sparse_rtrl.sparse_rtrl_loss_and_grads(cfg, p, x, y)[0])
+        f_comp = jax.jit(lambda p, x, y: sparse_rtrl.sparse_rtrl_loss_and_grads(
+            cfg, p, x, y, backend="compact")[0])
         t_bptt = _time(f_bptt, params, xs, ys)
         t_struct = _time(f_struct, params, xs, ys)
+        t_comp = _time(f_comp, params, xs, ys)
         rows.append((f"scaling/n{n}/bptt", f"{t_bptt:.0f}", "us_per_seq"))
         rows.append((f"scaling/n{n}/sparse_rtrl_structured", f"{t_struct:.0f}",
                      f"x{t_struct / t_bptt:.1f}_vs_bptt"))
-        if n <= 32:   # generic oracle is O(n^2 p) with jacrev: keep small
+        rows.append((f"scaling/n{n}/sparse_rtrl_compact", f"{t_comp:.0f}",
+                     f"x{t_comp / t_struct:.2f}_vs_structured"))
+        if n <= 32:   # interpret-mode Pallas and the O(n^2 p) oracle: small n
+            f_pal = jax.jit(lambda p, x, y: sparse_rtrl.sparse_rtrl_loss_and_grads(
+                cfg, p, x, y, backend="pallas")[0])
+            t_pal = _time(f_pal, params, xs, ys, reps=1)
+            rows.append((f"scaling/n{n}/sparse_rtrl_pallas", f"{t_pal:.0f}",
+                         "interpret_mode_off_tpu"))
             f_gen = jax.jit(lambda p, x, y: rtrl.rtrl_loss_and_grads(cfg, p, x, y)[0])
             t_gen = _time(f_gen, params, xs, ys)
             rows.append((f"scaling/n{n}/generic_rtrl", f"{t_gen:.0f}",
                          f"x{t_gen / t_struct:.1f}_vs_structured"))
+
+    # depth sweep: exact stacked RTRL, dense vs row-compact carry
+    for L in depths:
+        scfg = cells.stacked_config(EGRUConfig(n_hidden=n_depth, n_in=2), L)
+        sparams = cells.init_stacked_params(scfg, jax.random.key(0))
+        xs = jax.random.normal(jax.random.key(1), (T, B, 2))
+        ys = jnp.zeros((B,), jnp.int32)
+        f_sd = jax.jit(lambda p, x, y: stacked_rtrl.stacked_rtrl_loss_and_grads(
+            scfg, p, x, y, backend="dense", delegate_single_layer=False)[0])
+        f_sc = jax.jit(lambda p, x, y: stacked_rtrl.stacked_rtrl_loss_and_grads(
+            scfg, p, x, y, backend="compact", delegate_single_layer=False)[0])
+        t_sd = _time(f_sd, sparams, xs, ys)
+        t_sc = _time(f_sc, sparams, xs, ys)
+        rows.append((f"scaling/depth/L{L}_n{n_depth}/stacked_dense",
+                     f"{t_sd:.0f}", "us_per_seq"))
+        rows.append((f"scaling/depth/L{L}_n{n_depth}/stacked_compact",
+                     f"{t_sc:.0f}", f"x{t_sd / t_sc:.2f}_vs_dense"))
     return rows

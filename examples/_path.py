@@ -1,0 +1,27 @@
+"""Shared sys.path bootstrap for the example scripts.
+
+The examples run straight from a checkout (no install step), so they need
+``src/`` (the package) on the path.  Import this ONCE at the top of an
+example instead of repeating the ``sys.path.insert`` surgery:
+
+    import _path  # noqa: F401
+
+``benchmarks/`` holds generically named driver modules (run.py,
+scaled_rtrl.py, ...), so it is NOT added by default — the one example that
+drives a benchmark module calls ``_path.add_benchmarks()`` explicitly.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def add_benchmarks() -> None:
+    """Expose benchmarks/ (figure/benchmark drivers) to this example."""
+    bench = os.path.join(_ROOT, "benchmarks")
+    if bench not in sys.path:
+        sys.path.insert(0, bench)

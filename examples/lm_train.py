@@ -7,10 +7,8 @@ Uses a ~100M reduced config of the chosen family (real vocab, fewer/narrower
 layers) on the host mesh; the same step builders drive the production mesh.
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _path  # noqa: F401
 
 import jax
 import jax.numpy as jnp

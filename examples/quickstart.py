@@ -2,10 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _path  # noqa: F401
 
 import jax
 import jax.numpy as jnp

@@ -3,11 +3,9 @@
     PYTHONPATH=src python examples/serve_demo.py [--arch rwkv6-3b]
 """
 import argparse
-import os
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _path  # noqa: F401
 
 import numpy as np
 

@@ -7,11 +7,10 @@ Writes accuracy-vs-iteration and accuracy-vs-compute-adjusted-iteration
 curves plus sparsity traces to experiments/fig3/ (results.json, fig3.png).
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+import _path
+
+_path.add_benchmarks()
 
 import fig3_spiral  # noqa: E402
 

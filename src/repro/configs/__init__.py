@@ -25,7 +25,7 @@ ARCHS = {
 
 
 def get_config(name: str) -> ModelConfig:
-    if name == "egru_spiral":
+    if name in ("egru_spiral", "egru-spiral"):
         from repro.configs.egru_spiral import CONFIG
         return CONFIG
     mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")

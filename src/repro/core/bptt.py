@@ -23,6 +23,18 @@ def bptt_loss_and_grads(cfg: EGRUConfig, params, xs, labels):
     return loss, grads, stats
 
 
+def stacked_bptt_loss_and_grads(cfg, params, xs, labels):
+    """Stacked BPTT oracle (cfg: cells.StackedEGRUConfig): reverse-mode
+    through the unrolled L-layer stack — the exactness reference for
+    `repro.core.stacked_rtrl`."""
+
+    def loss_fn(params):
+        return cells.stacked_sequence_loss(cfg, params, xs, labels)
+
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    return loss, grads, stats
+
+
 def bptt_train_step(cfg: EGRUConfig, params, opt, opt_state, batch, step,
                     masks=None):
     xs, labels = batch

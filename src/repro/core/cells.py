@@ -171,6 +171,127 @@ def readout(params: dict, a: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Stacked networks: L event-based layers, layer l driven by a^{l-1}_t
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackedEGRUConfig:
+    """A stack of EGRU/ERNN layers with a shared readout from the top layer.
+
+    Layer 0 sees the input x_t; layer l >= 1 sees the *current-step* sparse
+    activity a^{l-1}_t of the layer below — the architecture of the
+    activity-sparse EGRU LMs (Subramoney et al. 2022).  The stacked state
+    Jacobian is block lower-triangular, so exact RTRL factors into
+    (l, j) influence blocks (see repro.core.stacked_rtrl)."""
+    layer_sizes: tuple = (16, 16)
+    n_in: int = 2
+    n_out: int = 2
+    kind: str = "gru"              # 'gru' | 'rnn'  (homogeneous stack)
+    dense: bool = False
+    gamma: float = 1.0
+    eps: float = 0.3
+    seq_len: int = 17
+    batch_size: int = 32
+    iterations: int = 1700
+    lr: float = 5e-3
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_sizes)
+
+    def layer_in(self, l: int) -> int:
+        """Input width of layer l (x for l=0, the layer below otherwise)."""
+        return self.n_in if l == 0 else self.layer_sizes[l - 1]
+
+    def layer_cfg(self, l: int) -> EGRUConfig:
+        """The single-layer view of layer l (its cell math is unchanged)."""
+        return EGRUConfig(
+            n_hidden=self.layer_sizes[l], n_in=self.layer_in(l),
+            n_out=self.n_out, kind=self.kind, dense=self.dense,
+            gamma=self.gamma, eps=self.eps, seq_len=self.seq_len,
+            batch_size=self.batch_size, iterations=self.iterations,
+            lr=self.lr, param_dtype=self.param_dtype)
+
+    @property
+    def n_rec_params(self) -> int:
+        return sum(self.layer_cfg(l).n_rec_params
+                   for l in range(self.n_layers))
+
+    def replace(self, **kw) -> "StackedEGRUConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def stacked_config(cfg: EGRUConfig, n_layers: int,
+                   layer_sizes: tuple | None = None) -> StackedEGRUConfig:
+    """Lift a single-layer config to an L-layer stack (same width per layer
+    unless explicit `layer_sizes` are given)."""
+    sizes = tuple(layer_sizes) if layer_sizes is not None \
+        else (cfg.n_hidden,) * n_layers
+    assert len(sizes) == n_layers, (sizes, n_layers)
+    return StackedEGRUConfig(
+        layer_sizes=sizes, n_in=cfg.n_in, n_out=cfg.n_out, kind=cfg.kind,
+        dense=cfg.dense, gamma=cfg.gamma, eps=cfg.eps, seq_len=cfg.seq_len,
+        batch_size=cfg.batch_size, iterations=cfg.iterations, lr=cfg.lr,
+        param_dtype=cfg.param_dtype)
+
+
+def init_stacked_params(cfg: StackedEGRUConfig, key: jax.Array) -> dict:
+    """{"layers": [w^0, ..., w^{L-1}], "out": readout from the top layer}.
+
+    "layers" is a LIST (not a tuple): the optimizers' tree walks treat
+    tuples as packed per-leaf results."""
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    for l in range(cfg.n_layers):
+        p = init_params(cfg.layer_cfg(l), keys[l])
+        p.pop("out")
+        layers.append(p)
+    n_top = cfg.layer_sizes[-1]
+    out = {"W": (1.0 / math.sqrt(n_top) *
+                 jax.random.normal(keys[-1], (n_top, cfg.n_out))
+                 ).astype(cfg.param_dtype),
+           "b": jnp.zeros((cfg.n_out,), cfg.param_dtype)}
+    return {"layers": layers, "out": out}
+
+
+def init_stacked_state(cfg: StackedEGRUConfig, batch: int) -> tuple:
+    return tuple(jnp.zeros((batch, n), jnp.float32)
+                 for n in cfg.layer_sizes)
+
+
+def stacked_step_straight_through(cfg: StackedEGRUConfig, ws: tuple,
+                                  a_prevs: tuple, x_t: jax.Array) -> tuple:
+    """One stacked step with the shared surrogate gradient; layer l's input
+    is the freshly computed a^{l-1}_t (bottom-up within the step)."""
+    inp = x_t
+    outs = []
+    for l in range(cfg.n_layers):
+        a_l = step_straight_through(cfg.layer_cfg(l), ws[l], a_prevs[l], inp)
+        outs.append(a_l)
+        inp = a_l
+    return tuple(outs)
+
+
+def stacked_sequence_loss(cfg: StackedEGRUConfig, params: dict,
+                          xs: jax.Array, labels: jax.Array):
+    """Online-decomposable stacked loss L = (1/T) sum_t CE(logits_t, y);
+    logits read from the top layer only (shared readout)."""
+    ws = params["layers"]
+    a0 = init_stacked_state(cfg, xs.shape[1])
+
+    def body(a_prevs, x_t):
+        a_new = stacked_step_straight_through(cfg, ws, a_prevs, x_t)
+        alpha = jnp.stack([jnp.mean(a == 0.0) for a in a_new])
+        return a_new, (readout(params, a_new[-1]), alpha)
+
+    _, (logits_t, alpha_t) = jax.lax.scan(body, a0, xs)
+    losses = jax.vmap(lambda lg: xent(lg, labels))(logits_t)
+    stats = {"alpha": alpha_t.mean(), "alpha_layers": alpha_t.mean(axis=0)}
+    return losses.mean(), stats
+
+
+# ---------------------------------------------------------------------------
 # Sequence-level loss (mean-over-time logits -> softmax CE)
 # ---------------------------------------------------------------------------
 

@@ -113,6 +113,56 @@ def influence_update_flops(n: int, P: int, K: int | None = None,
     return 2.0 * K * (K if K_prev is None else K_prev) * P
 
 
+def stacked_influence_update_flops(ns, Ps, betas_t=None, betas_prev=None,
+                                   omegas=None) -> dict:
+    """Op accounting for ONE stacked influence update as the sum over the
+    block lower-triangular (l, j) blocks (core/stacked_rtrl).
+
+    Per block (l, j <= l), with per-layer densities b~_l = 1 - beta_l and
+    w~_l = 1 - omega_l (madd = 2 ops):
+
+      J-term      2 w~_l b~_l(t) b~_l(t-1) n_l^2 . w~_j P_j
+      cross-term  2 w~_l b~_l(t) b~_{l-1}(t) n_l n_{l-1} . w~_j P_j  (l > 0)
+
+    — the cross-layer injection is event-sparse on BOTH sides because layer
+    l's input is the layer below's sparse activity.  betas/omegas default to
+    0 (dense).  Returns {"dense", "sparse", "savings", "blocks"} where
+    blocks maps (l, j) -> (J-term flops, cross-term flops)."""
+    L = len(ns)
+    ns = np.asarray(ns, float)
+    Ps = np.asarray(Ps, float)
+    bt = 1.0 - np.asarray(betas_t if betas_t is not None else [0.0] * L)
+    btp = 1.0 - np.asarray(betas_prev if betas_prev is not None
+                           else (betas_t if betas_t is not None
+                                 else [0.0] * L))
+    wt = 1.0 - np.asarray(omegas if omegas is not None else [0.0] * L)
+    blocks, dense, sparse = {}, 0.0, 0.0
+    for l in range(L):
+        for j in range(l + 1):
+            jterm = 2.0 * wt[l] * bt[l] * btp[l] * ns[l] ** 2 * wt[j] * Ps[j]
+            jdense = 2.0 * ns[l] ** 2 * Ps[j]
+            xterm = xdense = 0.0
+            if l > 0:
+                xterm = (2.0 * wt[l] * bt[l] * bt[l - 1]
+                         * ns[l] * ns[l - 1] * wt[j] * Ps[j])
+                xdense = 2.0 * ns[l] * ns[l - 1] * Ps[j]
+            blocks[(l, j)] = (jterm, xterm)
+            dense += jdense + xdense
+            sparse += jterm + xterm
+    return {"dense": dense, "sparse": sparse,
+            "savings": sparse / dense if dense else 1.0, "blocks": blocks}
+
+
+def stacked_savings_factor(betas_t, betas_prev, omegas=None) -> float:
+    """Aggregate per-step savings of the stacked update vs its dense form —
+    the depth generalization of `savings_factor` (uses unit widths/params,
+    so it is exact when all layers share one width)."""
+    L = len(betas_t)
+    acc = stacked_influence_update_flops([1.0] * L, [1.0] * L, betas_t,
+                                         betas_prev, omegas)
+    return float(acc["savings"])
+
+
 def measured_op_count(ci: CostInputs, beta_t: float, beta_prev: float) -> dict:
     """Exact op counts for one influence update with given measured sparsity
     (what the hardware-optimal implementation would execute)."""

@@ -17,6 +17,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core import cells
@@ -75,6 +76,62 @@ def rtrl_loss_and_grads(cfg: EGRUConfig, params: dict, xs: jax.Array,
     grads = dict(unravel(gw))
     grads["out"] = gout
     return loss, grads, jax.tree.map(jnp.mean, stats)
+
+
+def stacked_rtrl_loss_and_grads(cfg, params: dict, xs: jax.Array,
+                                labels: jax.Array):
+    """Generic exact stacked-RTRL oracle (cfg: cells.StackedEGRUConfig).
+
+    Treats the whole stack as ONE cell with state s_t = (a^0_t, ..,
+    a^{L-1}_t) concatenated to [B, N_tot] and influence M [B, N_tot, p_tot]
+    via jacrev — O(N_tot^2 p_tot) per step, the intractable baseline the
+    block-structured engine (core/stacked_rtrl) must match.  The full
+    Jacobian it differentiates is block lower-triangular; the structured
+    engine exploits that, this oracle does not."""
+    T, B, _ = xs.shape
+    sizes = cfg.layer_sizes
+    N = sum(sizes)
+    bounds = np.cumsum((0,) + sizes)
+    w_flat, unravel = ravel_pytree({"layers": params["layers"]})
+    p = w_flat.shape[0]
+
+    def step_flat(wf, s, x):
+        ws = unravel(wf)["layers"]
+        a_prevs = tuple(s[:, bounds[l]:bounds[l + 1]]
+                        for l in range(cfg.n_layers))
+        a_new = cells.stacked_step_straight_through(cfg, ws, a_prevs, x)
+        return jnp.concatenate(a_new, axis=1)
+
+    def step_loss(params_out, s, y):
+        logits = cells.readout({"out": params_out}, s[:, N - sizes[-1]:])
+        return cells.xent(logits, y) / T
+
+    M0 = jnp.zeros((B, N, p), jnp.float32)
+    s0 = jnp.concatenate(cells.init_stacked_state(cfg, B), axis=1)
+
+    def body(carry, x_t):
+        s, M, gw, gout, loss = carry
+        J = jax.vmap(jax.jacrev(
+            lambda si, xi: step_flat(w_flat, si[None], xi[None])[0]))(s, x_t)
+        Mbar = jax.jacrev(lambda wf: step_flat(wf, s, x_t))(w_flat)
+        s_new = step_flat(w_flat, s, x_t)
+        M_new = jnp.einsum("bkl,blp->bkp", J, M) + Mbar
+        lt, cbar = jax.value_and_grad(
+            lambda si: step_loss(params["out"], si, labels))(s_new)
+        gout_t = jax.grad(
+            lambda po: step_loss(po, s_new, labels))(params["out"])
+        gw_new = gw + jnp.einsum("bk,bkp->p", cbar, M_new)
+        gout_new = jax.tree.map(jnp.add, gout, gout_t)
+        return (s_new, M_new, gw_new, gout_new, loss + lt), None
+
+    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                         params["out"])
+    (s, M, gw, gout, loss), _ = jax.lax.scan(
+        body, (s0, M0, jnp.zeros((p,), jnp.float32), gout0, jnp.float32(0)),
+        xs)
+    grads = unravel(gw)
+    grads["out"] = gout
+    return loss, grads, {}
 
 
 def rtrl_online_train(cfg: EGRUConfig, params: dict, xs: jax.Array,

@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cells, sparse_rtrl
-from repro.core.cells import EGRUConfig
+from repro.core.cells import EGRUConfig, StackedEGRUConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +49,7 @@ class ScaledRTRLConfig:
     n_in: int = 128
     n_out: int = 8
     batch: int = 8
+    n_layers: int = 1               # > 1: stacked network, equal widths
     beta_capacity: float = 0.5      # K = ceil(beta_capacity * n), static
     sparsity: float = 0.9           # parameter sparsity (block mask)
     mask_block: int = 8
@@ -67,12 +68,26 @@ class ScaledRTRLConfig:
         return EGRUConfig(n_hidden=self.n, n_in=self.n_in, n_out=self.n_out,
                           kind="rnn", gamma=self.gamma, eps=self.eps)
 
+    def stacked_cfg(self) -> StackedEGRUConfig:
+        return cells.stacked_config(self.cell_cfg(), self.n_layers)
+
     def layout(self) -> "sparse_rtrl.FlatLayout":
         return sparse_rtrl.flat_layout(self.cell_cfg())
+
+    def slayout(self):
+        from repro.core import stacked_rtrl
+        return stacked_rtrl.stacked_layout(self.stacked_cfg())
 
 
 def init_params(cfg: ScaledRTRLConfig, key: jax.Array):
     from repro.core.sparse_rtrl import apply_masks, make_masks
+    if cfg.n_layers > 1:
+        from repro.core import stacked_rtrl as ST
+        scfg = cfg.stacked_cfg()
+        params = cells.init_stacked_params(scfg, key)
+        masks = ST.make_stacked_masks(scfg, jax.random.fold_in(key, 1),
+                                      cfg.sparsity, block=cfg.mask_block)
+        return ST.apply_stacked_masks(params, masks), masks
     params = cells.init_params(cfg.cell_cfg(), key)
     masks = make_masks(cfg.cell_cfg(), jax.random.fold_in(key, 1),
                        cfg.sparsity, block=cfg.mask_block)
@@ -85,6 +100,15 @@ def init_params(cfg: ScaledRTRLConfig, key: jax.Array):
 
 def init_state(cfg: ScaledRTRLConfig):
     B, K, n = cfg.batch, cfg.K, cfg.n
+    if cfg.n_layers > 1:
+        P_pad = cfg.slayout().P_pad
+        L = cfg.n_layers
+        return {
+            "a": tuple(jnp.zeros((B, n), jnp.float32) for _ in range(L)),
+            "vals": tuple(jnp.zeros((B, K, P_pad), jnp.float32)
+                          for _ in range(L)),
+            "idx": tuple(jnp.full((B, K), -1, jnp.int32) for _ in range(L)),
+        }
     return {
         "a": jnp.zeros((B, n), jnp.float32),
         "vals": jnp.zeros((B, K, cfg.layout().P_pad), jnp.float32),
@@ -96,7 +120,18 @@ def compact_step(cfg: ScaledRTRLConfig, w, state, x_t):
     """One RTRL step with row-compact flat influence.  FLOPs ~ K*K*n*m.
 
     Thin wrapper over `sparse_rtrl.flat_compact_step` (the shared engine);
-    J-hat tiles are looked up straight from R (rnn cell)."""
+    J-hat tiles are looked up straight from R (rnn cell).  With
+    `n_layers > 1`, `w` is the tuple of per-layer trees and every layer is
+    carried compact (`stacked_rtrl.stacked_compact_step`): the cross-layer
+    B-hat = W^T tiles are looked up from each layer's input matrix at the
+    active rows of the layer below — depth adds K*K*P per extra layer pair,
+    never n^2."""
+    if cfg.n_layers > 1:
+        from repro.core import stacked_rtrl as ST
+        a_new, _, vals, idx, overflow = ST.stacked_compact_step(
+            cfg.stacked_cfg(), w, cfg.slayout(), state["a"], state["vals"],
+            state["idx"], x_t)
+        return {"a": a_new, "vals": vals, "idx": idx}, overflow
     a_new, _, vals, idx, _, overflow = sparse_rtrl.flat_compact_step(
         cfg.cell_cfg(), w, cfg.layout(), state["a"], state["vals"],
         state["idx"], x_t)
@@ -133,11 +168,13 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
 
     Gradient extraction is fused into the compact form (compact_grads):
     c-bar gathered at the active rows — the dense [B, n, n, m] influence is
-    never materialized."""
+    never materialized.  With `n_layers > 1` the influence is the stacked
+    block carry and the gradient reads the TOP layer's compact rows only."""
     from repro.kernels.compact import compact_grads
-    w = cells.rec_param_tree(params)
+    stacked = cfg.n_layers > 1
+    w = params["layers"] if stacked else cells.rec_param_tree(params)
     T = xs.shape[0]
-    layout = cfg.layout()
+    P_pad = cfg.slayout().P_pad if stacked else cfg.layout().P_pad
 
     def body(carry, x_t):
         state, gw, gout, loss = carry
@@ -146,18 +183,29 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
         def inst_loss(po, ai):
             return cells.xent(cells.readout({"out": po}, ai), labels) / T
 
+        a_top = state["a"][-1] if stacked else state["a"]
         lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
-            params["out"], state["a"])
-        gw = gw + compact_grads(state["vals"], state["idx"], cbar)
+            params["out"], a_top)
+        if stacked:
+            gw = gw + compact_grads(state["vals"][-1], state["idx"][-1],
+                                    cbar)
+        else:
+            gw = gw + compact_grads(state["vals"], state["idx"], cbar)
         gout = jax.tree.map(jnp.add, gout, gout_t)
         return (state, gw, gout, loss + lt), None
 
-    gw0 = jnp.zeros((layout.P_pad,), jnp.float32)
+    gw0 = jnp.zeros((P_pad,), jnp.float32)
     gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
                          params["out"])
     (state, gw, gout, loss), _ = jax.lax.scan(
         body, (init_state(cfg), gw0, gout0, jnp.float32(0)), xs)
-    grads = sparse_rtrl.unflatten_flat_grads(cfg.cell_cfg(), layout, gw)
+    if stacked:
+        from repro.core import stacked_rtrl as ST
+        grads = ST.unflatten_stacked_grads(cfg.stacked_cfg(), cfg.slayout(),
+                                           gw)
+    else:
+        grads = sparse_rtrl.unflatten_flat_grads(cfg.cell_cfg(),
+                                                 cfg.layout(), gw)
     grads["out"] = gout
     return loss, grads
 
@@ -165,11 +213,21 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
 def sharded_step_specs(cfg: ScaledRTRLConfig, mesh):
     """NamedShardings for the distributed RTRL step: batch -> data, the flat
     parameter-column axis p of the influence state -> model (no cross-shard
-    reduction exists in the update)."""
+    reduction exists in the update).  In a stack every layer's buffer shards
+    the SAME way — the (l, j) blocks live along the column axis, so layer
+    blocks stay embarrassingly parallel across the model axis and the
+    cross-layer term contracts over rows (replicated), adding no
+    collectives."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     ba = "data" if "pod" not in mesh.shape else ("pod", "data")
     ns = lambda *spec: NamedSharding(mesh, P(*spec))
-    state_sh = {"a": ns(ba, None), "vals": ns(ba, None, "model"),
-                "idx": ns(ba, None)}
+    if cfg.n_layers > 1:
+        L = cfg.n_layers
+        state_sh = {"a": tuple(ns(ba, None) for _ in range(L)),
+                    "vals": tuple(ns(ba, None, "model") for _ in range(L)),
+                    "idx": tuple(ns(ba, None) for _ in range(L))}
+    else:
+        state_sh = {"a": ns(ba, None), "vals": ns(ba, None, "model"),
+                    "idx": ns(ba, None)}
     x_sh = ns(None, ba, None)
     return state_sh, x_sh

@@ -97,8 +97,10 @@ def apply_masks(params: Tree, masks: Tree) -> Tree:
         masks, params, is_leaf=lambda x: x is None)
 
 
-def omega_tilde(masks: Tree) -> jax.Array:
-    """Measured parameter density (over maskable recurrent params)."""
+def mask_counts(masks: Tree) -> tuple:
+    """(nonzero, total) entries over the maskable recurrent params — the
+    single source of the 'which params are maskable' rule (W/R; not bias,
+    theta, or the readout)."""
     tot, nz = 0.0, 0.0
     for g, sub in masks.items():
         if g in ("out", "theta") or sub is None:
@@ -106,6 +108,12 @@ def omega_tilde(masks: Tree) -> jax.Array:
         for k in ("W", "R"):
             tot += sub[k].size
             nz += sub[k].sum()
+    return nz, tot
+
+
+def omega_tilde(masks: Tree) -> jax.Array:
+    """Measured parameter density (over maskable recurrent params)."""
+    nz, tot = mask_counts(masks)
     return nz / tot
 
 
@@ -126,6 +134,20 @@ def cell_partials(cfg: EGRUConfig, w: Tree, a_prev: jax.Array, x_t: jax.Array):
 
     J = D(hp) @ J-hat;  Mbar rows are D(hp)-gated by construction.
     """
+    a_new, hp, Jhat, _, mbar = _cell_partials_impl(cfg, w, a_prev, x_t, False)
+    return a_new, hp, Jhat, mbar
+
+
+def cell_partials_full(cfg: EGRUConfig, w: Tree, a_prev: jax.Array,
+                       x_t: jax.Array):
+    """cell_partials plus the INPUT Jacobian B-hat [B, n, n_in] = dv/dx
+    (hp-ungated): the cross-layer injection of a stacked network, where
+    layer l's input is the layer below's activity (core/stacked_rtrl)."""
+    return _cell_partials_impl(cfg, w, a_prev, x_t, True)
+
+
+def _cell_partials_impl(cfg: EGRUConfig, w: Tree, a_prev: jax.Array,
+                        x_t: jax.Array, want_input_jac: bool):
     B, n = a_prev.shape
     if cfg.kind == "rnn":
         v = x_t @ w["v"]["W"] + a_prev @ w["v"]["R"] + w["v"]["b"] - w["theta"]
@@ -135,7 +157,11 @@ def cell_partials(cfg: EGRUConfig, w: Tree, a_prev: jax.Array, x_t: jax.Array):
         g = jnp.concatenate(
             [x_t, a_prev, jnp.ones((B, 1)), -jnp.ones((B, 1))], axis=1)
         mbar = {"v_diag_coef": jnp.ones((B, n)), "v_g": g}
-        return a_new, hp, Jhat, mbar
+        Bhat = None
+        if want_input_jac:
+            Bhat = jnp.broadcast_to(w["v"]["W"].T[None],
+                                    (B, n, x_t.shape[1]))
+        return a_new, hp, Jhat, Bhat, mbar
 
     v, (u, r, z) = _gru_forward(w, a_prev, x_t)
     a_new, hp = _activation(cfg, v)
@@ -157,7 +183,15 @@ def cell_partials(cfg: EGRUConfig, w: Tree, a_prev: jax.Array, x_t: jax.Array):
     mbar = {"u_diag_coef": cu, "u_g": g_u,
             "z_diag_coef": cz, "z_g": g_z,
             "r_coef": coef_r, "r_g": g_u}
-    return a_new, hp, Jhat, mbar
+    Bhat = None
+    if want_input_jac:
+        # dv_k/dx_i = cu_k Wu[i,k] + cz_k (Wz[i,k] + sum_q Rz[q,k] a_q dr_q Wr[i,q])
+        term_bu = jnp.einsum("bk,ik->bki", cu, w["u"]["W"])
+        term_bz1 = jnp.einsum("bk,ik->bki", cz, w["z"]["W"])
+        inner_x = jnp.einsum("iq,bq,qk->bik", w["r"]["W"], a_prev * dr,
+                             w["z"]["R"])
+        Bhat = term_bu + term_bz1 + jnp.einsum("bk,bik->bki", cz, inner_x)
+    return a_new, hp, Jhat, Bhat, mbar
 
 
 def _activation(cfg: EGRUConfig, v):
@@ -338,11 +372,15 @@ def flat_jmask(cfg: EGRUConfig, masks: Tree | None) -> jax.Array | None:
 
 
 def flat_mbar(cfg: EGRUConfig, layout: FlatLayout, mbar: Tree,
-              col_mask: jax.Array | None = None) -> jax.Array:
-    """Immediate influence M-bar-hat in flat layout [B, n, P_pad] (hp-ungated).
+              col_mask: jax.Array | None = None, *, offset: int = 0,
+              total_pad: int | None = None) -> jax.Array:
+    """Immediate influence M-bar-hat in flat layout [B, n, total_pad]
+    (hp-ungated); total_pad defaults to the layer's own P_pad.
 
     u/z (and rnn v) gates are diagonal in (k, q); the r gate couples densely
-    through R_z; theta is -I."""
+    through R_z; theta is -I.  `offset` places the layer's P columns inside a
+    wider stacked buffer (core/stacked_rtrl); `col_mask` spans the full
+    width."""
     n, m = layout.n, layout.m
     idx = jnp.arange(n)
     blocks = []
@@ -363,15 +401,18 @@ def flat_mbar(cfg: EGRUConfig, layout: FlatLayout, mbar: Tree,
             blocks.append(M4.reshape(B, n, n * m))
         blocks.append(-jnp.broadcast_to(jnp.eye(n)[None], (B, n, n)))
     flat = jnp.concatenate(blocks, axis=-1)
-    flat = jnp.pad(flat, ((0, 0), (0, 0), (0, layout.P_pad - layout.P)))
+    total = layout.P_pad if total_pad is None else total_pad
+    flat = jnp.pad(flat, ((0, 0), (0, 0),
+                          (offset, total - offset - layout.P)))
     if col_mask is not None:
         flat = flat * col_mask[None, None, :]
     return flat
 
 
 def flat_mbar_rows(cfg: EGRUConfig, layout: FlatLayout, mbar: Tree,
-                   safe_new: jax.Array, col_mask: jax.Array | None = None):
-    """M-bar rows gathered at the active row indices: [B, K, P_pad].
+                   safe_new: jax.Array, col_mask: jax.Array | None = None,
+                   *, offset: int = 0, total_pad: int | None = None):
+    """M-bar rows gathered at the active row indices: [B, K, total_pad].
 
     The dense [B, n, P] (i.e. [B, n, n, m]) immediate-influence tensor is
     never materialized on the compact path; dead slots (safe_new clamped)
@@ -399,7 +440,9 @@ def flat_mbar_rows(cfg: EGRUConfig, layout: FlatLayout, mbar: Tree,
         th = jnp.zeros((B, K, n)).at[bidx, slot, safe_new].set(-1.0)
         blocks.append(th)
     flat = jnp.concatenate(blocks, axis=-1)
-    flat = jnp.pad(flat, ((0, 0), (0, 0), (0, layout.P_pad - layout.P)))
+    total = layout.P_pad if total_pad is None else total_pad
+    flat = jnp.pad(flat, ((0, 0), (0, 0),
+                          (offset, total - offset - layout.P)))
     if col_mask is not None:
         flat = flat * col_mask[None, None, :]
     return flat
@@ -423,18 +466,32 @@ def unflatten_flat_grads(cfg: EGRUConfig, layout: FlatLayout,
 
 def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
                       a_prev: jax.Array, vals: jax.Array, idx_prev: jax.Array,
-                      x_t: jax.Array, col_mask: jax.Array | None = None):
+                      x_t: jax.Array, col_mask: jax.Array | None = None,
+                      *, offset: int = 0, total_pad: int | None = None,
+                      below: tuple | None = None):
     """One RTRL step with the influence carried row-compact in flat layout.
 
-    vals [B, K, P_pad], idx_prev [B, K] (sentinel -1 = dead slot).  Returns
-    (a_new, hp, vals', idx' (-1 sentinel), count, overflow).  FLOPs of the
-    update are K * K_prev * P — the paper's beta~(t) beta~(t-1) n^2 p made
-    wall-clock-real; `repro.core.scaled_rtrl` and the "compact" backend of
-    `sparse_rtrl_loss_and_grads` both run on this step."""
+    vals [B, K, total_pad], idx_prev [B, K] (sentinel -1 = dead slot).
+    Returns (a_new, hp, vals', idx' (-1 sentinel), count, overflow).  FLOPs
+    of the update are K * K_prev * P — the paper's beta~(t) beta~(t-1) n^2 p
+    made wall-clock-real; `repro.core.scaled_rtrl` and the "compact" backend
+    of `sparse_rtrl_loss_and_grads` both run on this step.
+
+    Stacked networks (core/stacked_rtrl): `offset`/`total_pad` place this
+    layer's immediate-influence columns inside the stacked parameter axis,
+    and `below=(vals_below, idx_below)` adds the cross-layer term
+    B^(l) M^(l-1)_t — x_t is then the layer below's activity a^{l-1}_t and
+    the input-Jacobian tiles B-hat are gathered at (new rows, active rows of
+    the layer below), so the cross term costs K * K_below * P, event-sparse
+    on both sides."""
     from repro.kernels import compact as CK
     n = layout.n
     B, K = idx_prev.shape
-    a_new, hp, Jhat, mbar = cell_partials(cfg, w, a_prev, x_t)
+    if below is None:
+        a_new, hp, Jhat, mbar = cell_partials(cfg, w, a_prev, x_t)
+        Bhat = None
+    else:
+        a_new, hp, Jhat, Bhat, mbar = cell_partials_full(cfg, w, a_prev, x_t)
     idx_new, count = CK.compact_rows(hp != 0.0, K)
     safe_new = jnp.minimum(idx_new, n - 1)
     live_new = idx_new < n
@@ -442,7 +499,16 @@ def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
     R = w["v"]["R"] if cfg.kind == "rnn" else None
     Jgg = CK.gather_j_tiles(None if R is not None else Jhat,
                             idx_new, idx_prev, R=R)
-    mbar_rows = flat_mbar_rows(cfg, layout, mbar, safe_new, col_mask)
+    mbar_rows = flat_mbar_rows(cfg, layout, mbar, safe_new, col_mask,
+                               offset=offset, total_pad=total_pad)
+    if below is not None:
+        vals_b, idx_b = below
+        if cfg.kind == "rnn":
+            # B-hat = W^T exactly: look tiles up from W
+            Bgg = CK.gather_tiles(None, idx_new, idx_b, AT=w["v"]["W"])
+        else:
+            Bgg = CK.gather_tiles(Bhat, idx_new, idx_b)
+        mbar_rows = mbar_rows + jnp.einsum("bkj,bjp->bkp", Bgg, vals_b)
     bidx = jnp.arange(B)[:, None]
     hp_rows = hp[bidx, safe_new] * live_new
     Mc, overflow = CK.compact_update(Jgg, vals, mbar_rows, hp_rows,

@@ -1,0 +1,352 @@
+"""EXACT multi-layer RTRL on the flat-compact engine (no approximation).
+
+A stacked network's state Jacobian is block lower-triangular: layer l's
+activity depends on its own previous state (within-layer Jacobian
+J^(l) = D(hp^l) J-hat^(l)) and on the CURRENT activity of the layer below
+(cross-layer injection B^(l) = D(hp^l) B-hat^(l), with B-hat = dv^l/dx for
+x = a^{l-1}_t).  The influence therefore factors into blocks
+M^(l,j) = d a^l / d w^j  (j <= l), updated bottom-up each step as
+
+    M^(l,j)_t = J^(l)_t M^(l,j)_{t-1} + B^(l)_t M^(l-1,j)_t
+                [+ M-bar^(l)_t  if j = l]                          (l >= j)
+
+Every term carries the D(hp^l) row gate, so the paper's per-step
+beta~(t) beta~(t-1) savings apply to EVERY block — the cross term is
+additionally event-sparse on its contraction axis because M^(l-1,j)_t rows
+vanish where hp^{l-1}_t = 0.  Exact multi-layer RTRL inherits the paper's
+headline claim at depth; approximations like SnAp are not needed.
+
+Representation: the j <= l blocks of layer l are carried CONCATENATED along
+one flat parameter-column axis of width P_total (`StackedFlatLayout` =
+per-layer `FlatLayout`s + column offsets; columns of layers j > l are
+structurally zero and stay zero).  Each layer's update is then exactly the
+single-layer update form D(hp)(J-hat M + M-bar'), with the cross term folded
+into M-bar', so it executes as a call into the existing engine:
+
+  backend="dense"    per-layer flat einsums (reference)
+  backend="pallas"   per-layer block-sparse Pallas influence kernel with
+                     per-layer row masks from H'(v^l_t) and a column mask
+                     that kills the structurally-dead j > l blocks
+  backend="compact"  per-layer row-compact carry via `flat_compact_step`
+                     (below=...): J tiles at [K_l, K_l_prev], cross tiles at
+                     [K_l, K_{l-1}] — both sides event-sparse
+
+`n_layers=1` delegates to `sparse_rtrl.sparse_rtrl_loss_and_grads` — the old
+single-layer code path is the oracle, bit-for-bit (disable with
+`delegate_single_layer=False` to exercise the block engine at L=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells, sparse_rtrl as SP
+from repro.core.cells import StackedEGRUConfig
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layout: per-layer FlatLayouts concatenated along the parameter-column axis
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackedFlatLayout:
+    """Column layout of the stacked flat influence buffers.
+
+    Layer l's buffer M^(l) [B, n_l, P_pad] holds all blocks M^(l,j): layer
+    j's parameter columns live at [offsets[j], offsets[j] + layers[j].P);
+    columns with j > l are structurally zero.  P_pad rounds the concatenated
+    P_total up to a LANE multiple (padding columns permanently dead)."""
+    layers: tuple            # per-layer FlatLayout
+    offsets: tuple           # start column of each layer's parameter block
+    P_total: int
+    P_pad: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def layer_slice(self, l: int) -> slice:
+        return slice(self.offsets[l], self.offsets[l] + self.layers[l].P)
+
+
+def stacked_layout(cfg: StackedEGRUConfig) -> StackedFlatLayout:
+    lays, offs, off = [], [], 0
+    for l in range(cfg.n_layers):
+        lay = SP.flat_layout(cfg.layer_cfg(l))
+        lays.append(lay)
+        offs.append(off)
+        off += lay.P
+    assert off == cfg.n_rec_params, (off, cfg.n_rec_params)
+    P_pad = -(-off // SP.LANE) * SP.LANE
+    return StackedFlatLayout(tuple(lays), tuple(offs), off, P_pad)
+
+
+# ---------------------------------------------------------------------------
+# Parameter-sparsity masks, per layer
+# ---------------------------------------------------------------------------
+
+def make_stacked_masks(cfg: StackedEGRUConfig, key: jax.Array,
+                       sparsity: float, block: int = 1,
+                       mask_input: bool = True) -> list:
+    """One fixed mask tree per layer (layer l's input width is n_{l-1});
+    a list, mirroring the params' "layers" container."""
+    masks = []
+    for l in range(cfg.n_layers):
+        mk = SP.make_masks(cfg.layer_cfg(l), jax.random.fold_in(key, l),
+                           sparsity, block=block, mask_input=mask_input)
+        mk.pop("out")
+        masks.append(mk)
+    return masks
+
+
+def apply_stacked_masks(params: Tree, masks: list) -> Tree:
+    out = dict(params)
+    out["layers"] = [SP.apply_masks(p, m)
+                     for p, m in zip(params["layers"], masks)]
+    return out
+
+
+def stacked_omega_tilde(masks: list) -> jax.Array:
+    """Aggregate parameter density over all layers' maskable params."""
+    counts = [SP.mask_counts(mk) for mk in masks]
+    return sum(c[0] for c in counts) / sum(c[1] for c in counts)
+
+
+def stacked_col_mask(slayout: StackedFlatLayout,
+                     masks: tuple | None) -> jax.Array:
+    """[P_pad] column liveness over the concatenated parameter axis."""
+    parts = []
+    for l, lay in enumerate(slayout.layers):
+        mk = None if masks is None else masks[l]
+        parts.append(SP.flat_col_mask(lay, mk)[:lay.P])
+    live = jnp.concatenate(parts)
+    return jnp.pad(live, (0, slayout.P_pad - slayout.P_total))
+
+
+def layer_col_masks(slayout: StackedFlatLayout,
+                    colm: jax.Array) -> tuple:
+    """Per-layer column masks: layer l's buffer additionally kills the
+    structurally-dead columns of layers j > l (block lower-triangularity),
+    so block-granular backends skip those whole column blocks."""
+    cols = jnp.arange(slayout.P_pad)
+    out = []
+    for l, lay in enumerate(slayout.layers):
+        end = slayout.offsets[l] + lay.P
+        out.append(colm * (cols < end))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Gradient unflattening: concatenated flat vector -> {"layers": (...,)}
+# ---------------------------------------------------------------------------
+
+def unflatten_stacked_grads(cfg: StackedEGRUConfig,
+                            slayout: StackedFlatLayout,
+                            gw: jax.Array) -> Tree:
+    layers = []
+    for l, lay in enumerate(slayout.layers):
+        sl = gw[slayout.layer_slice(l)]
+        layers.append(SP.unflatten_flat_grads(cfg.layer_cfg(l), lay, sl))
+    return {"layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# Shared stacked compact step (also the depth path of core/scaled_rtrl)
+# ---------------------------------------------------------------------------
+
+def stacked_compact_step(cfg: StackedEGRUConfig, ws: tuple,
+                         slayout: StackedFlatLayout, a_prevs: tuple,
+                         vals: tuple, idx: tuple, x_t: jax.Array,
+                         colms: tuple | None = None):
+    """One bottom-up stacked RTRL step, every layer row-compact.
+
+    Layer l runs `sparse_rtrl.flat_compact_step` with its column offset and
+    (for l > 0) the freshly updated compact influence of the layer below as
+    the cross-layer `below` term.  Returns (a_news, hps, vals', idx',
+    overflow [L])."""
+    L = cfg.n_layers
+    inp = x_t
+    a_news, hps, vals_new, idx_new, ovs = [], [], [], [], []
+    for l in range(L):
+        below = None if l == 0 else (vals_new[l - 1], idx_new[l - 1])
+        colm_l = None if colms is None else colms[l]
+        a_new, hp, v_new, i_new, _, ov = SP.flat_compact_step(
+            cfg.layer_cfg(l), ws[l], slayout.layers[l], a_prevs[l], vals[l],
+            idx[l], inp, colm_l, offset=slayout.offsets[l],
+            total_pad=slayout.P_pad, below=below)
+        a_news.append(a_new)
+        hps.append(hp)
+        vals_new.append(v_new)
+        idx_new.append(i_new)
+        ovs.append(jnp.max(ov))
+        inp = a_new
+    return (tuple(a_news), tuple(hps), tuple(vals_new), tuple(idx_new),
+            jnp.stack(ovs))
+
+
+# ---------------------------------------------------------------------------
+# The stacked engine
+# ---------------------------------------------------------------------------
+
+def _single_layer_view(cfg: StackedEGRUConfig, params: Tree,
+                       masks: tuple | None):
+    scfg = cfg.layer_cfg(0)
+    sparams = dict(params["layers"][0])
+    sparams["out"] = params["out"]
+    smasks = None
+    if masks is not None:
+        smasks = dict(masks[0])
+        smasks["out"] = None
+    return scfg, sparams, smasks
+
+
+def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
+                                xs: jax.Array, labels: jax.Array,
+                                masks: tuple | None = None, *,
+                                backend: str = "dense",
+                                capacity: float = 1.0,
+                                interpret: bool | None = None,
+                                delegate_single_layer: bool = True):
+    """Exact stacked RTRL.  Returns (loss, grads, stats).
+
+    grads: {"layers": [per-layer trees], "out": ...}.  stats carries
+    per-layer alpha/beta traces ("alpha_layers"/"beta_layers" [T, L]) plus
+    the scalar means the single-layer engine reports, so
+    `repro.core.costs.stacked_*` can integrate per-layer compute.
+
+    With `n_layers == 1` the call delegates to the single-layer engine
+    (`sparse_rtrl.sparse_rtrl_loss_and_grads`) — bit-for-bit the old code
+    path, with the [T, 1] per-layer stats keys added on top ("beta_prev"
+    keeps the single-layer [T] form there); pass
+    delegate_single_layer=False to run the block engine instead.
+    """
+    if backend not in SP.BACKENDS:
+        raise ValueError(f"backend must be one of {SP.BACKENDS}, "
+                         f"got {backend!r}")
+    L = cfg.n_layers
+    if L == 1 and delegate_single_layer:
+        scfg, sparams, smasks = _single_layer_view(cfg, params, masks)
+        loss, g, stats = SP.sparse_rtrl_loss_and_grads(
+            scfg, sparams, xs, labels, smasks, backend=backend,
+            capacity=capacity, interpret=interpret)
+        grads = {"layers": [{k: v for k, v in g.items() if k != "out"}],
+                 "out": g["out"]}
+        stats = dict(stats)
+        stats["alpha_layers"] = stats["alpha"][:, None]
+        stats["beta_layers"] = stats["beta"][:, None]
+        return loss, grads, stats
+
+    T, B, _ = xs.shape
+    ws = params["layers"]
+    slayout = stacked_layout(cfg)
+    lcfgs = [cfg.layer_cfg(l) for l in range(L)]
+    colm = stacked_col_mask(slayout, masks)
+    colms = layer_col_masks(slayout, colm)
+    a0 = cells.init_stacked_state(cfg, B)
+    gw0 = jnp.zeros((slayout.P_pad,), jnp.float32)
+    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                         params["out"])
+
+    def inst_loss(po, a_top):
+        return cells.xent(cells.readout({"out": po}, a_top), labels) / T
+
+    def layer_partials(l, a_prev, inp):
+        if l == 0:
+            a_new, hp, Jhat, mbar = SP.cell_partials(
+                lcfgs[l], ws[l], a_prev, inp)
+            return a_new, hp, Jhat, None, mbar
+        return SP.cell_partials_full(lcfgs[l], ws[l], a_prev, inp)
+
+    def step_stats(a_news, hps, beta_prev, row_density, extra=None):
+        alpha_l = jnp.stack([jnp.mean(a == 0.0) for a in a_news])
+        beta_l = jnp.stack([jnp.mean(h == 0.0) for h in hps])
+        s = {"alpha": alpha_l.mean(), "beta": beta_l.mean(),
+             "alpha_layers": alpha_l, "beta_layers": beta_l,
+             "beta_prev": beta_prev, "m_row_density": row_density}
+        if extra:
+            s.update(extra)
+        return s, beta_l
+
+    if backend in ("dense", "pallas"):
+        if backend == "pallas":
+            from repro.kernels import ops as kops
+            jms = tuple(SP.flat_jmask(lcfgs[l],
+                                      None if masks is None else masks[l])
+                        for l in range(L))
+        M0 = tuple(jnp.zeros((B, n, slayout.P_pad), jnp.float32)
+                   for n in cfg.layer_sizes)
+
+        def body(carry, x_t):
+            a_prevs, Ms, gw_acc, gout, loss, beta_prev = carry
+            inp = x_t
+            a_news, hps, M_news = [], [], []
+            for l in range(L):
+                lay = slayout.layers[l]
+                a_new, hp, Jhat, Bhat, mbar = layer_partials(
+                    l, a_prevs[l], inp)
+                Mb = SP.flat_mbar(lcfgs[l], lay, mbar, colms[l],
+                                  offset=slayout.offsets[l],
+                                  total_pad=slayout.P_pad)
+                if l > 0:
+                    # cross-layer block row:  B-hat^(l) M^(l-1)_t  (Mbar' =
+                    # M-bar + cross shares the kernel's D(hp) row gate)
+                    Mb = Mb + jnp.einsum("bkj,bjp->bkp", Bhat, M_news[l - 1])
+                if backend == "pallas":
+                    M_new = kops.influence_update(
+                        hp, Jhat, Ms[l], Mb, jmask=jms[l],
+                        col_mask=colms[l], interpret=interpret)
+                else:
+                    M_new = hp[:, :, None] * (
+                        jnp.einsum("bkl,blp->bkp", Jhat, Ms[l]) + Mb)
+                a_news.append(a_new)
+                hps.append(hp)
+                M_news.append(M_new)
+                inp = a_new
+            lt, (gout_t, cbar) = jax.value_and_grad(
+                inst_loss, argnums=(0, 1))(params["out"], a_news[-1])
+            gw_acc = gw_acc + jnp.einsum("bk,bkp->p", cbar, M_news[-1])
+            gout = jax.tree.map(jnp.add, gout, gout_t)
+            rd = jnp.stack([jnp.mean(jnp.any(M != 0.0, axis=2))
+                            for M in M_news]).mean()
+            stats, beta_l = step_stats(a_news, hps, beta_prev, rd)
+            return (tuple(a_news), tuple(M_news), gw_acc, gout, loss + lt,
+                    beta_l), stats
+
+        init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.ones((L,)))
+        (_, _, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
+        grads = unflatten_stacked_grads(cfg, slayout, gw)
+        grads["out"] = gout
+        return loss, grads, stats
+
+    # backend == "compact": per-layer row-compact carry via flat_compact_step
+    Ks = tuple(SP.capacity_K(n, capacity) for n in cfg.layer_sizes)
+    vals0 = tuple(jnp.zeros((B, K, slayout.P_pad), jnp.float32) for K in Ks)
+    idx0 = tuple(jnp.full((B, K), -1, jnp.int32) for K in Ks)
+
+    def body(carry, x_t):
+        a_prevs, vals, idx, gw_acc, gout, loss, beta_prev = carry
+        a_news, hps, vals_new, idx_new, ovs = stacked_compact_step(
+            cfg, ws, slayout, a_prevs, vals, idx, x_t, colms)
+        from repro.kernels.compact import compact_grads
+        lt, (gout_t, cbar) = jax.value_and_grad(
+            inst_loss, argnums=(0, 1))(params["out"], a_news[-1])
+        gw_acc = gw_acc + compact_grads(vals_new[-1], idx_new[-1], cbar)
+        gout = jax.tree.map(jnp.add, gout, gout_t)
+        rd = jnp.stack([
+            jnp.sum(i >= 0, axis=1).mean() / n
+            for i, n in zip(idx_new, cfg.layer_sizes)]).mean()
+        stats, beta_l = step_stats(a_news, hps, beta_prev, rd,
+                                   extra={"overflow": jnp.max(ovs)})
+        return (a_news, vals_new, idx_new, gw_acc,
+                gout, loss + lt, beta_l), stats
+
+    init = (a0, vals0, idx0, gw0, gout0, jnp.float32(0), jnp.ones((L,)))
+    (_, _, _, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
+    grads = unflatten_stacked_grads(cfg, slayout, gw)
+    grads["out"] = gout
+    return loss, grads, stats

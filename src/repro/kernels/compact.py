@@ -35,6 +35,8 @@ def compact_rows(dense_rows_mask: jax.Array, K: int) -> tuple[jax.Array, jax.Arr
     # stable order: active rows first, by index
     key = jnp.where(dense_rows_mask, 0, 1) * (n + 1) + jnp.arange(n)[None]
     order = jnp.argsort(key, axis=1)[:, :K]                     # [B, K]
+    if K > n:   # alignment can push capacity past n: pad with dead slots
+        order = jnp.pad(order, ((0, 0), (0, K - n)), constant_values=n)
     count = dense_rows_mask.sum(axis=1)
     slot_live = jnp.arange(K)[None, :] < count[:, None]
     idx = jnp.where(slot_live, order, n)
@@ -47,32 +49,43 @@ def compact_init(B: int, K: int, P: int) -> CompactInfluence:
                             jnp.zeros((B,), jnp.int32))
 
 
-def gather_j_tiles(Jhat: jax.Array | None, idx_new: jax.Array,
-                   idx_prev: jax.Array, *, R: jax.Array | None = None):
-    """Gathered [B, K, K_prev] tiles of the step Jacobian J-hat.
+def gather_tiles(A: jax.Array | None, idx_row: jax.Array,
+                 idx_col: jax.Array, *, AT: jax.Array | None = None):
+    """Gathered [B, K, K_col] tiles of a (possibly rectangular) Jacobian.
 
-    Rows are taken at the newly-active unit indices, columns at the
-    previously-active ones (dead slots — sentinel < 0 or >= n — contribute
-    zero columns; dead rows are gated by hp downstream).  For cells whose
-    J-hat is the transposed recurrent matrix (the vanilla RNN) pass ``R``
-    [n, n] instead of a dense Jhat: tiles are looked up directly and the
-    [B, n, n] Jacobian is never materialized.  For data-dependent Jacobians
-    (EGRU) pass the dense ``Jhat`` [B, n, n] and tiles are gathered."""
-    n = R.shape[0] if R is not None else Jhat.shape[-1]
-    B, K = idx_new.shape
-    Kp = idx_prev.shape[1]
-    safe_new = jnp.clip(idx_new, 0, n - 1)
-    safe_prev = jnp.clip(idx_prev, 0, n - 1)
-    live_prev = (idx_prev >= 0) & (idx_prev < n)
-    if R is not None:
-        # Jhat[b, k, l] = R[l, k]
-        Jgg = R[safe_prev[:, None, :], safe_new[:, :, None]]    # [B, K, Kp]
+    Rows are taken at `idx_row`, columns at `idx_col` (dead column slots —
+    sentinel < 0 or >= n_col — contribute zero columns; dead rows are gated
+    by hp downstream).  Pass the dense per-example ``A`` [B, n_row, n_col]
+    (data-dependent Jacobians, e.g. EGRU J-hat or the cross-layer B-hat), or
+    ``AT`` [n_col, n_row] — a weight matrix whose TRANSPOSE is the Jacobian
+    (R for the vanilla RNN's J-hat, W for its B-hat) — so tiles are looked
+    up directly and [B, n_row, n_col] is never materialized."""
+    if AT is not None:
+        n_col, n_row = AT.shape
+    else:
+        n_row, n_col = A.shape[-2], A.shape[-1]
+    B, K = idx_row.shape
+    Kc = idx_col.shape[1]
+    safe_row = jnp.clip(idx_row, 0, n_row - 1)
+    safe_col = jnp.clip(idx_col, 0, n_col - 1)
+    live_col = (idx_col >= 0) & (idx_col < n_col)
+    if AT is not None:
+        # A[b, k, j] = AT[j, k]
+        Agg = AT[safe_col[:, None, :], safe_row[:, :, None]]    # [B, K, Kc]
     else:
         bidx = jnp.arange(B)[:, None]
-        Jg = Jhat[bidx, safe_new]                               # [B, K, n]
-        Jgg = jnp.take_along_axis(
-            Jg, jnp.broadcast_to(safe_prev[:, None, :], (B, K, Kp)), axis=2)
-    return Jgg * live_prev[:, None, :]
+        Ag = A[bidx, safe_row]                                  # [B, K, n_col]
+        Agg = jnp.take_along_axis(
+            Ag, jnp.broadcast_to(safe_col[:, None, :], (B, K, Kc)), axis=2)
+    return Agg * live_col[:, None, :]
+
+
+def gather_j_tiles(Jhat: jax.Array | None, idx_new: jax.Array,
+                   idx_prev: jax.Array, *, R: jax.Array | None = None):
+    """Gathered [B, K, K_prev] tiles of the (square) step Jacobian J-hat:
+    rows at the newly-active unit indices, columns at the previously-active
+    ones.  Thin wrapper over `gather_tiles`."""
+    return gather_tiles(Jhat, idx_new, idx_prev, AT=R)
 
 
 def compact_update(Jgg: jax.Array, vals_prev: jax.Array, mbar_rows: jax.Array,

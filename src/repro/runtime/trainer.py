@@ -102,8 +102,11 @@ class Trainer:
             if self.step % cfg.ckpt_every == 0:
                 self.save()
             if self.step % cfg.log_every == 0 or self.step == cfg.total_steps:
+                # non-scalar metrics (e.g. per-step/per-layer RTRL sparsity
+                # traces) are mean-reduced for the log record
                 rec = {"step": self.step, "dt_s": round(dt, 4),
-                       **{k: float(np.asarray(v)) for k, v in m.items()}}
+                       **{k: float(np.asarray(v).mean())
+                          for k, v in m.items()}}
                 self.metrics.append(rec)
                 if cfg.metrics_path:
                     with open(cfg.metrics_path, "a") as f:

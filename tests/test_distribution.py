@@ -63,6 +63,7 @@ def test_moe_aux_loss_uniform_router_is_one():
 
 # --- gradient compression ----------------------------------------------------
 
+@pytest.mark.slow
 def test_compressed_psum_error_feedback():
     """Mean over the pod axis; with error feedback the *accumulated* update
     over steps converges to the true accumulated mean."""

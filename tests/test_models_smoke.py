@@ -24,6 +24,7 @@ def _batch(cfg, B=2, S=32):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_train_step_smoke(arch):
     cfg = smoke_config(get_config(arch))
@@ -38,6 +39,7 @@ def test_train_step_smoke(arch):
     assert np.isfinite(gn) and gn > 0, arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_prefill_decode_matches_forward(arch):
     """Teacher-forced decode after prefill must reproduce the training
@@ -91,6 +93,7 @@ def test_prefill_decode_matches_forward(arch):
     assert bool(jnp.all(jnp.isfinite(logits_d)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b", "recurrentgemma-9b"])
 def test_decode_matches_teacher_forcing(arch):
     """Stepping the decoder over a sequence reproduces prefill logits."""

@@ -52,6 +52,75 @@ def test_capacity_is_static_and_memory_beta_scaled():
     assert cfg.K <= 0.27 * cfg.n    # memory = beta~ * n p, not n p
 
 
+def test_stacked_scaled_rtrl_grads_match_bptt():
+    """Depth path: n_layers=2 compact carry == stacked BPTT on surviving
+    params (masked per layer)."""
+    from repro.core import bptt, stacked_rtrl as ST
+    cfg = SR.ScaledRTRLConfig(n=32, n_in=8, batch=3, n_layers=2,
+                              beta_capacity=1.0, sparsity=0.8)
+    params, masks = SR.init_params(cfg, jax.random.key(0))
+    xs = jax.random.normal(jax.random.key(2), (6, cfg.batch, cfg.n_in))
+    labels = jnp.arange(cfg.batch) % cfg.n_out
+    loss_c, grads_c = SR.rtrl_grads(cfg, params, xs, labels)
+    loss_b, grads_b, _ = bptt.stacked_bptt_loss_and_grads(
+        cfg.stacked_cfg(), params, xs, labels)
+    assert abs(float(loss_c - loss_b)) < 1e-5
+    gc = ST.apply_stacked_masks(grads_c, masks)
+    gb = ST.apply_stacked_masks(grads_b, masks)
+    for a, b in zip(jax.tree.leaves(gc), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_stacked_distributed_step_shards_without_collectives():
+    """Layer blocks stay embarrassingly parallel along the parameter-column
+    axis: the stacked influence update emits no collectives either."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.costing import parse_collective_bytes
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_host_mesh()
+    cfg = SR.ScaledRTRLConfig(n=32, n_in=8, batch=4, n_layers=2,
+                              beta_capacity=0.5, sparsity=0.8)
+    params, _ = SR.init_params(cfg, jax.random.key(0))
+    state_sh, _ = SR.sharded_step_specs(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+
+    def step(params, state, x):
+        return SR.compact_step(cfg, params["layers"], state, x)[0]
+
+    params_abs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    st_abs = jax.eval_shape(lambda: SR.init_state(cfg))
+    x_abs = jax.ShapeDtypeStruct((cfg.batch, cfg.n_in), jnp.float32)
+    compiled = jax.jit(step, in_shardings=(
+        jax.tree.map(lambda _: rep, params_abs), state_sh,
+        NamedSharding(mesh, P("data", None)))).lower(
+        params_abs, st_abs, x_abs).compile()
+    coll = parse_collective_bytes(compiled.as_text())
+    assert sum(coll.values()) == 0, coll
+
+
+def test_stacked_flop_accounting_reduces_to_single_layer():
+    """The (l, j)-block op model collapses to the paper's single-layer
+    formulas at L=1 and is super-additive in depth."""
+    from repro.core.costs import (influence_update_flops,
+                                  stacked_influence_update_flops,
+                                  stacked_savings_factor, savings_factor)
+    n, P = 64, 1024
+    acc1 = stacked_influence_update_flops([n], [P])
+    assert acc1["dense"] == influence_update_flops(n, P)
+    acc1s = stacked_influence_update_flops([n], [P], betas_t=[0.8],
+                                           betas_prev=[0.5])
+    K, Kp = 0.2 * n, 0.5 * n
+    assert abs(acc1s["sparse"] - influence_update_flops(n, P, K, Kp)) < 1e-6
+    assert abs(stacked_savings_factor([0.8], [0.5], [0.9])
+               - savings_factor(0.8, 0.5, 0.9)) < 1e-12
+    acc2 = stacked_influence_update_flops([n, n], [P, P])
+    # L=2: blocks (0,0), (1,0)+cross, (1,1)+cross > 3x the L=1 J-term
+    assert acc2["dense"] > 3 * acc1["dense"]
+    assert set(acc2["blocks"]) == {(0, 0), (1, 0), (1, 1)}
+
+
 def test_compact_flop_scaling():
     """FLOP count of the compact update scales as K^2 (beta~^2 n^2 p)."""
     def flops_for(capacity):

@@ -10,6 +10,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import cells, sparse_rtrl
 from repro.core.cells import EGRUConfig
@@ -19,6 +20,7 @@ from repro.optim import make_optimizer
 from repro.optim.optimizers import masked
 
 
+@pytest.mark.slow
 def test_spiral_sparse_rtrl_end_to_end():
     cfg = EGRUConfig()                    # paper defaults (16 hidden, gru)
     params = cells.init_params(cfg, jax.random.key(0))
@@ -60,6 +62,7 @@ def test_spiral_sparse_rtrl_end_to_end():
     assert betas[-100:].mean() > 0.1
 
 
+@pytest.mark.slow
 def test_lm_substrate_end_to_end(tmp_path):
     from repro.configs import get_config, smoke_config
     from repro.configs.base import ShapeSuite
