@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core import cells, sparse_rtrl as SP, stacked_rtrl as ST
 from repro.core.cells import EGRUConfig
-from repro.core.costs import (influence_update_flops, savings_factor,
+from repro.core.costs import (influence_carry_bytes, influence_update_flops,
+                              savings_factor,
                               stacked_influence_update_flops,
                               tpu_block_factor)
 from repro.core.sparse_rtrl import make_masks
@@ -69,6 +70,7 @@ def run(rows: list):
 
     egru_step_bench(rows, n=96, beta=0.8, reps=2)   # smoke-sized wall clock
     stacked_egru_step_bench(rows, n=96, L=2, beta=0.8, reps=1)
+    dual_compact_step_bench(rows, n=96, beta=0.8, omega=0.9, reps=2)
     return rows
 
 
@@ -245,6 +247,78 @@ def stacked_egru_step_bench(rows: list, n=256, L=2, n_in=8, beta=0.8,
     return rec
 
 
+def dual_compact_step_bench(rows: list, n=256, n_in=8, beta=0.8, omega=0.9,
+                            batch=1, block=8, margin=1.25, reps=3) -> dict:
+    """Row-only vs DUAL (row x column) compact wall clock for one full EGRU
+    RTRL step, plus the carried-influence bytes of each representation.
+
+    Both paths run `flat_compact_step` at the same static row capacity K;
+    the dual path additionally carries the parameter axis column-compact at
+    Pc ~= w~ P (`ColLayout`), building M-bar directly at compact width — the
+    paper's combined  w~ beta~^2 n^2 p  as measured milliseconds and the
+    w~ beta~ n p memory as allocated bytes.  omega=0 (masks=None) measures
+    the representation overhead with every column live."""
+    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=4, kind="gru", eps=0.12)
+    layout = SP.flat_layout(cfg)
+    key = jax.random.key(0)
+    params = cells.init_params(cfg, key)
+    params["theta"] = 0.4 + params["theta"]
+    masks = None
+    if omega > 0.0:
+        masks = make_masks(cfg, jax.random.fold_in(key, 9), omega,
+                           block=block)
+        params = SP.apply_masks(params, masks)
+    colm = SP.flat_col_mask(layout, masks)
+    cl = SP.col_layout(layout, masks)
+    w = cells.rec_param_tree(params)
+    a = (jax.random.uniform(jax.random.fold_in(key, 1), (batch, n)) > 0.5) * 1.0
+    x = 4.0 * jax.random.normal(jax.random.fold_in(key, 2), (batch, n_in))
+    cbar = jax.random.normal(jax.random.fold_in(key, 3), (batch, n))
+    _, hp, _, _ = SP.cell_partials(cfg, w, a, x)
+    beta_meas = float(jnp.mean(hp == 0.0))
+    n_active = int(jnp.max(jnp.sum(hp != 0.0, axis=1)))
+    # K sized from the MEASURED activity at this operating point (masking
+    # shifts beta vs the unmasked target), so the benched config is exact
+    K = SP.capacity_K(n, min(1.0, n_active / n * margin))
+
+    def row_step(a, vals, idx, x, cbar):
+        a_new, hp, vals, idx, count, ov = SP.flat_compact_step(
+            cfg, w, layout, a, vals, idx, x, colm)
+        return a_new, vals, idx, compact_grads(vals, idx, cbar)
+
+    def dual_step(a, vals, idx, x, cbar):
+        a_new, hp, vals, idx, count, ov = SP.flat_compact_step(
+            cfg, w, layout, a, vals, idx, x, cl=cl)
+        return a_new, vals, idx, compact_grads(vals, idx, cbar)
+
+    idx0 = jnp.full((batch, K), -1, jnp.int32)
+    vals_row = jnp.zeros((batch, K, layout.P_pad), jnp.float32)
+    vals_dual = jnp.zeros((batch, K, cl.Pc_pad), jnp.float32)
+    f_row = jax.jit(row_step).lower(a, vals_row, idx0, x, cbar).compile()
+    f_dual = jax.jit(dual_step).lower(a, vals_dual, idx0, x, cbar).compile()
+    t_r = _time_ms(f_row, (a, vals_row, idx0, x, cbar), reps)
+    t_c = _time_ms(f_dual, (a, vals_dual, idx0, x, cbar), reps)
+
+    row_bytes = influence_carry_bytes(batch, K, layout.P_pad)
+    dual_bytes = influence_carry_bytes(batch, K, cl.Pc_pad)
+    wt = SP.flat_col_density(layout, masks)
+    rec = {"n": n, "n_in": n_in, "batch": batch, "beta_target": beta,
+           "beta_measured": round(beta_meas, 4), "omega": omega,
+           "block": block, "omega_tilde_cols": round(wt, 4), "K": K,
+           "max_active_rows": n_active, "overflow": max(0, n_active - K),
+           "P": layout.P, "Pc": cl.Pc,
+           "row_compact_ms": round(t_r, 3), "dual_compact_ms": round(t_c, 3),
+           "speedup_dual_over_row": round(t_r / t_c, 2),
+           "row_carry_bytes": row_bytes, "dual_carry_bytes": dual_bytes,
+           "carry_bytes_ratio": round(dual_bytes / row_bytes, 4)}
+    rows.append((f"kernel/dual_step/n{n}_b{batch}_w{omega}/row_ms",
+                 f"{t_r:.1f}", f"carry={row_bytes}B"))
+    rows.append((f"kernel/dual_step/n{n}_b{batch}_w{omega}/dual_ms",
+                 f"{t_c:.1f}",
+                 f"x{t_r / t_c:.2f}_vs_row_carry={dual_bytes}B"))
+    return rec
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -253,25 +327,55 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, nargs="+", default=[256, 384])
     ap.add_argument("--stacked-n", type=int, nargs="+", default=[256])
+    ap.add_argument("--sweep-n", type=int, nargs="+", default=[256])
+    ap.add_argument("--sweep-omega", type=float, nargs="+",
+                    default=[0.0, 0.5, 0.9])
+    ap.add_argument("--sweep-batch", type=int, nargs="+", default=[1, 4])
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--beta", type=float, default=0.8)
     ap.add_argument("--reps", type=int, default=3)
-    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
-                                         / "BENCH_kernels.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny dual-compact sweep only (CI fast lane)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: repo-root BENCH_kernels.json"
+                         ", or BENCH_kernels.ci.json with --smoke so the "
+                         "committed full record is never clobbered)")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = str(Path(__file__).resolve().parents[1] /
+                       ("BENCH_kernels.ci.json" if args.smoke
+                        else "BENCH_kernels.json"))
     rows: list = []
-    recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
-            for n in args.n]
-    stacked_recs = [stacked_egru_step_bench(rows, n=n, L=args.layers,
-                                            beta=args.beta, reps=args.reps)
-                    for n in args.stacked_n]
+    if args.smoke:
+        sweep = [dual_compact_step_bench(rows, n=96, beta=args.beta,
+                                         omega=0.9, batch=b, reps=2)
+                 for b in (1, 4)]
+        out = {"compact_sweep": sweep,
+               "note": "CI smoke: dual (row x column) compact vs row-only "
+                       "compact, tiny n; CPU wall clock, f32"}
+    else:
+        recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
+                for n in args.n]
+        stacked_recs = [stacked_egru_step_bench(rows, n=n, L=args.layers,
+                                                beta=args.beta,
+                                                reps=args.reps)
+                        for n in args.stacked_n]
+        sweep = [dual_compact_step_bench(rows, n=n, beta=args.beta,
+                                         omega=om, batch=b, reps=args.reps)
+                 for n in args.sweep_n for om in args.sweep_omega
+                 for b in args.sweep_batch]
+        out = {"egru_step": recs,
+               "stacked_egru_step": stacked_recs,
+               "compact_sweep": sweep,
+               "note": "dense = masked-dense per-gate reference (stacked: "
+                       "structural-width flat blocks); compact = "
+                       "flat-influence row-compact engine (sparse_rtrl "
+                       "backend='compact' / stacked_rtrl."
+                       "stacked_compact_step); dual = row-compact + "
+                       "column-compact parameter axis (ColLayout, "
+                       "Pc ~= w~ P) with carried-influence bytes; CPU wall "
+                       "clock, f32"}
     for r in rows:
         print(",".join(str(x) for x in r))
-    out = {"egru_step": recs,
-           "stacked_egru_step": stacked_recs,
-           "note": "dense = masked-dense per-gate reference (stacked: "
-                   "structural-width flat blocks); compact = flat-influence "
-                   "row-compact engine (sparse_rtrl backend='compact' / "
-                   "stacked_rtrl.stacked_compact_step); CPU wall clock, f32"}
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"wrote {args.out}")

@@ -102,15 +102,28 @@ def tpu_block_factor(mask: np.ndarray, block: int = 8) -> float:
 
 
 def influence_update_flops(n: int, P: int, K: int | None = None,
-                           K_prev: int | None = None) -> float:
+                           K_prev: int | None = None,
+                           Pc: int | None = None) -> float:
     """MXU FLOPs of one influence update (madd = 2 ops).
 
     Dense (masked or not): 2 n^2 P.  Row-compact with static capacities
     K/K_prev: 2 K K_prev P — the executable form of the paper's
-    beta~(t) beta~(t-1) n^2 p factor (kernels/compact.py)."""
+    beta~(t) beta~(t-1) n^2 p factor (kernels/compact.py).  DUAL compact
+    (row + column, Pc = live column count ~= w~ P): 2 K K_prev Pc — the
+    combined  w~ beta~(t) beta~(t-1) n^2 p  as executable work, i.e. the
+    Table-1 "RTRL + both" time row up to the w~ n^2 J-side term."""
+    width = P if Pc is None else Pc
     if K is None:
-        return 2.0 * n * n * P
-    return 2.0 * K * (K if K_prev is None else K_prev) * P
+        return 2.0 * n * n * width
+    return 2.0 * K * (K if K_prev is None else K_prev) * width
+
+
+def influence_carry_bytes(B: int, K: int, P: int,
+                          dtype_bytes: int = 4) -> int:
+    """Carried-influence memory: [B, K, P] values + [B, K] int32 indices.
+    At full width P this is the paper's beta~ n p; at compact column width
+    Pc it is the combined w~ beta~ n p (Table-1 "RTRL + both" memory row)."""
+    return B * K * P * dtype_bytes + B * K * 4
 
 
 def stacked_influence_update_flops(ns, Ps, betas_t=None, betas_prev=None,

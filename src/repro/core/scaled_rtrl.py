@@ -9,6 +9,9 @@ Scaling path for a thresholded RNN with n in the thousands:
     (repro.core.sparse_rtrl.FlatLayout): values [B, K, P] (P = n*m,
     lane-padded) + active-row indices, K = ceil(beta~_max * n) static
     capacity -> memory realises the paper's beta~ n p factor exactly;
+    with the fixed masks the parameter axis is ALSO carried column-compact
+    (`cfg.col_layout(masks)` -> [B, K, Pc], Pc ~= w~ P): the combined
+    w~ beta~ n p memory row of Table 1, and each model shard w~ narrower;
   * every step runs `sparse_rtrl.flat_compact_step` — the SAME engine the
     EGRU "compact" backend uses — with the J @ M contraction on gathered
     [K, K_prev] tiles (for this cell J-hat = R^T, so tiles are looked up
@@ -78,6 +81,17 @@ class ScaledRTRLConfig:
         from repro.core import stacked_rtrl
         return stacked_rtrl.stacked_layout(self.stacked_cfg())
 
+    def col_layout(self, masks) -> "sparse_rtrl.ColLayout":
+        """Static live-column map from the fixed masks: the influence carry
+        shrinks to [B, K, Pc_pad], Pc ~= w~ P — the paper's combined
+        beta~ * w~ memory factor, and the sharded column axis shrinks by w~
+        per shard (sharding stays zero-collective: the contraction still has
+        no cross-column reduction)."""
+        if self.n_layers > 1:
+            from repro.core import stacked_rtrl
+            return stacked_rtrl.stacked_col_layout(self.slayout(), masks)
+        return sparse_rtrl.col_layout(self.layout(), masks)
+
 
 def init_params(cfg: ScaledRTRLConfig, key: jax.Array):
     from repro.core.sparse_rtrl import apply_masks, make_masks
@@ -98,25 +112,28 @@ def init_params(cfg: ScaledRTRLConfig, key: jax.Array):
 # Compact influence state: flat [B, K, P] (P = n*m, lane-padded)
 # ---------------------------------------------------------------------------
 
-def init_state(cfg: ScaledRTRLConfig):
+def init_state(cfg: ScaledRTRLConfig, cl=None):
+    """cl (a ColLayout from `cfg.col_layout(masks)`) carries the parameter
+    axis column-compact: vals width Pc_pad ~= w~ P_pad."""
     B, K, n = cfg.batch, cfg.K, cfg.n
     if cfg.n_layers > 1:
-        P_pad = cfg.slayout().P_pad
+        P_carry = cl.Pc_pad if cl is not None else cfg.slayout().P_pad
         L = cfg.n_layers
         return {
             "a": tuple(jnp.zeros((B, n), jnp.float32) for _ in range(L)),
-            "vals": tuple(jnp.zeros((B, K, P_pad), jnp.float32)
+            "vals": tuple(jnp.zeros((B, K, P_carry), jnp.float32)
                           for _ in range(L)),
             "idx": tuple(jnp.full((B, K), -1, jnp.int32) for _ in range(L)),
         }
+    P_carry = cl.Pc_pad if cl is not None else cfg.layout().P_pad
     return {
         "a": jnp.zeros((B, n), jnp.float32),
-        "vals": jnp.zeros((B, K, cfg.layout().P_pad), jnp.float32),
+        "vals": jnp.zeros((B, K, P_carry), jnp.float32),
         "idx": jnp.full((B, K), -1, jnp.int32),
     }
 
 
-def compact_step(cfg: ScaledRTRLConfig, w, state, x_t):
+def compact_step(cfg: ScaledRTRLConfig, w, state, x_t, cl=None):
     """One RTRL step with row-compact flat influence.  FLOPs ~ K*K*n*m.
 
     Thin wrapper over `sparse_rtrl.flat_compact_step` (the shared engine);
@@ -125,16 +142,17 @@ def compact_step(cfg: ScaledRTRLConfig, w, state, x_t):
     carried compact (`stacked_rtrl.stacked_compact_step`): the cross-layer
     B-hat = W^T tiles are looked up from each layer's input matrix at the
     active rows of the layer below — depth adds K*K*P per extra layer pair,
-    never n^2."""
+    never n^2.  With `cl` the carry is additionally column-compact:
+    FLOPs ~ K*K*Pc, the combined w~ beta~^2 factor."""
     if cfg.n_layers > 1:
         from repro.core import stacked_rtrl as ST
         a_new, _, vals, idx, overflow = ST.stacked_compact_step(
             cfg.stacked_cfg(), w, cfg.slayout(), state["a"], state["vals"],
-            state["idx"], x_t)
+            state["idx"], x_t, cl=cl)
         return {"a": a_new, "vals": vals, "idx": idx}, overflow
     a_new, _, vals, idx, _, overflow = sparse_rtrl.flat_compact_step(
         cfg.cell_cfg(), w, cfg.layout(), state["a"], state["vals"],
-        state["idx"], x_t)
+        state["idx"], x_t, cl=cl)
     return {"a": a_new, "vals": vals, "idx": idx}, overflow
 
 
@@ -150,12 +168,15 @@ def dense_step(cfg: ScaledRTRLConfig, w, a_prev, M, x_t):
     return a_new, hp[:, :, None, None] * T
 
 
-def compact_to_dense_M(cfg: ScaledRTRLConfig, state) -> jax.Array:
+def compact_to_dense_M(cfg: ScaledRTRLConfig, state, cl=None) -> jax.Array:
     B, K, n, m = cfg.batch, cfg.K, cfg.n, cfg.m
-    P_pad = state["vals"].shape[-1]
+    vals = state["vals"]
+    if cl is not None:           # scatter live columns back to the full axis
+        vals = sparse_rtrl.cols_to_flat(cl, vals)
+    P_pad = vals.shape[-1]
     out = jnp.zeros((B, n + 1, P_pad), jnp.float32)
     idx = jnp.where(state["idx"] < 0, n, state["idx"])
-    out = out.at[jnp.arange(B)[:, None], idx].set(state["vals"])
+    out = out.at[jnp.arange(B)[:, None], idx].set(vals)
     return out[:, :n, :n * m].reshape(B, n, n, m)
 
 
@@ -163,22 +184,35 @@ def compact_to_dense_M(cfg: ScaledRTRLConfig, state) -> jax.Array:
 # Training step (online gradient accumulation over a sequence)
 # ---------------------------------------------------------------------------
 
-def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
+def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels, masks=None, *,
+               col_compact: bool | None = None):
     """xs: [T, B, n_in]. Exact RTRL with compact influence; O(B K n m) memory.
+    Returns (loss, grads, stats); stats["overflow"] is the per-step
+    row-compaction overflow trace ([T] or [T, L]) — callers assert it is 0
+    to certify exactness without reaching into kernel internals.
 
     Gradient extraction is fused into the compact form (compact_grads):
     c-bar gathered at the active rows — the dense [B, n, n, m] influence is
     never materialized.  With `n_layers > 1` the influence is the stacked
-    block carry and the gradient reads the TOP layer's compact rows only."""
+    block carry and the gradient reads the TOP layer's compact rows only.
+    With `masks` (col_compact default None = auto-on) the carry is DUAL
+    compact: [B, K, Pc_pad] with Pc ~= w~ P, the combined-sparsity memory
+    factor; the flat gradient scatters back once, after the scan."""
     from repro.kernels.compact import compact_grads
+    if col_compact is None:
+        col_compact = masks is not None
+    cl = cfg.col_layout(masks) if col_compact else None
     stacked = cfg.n_layers > 1
     w = params["layers"] if stacked else cells.rec_param_tree(params)
     T = xs.shape[0]
-    P_pad = cfg.slayout().P_pad if stacked else cfg.layout().P_pad
+    if cl is not None:
+        P_carry = cl.Pc_pad
+    else:
+        P_carry = cfg.slayout().P_pad if stacked else cfg.layout().P_pad
 
     def body(carry, x_t):
         state, gw, gout, loss = carry
-        state, _ = compact_step(cfg, w, state, x_t)
+        state, overflow = compact_step(cfg, w, state, x_t, cl=cl)
 
         def inst_loss(po, ai):
             return cells.xent(cells.readout({"out": po}, ai), labels) / T
@@ -192,13 +226,17 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
         else:
             gw = gw + compact_grads(state["vals"], state["idx"], cbar)
         gout = jax.tree.map(jnp.add, gout, gout_t)
-        return (state, gw, gout, loss + lt), None
+        # [L] per-layer trace for a stack; [B] -> scalar for a single layer
+        return (state, gw, gout, loss + lt), (overflow if stacked
+                                              else jnp.max(overflow))
 
-    gw0 = jnp.zeros((P_pad,), jnp.float32)
+    gw0 = jnp.zeros((P_carry,), jnp.float32)
     gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
                          params["out"])
-    (state, gw, gout, loss), _ = jax.lax.scan(
-        body, (init_state(cfg), gw0, gout0, jnp.float32(0)), xs)
+    (state, gw, gout, loss), overflow = jax.lax.scan(
+        body, (init_state(cfg, cl), gw0, gout0, jnp.float32(0)), xs)
+    if cl is not None:
+        gw = sparse_rtrl.cols_to_flat(cl, gw)
     if stacked:
         from repro.core import stacked_rtrl as ST
         grads = ST.unflatten_stacked_grads(cfg.stacked_cfg(), cfg.slayout(),
@@ -207,7 +245,7 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels):
         grads = sparse_rtrl.unflatten_flat_grads(cfg.cell_cfg(),
                                                  cfg.layout(), gw)
     grads["out"] = gout
-    return loss, grads
+    return loss, grads, {"overflow": overflow}
 
 
 def sharded_step_specs(cfg: ScaledRTRLConfig, mesh):

@@ -29,6 +29,13 @@ Two representations of the influence matrix coexist:
                      FLOPs ~ beta~(t) beta~(t-1) n^2 p, with gradient
                      extraction c-bar^T M fused into the compact form
 
+With fixed parameter masks the live column set is STATIC, so the pallas and
+compact backends additionally carry the parameter axis COLUMN-compact
+(col_compact=, default on whenever masks are given): `ColLayout` maps the
+Pc ~= w~ P live columns, M-bar is built directly at compact width, and the
+carry/contraction shrink to [B, K, Pc] / K K' Pc — the paper's COMBINED
+w~ beta~(t) beta~(t-1) n^2 p compute and w~ beta~ n p memory, physically.
+
 All backends produce gradients equal to `repro.core.rtrl` (generic oracle)
 and to BPTT — the paper's "without any approximations" claim; `repro.core.
 costs` does the paper's own "compute-adjusted" op accounting from the
@@ -43,6 +50,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cells
 from repro.core.cells import EGRUConfig
@@ -69,8 +77,9 @@ def make_masks(cfg: EGRUConfig, key: jax.Array, sparsity: float,
             return (jax.random.uniform(key, shape) >= sparsity).astype(jnp.float32)
         bshape = tuple(-(-s // block) for s in shape)
         coarse = (jax.random.uniform(key, bshape) >= sparsity).astype(jnp.float32)
-        fine = jnp.kron(coarse, jnp.ones((block, block)))
-        return fine[: shape[0], : shape[1]]
+        # index the coarse grid instead of jnp.kron: O(shape) gather, no
+        # [bshape * block^2] intermediate, and no trailing crop
+        return coarse[jnp.arange(shape[0]) // block][:, jnp.arange(shape[1]) // block]
 
     gates = ("v",) if cfg.kind == "rnn" else ("u", "r", "z")
     masks = {}
@@ -371,6 +380,161 @@ def flat_jmask(cfg: EGRUConfig, masks: Tree | None) -> jax.Array | None:
     return (pat > 0).astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# Column compaction: the fixed masks make the live (q, m)-column set STATIC,
+# so the flat parameter axis itself is carried at compact width Pc ~= w~ P —
+# the paper's omega~ memory factor realised physically, composing with the
+# row compaction's beta~ factor (dual row x column compaction).
+# ---------------------------------------------------------------------------
+
+# gate ids on the compact column axis: layout.gates order, then theta block
+COL_GATE_THETA = 3        # 'gru' trailing theta block ('rnn' folds theta in m)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColLayout:
+    """Static live-column map of a (possibly stacked) flat parameter axis.
+
+    Compact column c < Pc holds flat column src[c] of the full P_pad-wide
+    axis; (layer, gate, q, j) decompose it into the owning layer, the gate
+    block (gates order, COL_GATE_THETA = gru theta block), the unit index q
+    and the within-group parameter index j — everything `flat_mbar_rows_cols`
+    needs to build the immediate influence DIRECTLY at compact width, never
+    materializing the P-wide form.  Columns are kept in ascending src order;
+    Pc_pad rounds up to a LANE multiple (pad columns dead, live = 0).
+    Built eagerly (host numpy) from the concrete masks at init — masks are
+    fixed (Sec. 6), so this is a one-off."""
+    Pc: int                # live column count  (~= w~ P)
+    Pc_pad: int            # Pc rounded up to a LANE multiple
+    P_pad: int             # width of the full flat axis this compacts
+    src: jax.Array         # [Pc_pad] int32 original flat column (pad: P_pad)
+    layer: jax.Array       # [Pc_pad] int32 owning layer (pad: -1)
+    gate: jax.Array        # [Pc_pad] int32 gate id within layer (pad: -1)
+    q: jax.Array           # [Pc_pad] int32 unit index within layer
+    j: jax.Array           # [Pc_pad] int32 within-group param index
+    live: jax.Array        # [Pc_pad] float32 1/0 (pad columns 0)
+
+
+def _decompose_columns(layout: FlatLayout):
+    """(gate, q, j) int arrays [P] for one layer's local flat columns."""
+    n, m = layout.n, layout.m
+    c = np.arange(layout.P)
+    if layout.kind == "rnn":
+        return np.zeros_like(c), (c // m), (c % m)
+    gate = np.minimum(c // (n * m), COL_GATE_THETA)
+    rem = c % (n * m)
+    q = np.where(gate < COL_GATE_THETA, rem // m, c - len(layout.gates) * n * m)
+    j = np.where(gate < COL_GATE_THETA, rem % m, 0)
+    return gate, q, j
+
+
+def build_col_layout(parts, P_pad: int) -> ColLayout:
+    """ColLayout over concatenated per-layer column blocks.
+
+    parts: [(FlatLayout, masks-or-None, column offset, layer id)] — one
+    entry for a single-layer axis, one per layer for the stacked axis."""
+    srcs, layers, gates, qs, js = [], [], [], [], []
+    for lay, mk, off, lid in parts:
+        live = np.asarray(flat_col_mask(lay, mk))[:lay.P] > 0
+        g, q, j = _decompose_columns(lay)
+        idx = np.nonzero(live)[0]
+        srcs.append(idx + off)
+        layers.append(np.full(idx.size, lid))
+        gates.append(g[idx])
+        qs.append(q[idx])
+        js.append(j[idx])
+    src = np.concatenate(srcs)
+    Pc = int(src.size)
+    Pc_pad = max(LANE, -(-Pc // LANE) * LANE)
+    pad = Pc_pad - Pc
+
+    def col(a, fill):
+        return jnp.asarray(np.concatenate(
+            [a, np.full(pad, fill)]).astype(np.int32))
+
+    return ColLayout(
+        Pc=Pc, Pc_pad=Pc_pad, P_pad=P_pad,
+        src=col(src, P_pad), layer=col(np.concatenate(layers), -1),
+        gate=col(np.concatenate(gates), -1), q=col(np.concatenate(qs), 0),
+        j=col(np.concatenate(js), 0),
+        live=jnp.asarray((np.arange(Pc_pad) < Pc).astype(np.float32)))
+
+
+def col_layout(layout: FlatLayout, masks: Tree | None) -> ColLayout:
+    """Single-layer live-column map (masks=None -> all P columns live)."""
+    return build_col_layout([(layout, masks, 0, 0)], layout.P_pad)
+
+
+def flat_col_density(layout: FlatLayout, masks: Tree | None) -> float:
+    """Live fraction of the P logical parameter columns — the omega~ factor
+    the column compaction realises (Pc == flat_col_density * P)."""
+    return float(np.mean(np.asarray(flat_col_mask(layout, masks))[:layout.P]))
+
+
+def flat_to_cols(cl: ColLayout, x: jax.Array) -> jax.Array:
+    """Gather the live columns: [..., P_pad] -> [..., Pc_pad] (pad cols 0)."""
+    safe = jnp.clip(cl.src, 0, cl.P_pad - 1)
+    return jnp.take(x, safe, axis=-1) * cl.live
+
+
+def cols_to_flat(cl: ColLayout, x: jax.Array) -> jax.Array:
+    """Scatter back to the full axis: [..., Pc_pad] -> [..., P_pad].
+
+    Dead columns of the full axis come back exactly zero — with
+    `flat_to_cols` this is a lossless round trip on column-masked buffers."""
+    src = jnp.where(cl.live > 0, cl.src, cl.P_pad)      # pad -> sentinel col
+    out = jnp.zeros(x.shape[:-1] + (cl.P_pad + 1,), x.dtype)
+    out = out.at[..., src].add(x * cl.live)
+    return out[..., :cl.P_pad]
+
+
+def flat_mbar_rows_cols(cfg: EGRUConfig, layout: FlatLayout, cl: ColLayout,
+                        mbar: Tree, safe_new: jax.Array, *,
+                        layer: int = 0) -> jax.Array:
+    """M-bar rows at the active row indices, DIRECTLY at compact column
+    width: [B, K, Pc_pad] — the column-compact sibling of `flat_mbar_rows`.
+
+    Cost is K * Pc elementwise (+ the r-gate gather), never touching the
+    P-wide axis: the w~ factor applies to the immediate-influence build too,
+    not only the J contraction.  Diagonal gates (u/z, rnn v) and theta only
+    hit columns whose unit q equals the row's unit; the r gate couples all
+    live q through R_z, read off the already-computed mbar['r_coef'].
+    `layer` selects this layer's columns of a stacked axis (others -> 0)."""
+    n, m = layout.n, layout.m
+    B, K = safe_new.shape
+    sel = (cl.layer == layer) & (cl.live > 0)           # [Pc_pad]
+    q = jnp.clip(jnp.where(sel, cl.q, 0), 0, n - 1)
+    j = jnp.clip(jnp.where(sel, cl.j, 0), 0, m - 1)
+    gate = jnp.where(sel, cl.gate, -1)
+    match = (q[None, None, :] == safe_new[:, :, None])  # [B, K, Pc_pad]
+    if cfg.kind == "rnn":
+        Cdiag = (mbar["v_diag_coef"][:, q] * mbar["v_g"][:, j]
+                 * sel.astype(jnp.float32))             # [B, Pc_pad]
+        return match * Cdiag[:, None, :]
+    gu, gr, gz = (layout.gates.index(g) for g in ("u", "r", "z"))
+    Cdiag = jnp.where(
+        gate == gu, mbar["u_diag_coef"][:, q] * mbar["u_g"][:, j],
+        jnp.where(gate == gz, mbar["z_diag_coef"][:, q] * mbar["z_g"][:, j],
+                  jnp.where(gate == COL_GATE_THETA, -1.0, 0.0)))
+    out = match * Cdiag[:, None, :]
+    # r gate: value[b, k, c] = r_coef[b, row_k, q(c)] * r_g[b, j(c)]
+    bidx = jnp.arange(B)[:, None]
+    rc_rows = mbar["r_coef"][bidx, safe_new]            # [B, K, n]
+    rc = jnp.take_along_axis(
+        rc_rows, jnp.broadcast_to(q[None, None, :], (B, K, cl.Pc_pad)),
+        axis=2)
+    return out + rc * (mbar["r_g"][:, j] * (gate == gr))[:, None, :]
+
+
+def flat_mbar_cols(cfg: EGRUConfig, layout: FlatLayout, cl: ColLayout,
+                   mbar: Tree, *, layer: int = 0) -> jax.Array:
+    """Full-row immediate influence at compact column width [B, n, Pc_pad]
+    (hp-ungated) — feeds the dual-compacted Pallas/dense full-row paths."""
+    B = (mbar["v_g"] if cfg.kind == "rnn" else mbar["u_g"]).shape[0]
+    rows = jnp.broadcast_to(jnp.arange(layout.n)[None], (B, layout.n))
+    return flat_mbar_rows_cols(cfg, layout, cl, mbar, rows, layer=layer)
+
+
 def flat_mbar(cfg: EGRUConfig, layout: FlatLayout, mbar: Tree,
               col_mask: jax.Array | None = None, *, offset: int = 0,
               total_pad: int | None = None) -> jax.Array:
@@ -468,7 +632,8 @@ def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
                       a_prev: jax.Array, vals: jax.Array, idx_prev: jax.Array,
                       x_t: jax.Array, col_mask: jax.Array | None = None,
                       *, offset: int = 0, total_pad: int | None = None,
-                      below: tuple | None = None):
+                      below: tuple | None = None,
+                      cl: ColLayout | None = None, layer: int = 0):
     """One RTRL step with the influence carried row-compact in flat layout.
 
     vals [B, K, total_pad], idx_prev [B, K] (sentinel -1 = dead slot).
@@ -483,7 +648,15 @@ def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
     B^(l) M^(l-1)_t — x_t is then the layer below's activity a^{l-1}_t and
     the input-Jacobian tiles B-hat are gathered at (new rows, active rows of
     the layer below), so the cross term costs K * K_below * P, event-sparse
-    on both sides."""
+    on both sides.
+
+    DUAL compaction: with `cl` (a ColLayout over the same flat axis) the
+    parameter axis is carried column-compact — vals are [B, K, Pc_pad], the
+    M-bar rows are built directly at compact width (`flat_mbar_rows_cols`;
+    `layer` names this layer's columns of a stacked axis) and the update
+    costs K * K_prev * Pc ~= w~ beta~^2 n^2 p — the paper's COMBINED
+    activity x parameter factor.  col_mask/offset/total_pad are ignored in
+    this mode (liveness and placement live inside `cl`)."""
     from repro.kernels import compact as CK
     n = layout.n
     B, K = idx_prev.shape
@@ -499,8 +672,12 @@ def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
     R = w["v"]["R"] if cfg.kind == "rnn" else None
     Jgg = CK.gather_j_tiles(None if R is not None else Jhat,
                             idx_new, idx_prev, R=R)
-    mbar_rows = flat_mbar_rows(cfg, layout, mbar, safe_new, col_mask,
-                               offset=offset, total_pad=total_pad)
+    if cl is not None:
+        mbar_rows = flat_mbar_rows_cols(cfg, layout, cl, mbar, safe_new,
+                                        layer=layer)
+    else:
+        mbar_rows = flat_mbar_rows(cfg, layout, mbar, safe_new, col_mask,
+                                   offset=offset, total_pad=total_pad)
     if below is not None:
         vals_b, idx_b = below
         if cfg.kind == "rnn":
@@ -533,7 +710,8 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
                                labels: jax.Array, masks: Tree | None = None,
                                *, backend: str = "dense",
                                capacity: float = 1.0,
-                               interpret: bool | None = None):
+                               interpret: bool | None = None,
+                               col_compact: bool | None = None):
     """Structured exact RTRL. Returns (loss, grads, stats).
 
     backend selects the influence-update execution strategy (see module
@@ -542,11 +720,19 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
     rows, and reports dropped rows in stats["overflow"].  interpret forces
     the Pallas kernel's interpret mode (None = auto: interpret off-TPU).
 
+    col_compact carries the parameter axis of the influence at the STATIC
+    compact width Pc ~= w~ P derived from the fixed masks (pallas/compact
+    backends; exact — a representation change, not an approximation).  The
+    default None enables it exactly when masks are given; the flat gradient
+    is scattered back to the full axis once, after the scan.
+
     stats carries per-step alpha/beta (and previous-step beta) so
     `repro.core.costs` can integrate the paper's compute-adjusted iterations.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if col_compact is None:
+        col_compact = masks is not None and backend != "dense"
     T, B, _ = xs.shape
     w = cells.rec_param_tree(params)
     a0 = cells.init_state(cfg, B)
@@ -586,19 +772,32 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
 
     layout = flat_layout(cfg)
     colm = flat_col_mask(layout, masks)
-    gw0 = jnp.zeros((layout.P_pad,), jnp.float32)
+    cl = col_layout(layout, masks) if col_compact else None
+    P_carry = cl.Pc_pad if cl is not None else layout.P_pad
+    gw0 = jnp.zeros((P_carry,), jnp.float32)
+
+    def finish_grads(gw, gout):
+        if cl is not None:
+            gw = cols_to_flat(cl, gw)
+        grads = unflatten_flat_grads(cfg, layout, gw)
+        grads["out"] = gout
+        return grads
 
     if backend == "pallas":
         from repro.kernels import ops as kops
         jm = flat_jmask(cfg, masks)
-        M0 = init_influence_flat(layout, B)
+        kcolm = cl.live if cl is not None else colm
+        M0 = jnp.zeros((B, layout.n, P_carry), jnp.float32)
 
         def body(carry, x_t):
             a, M, gw_acc, gout, loss, beta_prev = carry
             a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
-            Mbar = flat_mbar(cfg, layout, mbar, colm)
+            if cl is not None:
+                Mbar = flat_mbar_cols(cfg, layout, cl, mbar)
+            else:
+                Mbar = flat_mbar(cfg, layout, mbar, colm)
             M_new = kops.influence_update(hp, Jhat, M, Mbar, jmask=jm,
-                                          col_mask=colm, interpret=interpret)
+                                          col_mask=kcolm, interpret=interpret)
             lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
                 params["out"], a_new)
             gw_acc = gw_acc + jnp.einsum("bk,bkp->p", cbar, M_new)
@@ -610,20 +809,18 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
 
         init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
         (a, M, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-        grads = unflatten_flat_grads(cfg, layout, gw)
-        grads["out"] = gout
-        return loss, grads, stats
+        return loss, finish_grads(gw, gout), stats
 
     # backend == "compact"
     from repro.kernels import compact as CK
     K = capacity_K(cfg.n_hidden, capacity)
-    vals0 = jnp.zeros((B, K, layout.P_pad), jnp.float32)
+    vals0 = jnp.zeros((B, K, P_carry), jnp.float32)
     idx0 = jnp.full((B, K), -1, jnp.int32)
 
     def body(carry, x_t):
         a, vals, idx, gw_acc, gout, loss, beta_prev = carry
         a_new, hp, vals_new, idx_new, count, overflow = flat_compact_step(
-            cfg, w, layout, a, vals, idx, x_t, colm)
+            cfg, w, layout, a, vals, idx, x_t, colm, cl=cl)
         lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
             params["out"], a_new)
         gw_acc = gw_acc + CK.compact_grads(vals_new, idx_new, cbar)
@@ -636,9 +833,7 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
 
     init = (a0, vals0, idx0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
     (a, vals, idx, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-    grads = unflatten_flat_grads(cfg, layout, gw)
-    grads["out"] = gout
-    return loss, grads, stats
+    return loss, finish_grads(gw, gout), stats
 
 
 def _row_density(M: Tree) -> jax.Array:

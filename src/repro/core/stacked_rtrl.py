@@ -141,6 +141,26 @@ def layer_col_masks(slayout: StackedFlatLayout,
     return tuple(out)
 
 
+def stacked_col_layout(slayout: StackedFlatLayout,
+                       masks: list | None) -> "SP.ColLayout":
+    """Live-column map over the CONCATENATED stacked parameter axis: one
+    compact axis shared by every layer's buffer, each column tagged with its
+    owning layer so `flat_mbar_rows_cols(layer=l)` hits only layer l's
+    columns.  Width Pc ~= w~ P_total — the stacked carry shrinks by omega~
+    on top of the per-layer beta~ row compaction."""
+    parts = [(lay, None if masks is None else masks[l], slayout.offsets[l], l)
+             for l, lay in enumerate(slayout.layers)]
+    return SP.build_col_layout(parts, slayout.P_pad)
+
+
+def layer_col_lives(slayout: StackedFlatLayout, cl: "SP.ColLayout") -> tuple:
+    """Per-layer COMPACT-axis liveness: layer l's buffer kills columns of
+    layers j > l (block lower-triangularity) on the compact axis — the dual
+    of `layer_col_masks` for column-compact carries."""
+    return tuple(cl.live * (cl.layer <= l)
+                 for l in range(len(slayout.layers)))
+
+
 # ---------------------------------------------------------------------------
 # Gradient unflattening: concatenated flat vector -> {"layers": (...,)}
 # ---------------------------------------------------------------------------
@@ -162,13 +182,19 @@ def unflatten_stacked_grads(cfg: StackedEGRUConfig,
 def stacked_compact_step(cfg: StackedEGRUConfig, ws: tuple,
                          slayout: StackedFlatLayout, a_prevs: tuple,
                          vals: tuple, idx: tuple, x_t: jax.Array,
-                         colms: tuple | None = None):
+                         colms: tuple | None = None,
+                         cl: "SP.ColLayout | None" = None):
     """One bottom-up stacked RTRL step, every layer row-compact.
 
     Layer l runs `sparse_rtrl.flat_compact_step` with its column offset and
     (for l > 0) the freshly updated compact influence of the layer below as
     the cross-layer `below` term.  Returns (a_news, hps, vals', idx',
-    overflow [L])."""
+    overflow [L]).
+
+    With `cl` (from `stacked_col_layout`) every layer's buffer is
+    additionally COLUMN-compact on the shared stacked axis ([B, K_l,
+    Pc_pad]); the cross-layer contraction runs at compact width too, so each
+    (l, j) block costs its w~ beta~^2 share and the carry shrinks by w~."""
     L = cfg.n_layers
     inp = x_t
     a_news, hps, vals_new, idx_new, ovs = [], [], [], [], []
@@ -178,7 +204,7 @@ def stacked_compact_step(cfg: StackedEGRUConfig, ws: tuple,
         a_new, hp, v_new, i_new, _, ov = SP.flat_compact_step(
             cfg.layer_cfg(l), ws[l], slayout.layers[l], a_prevs[l], vals[l],
             idx[l], inp, colm_l, offset=slayout.offsets[l],
-            total_pad=slayout.P_pad, below=below)
+            total_pad=slayout.P_pad, below=below, cl=cl, layer=l)
         a_news.append(a_new)
         hps.append(hp)
         vals_new.append(v_new)
@@ -211,13 +237,19 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
                                 backend: str = "dense",
                                 capacity: float = 1.0,
                                 interpret: bool | None = None,
-                                delegate_single_layer: bool = True):
+                                delegate_single_layer: bool = True,
+                                col_compact: bool | None = None):
     """Exact stacked RTRL.  Returns (loss, grads, stats).
 
     grads: {"layers": [per-layer trees], "out": ...}.  stats carries
     per-layer alpha/beta traces ("alpha_layers"/"beta_layers" [T, L]) plus
     the scalar means the single-layer engine reports, so
     `repro.core.costs.stacked_*` can integrate per-layer compute.
+
+    col_compact (default None = auto: masks given, non-dense backend)
+    carries every layer's influence buffer column-compact on the shared
+    stacked parameter axis (`stacked_col_layout`) — exact, memory and
+    contraction width both shrink by w~.
 
     With `n_layers == 1` the call delegates to the single-layer engine
     (`sparse_rtrl.sparse_rtrl_loss_and_grads`) — bit-for-bit the old code
@@ -228,12 +260,14 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
     if backend not in SP.BACKENDS:
         raise ValueError(f"backend must be one of {SP.BACKENDS}, "
                          f"got {backend!r}")
+    if col_compact is None:
+        col_compact = masks is not None and backend != "dense"
     L = cfg.n_layers
     if L == 1 and delegate_single_layer:
         scfg, sparams, smasks = _single_layer_view(cfg, params, masks)
         loss, g, stats = SP.sparse_rtrl_loss_and_grads(
             scfg, sparams, xs, labels, smasks, backend=backend,
-            capacity=capacity, interpret=interpret)
+            capacity=capacity, interpret=interpret, col_compact=col_compact)
         grads = {"layers": [{k: v for k, v in g.items() if k != "out"}],
                  "out": g["out"]}
         stats = dict(stats)
@@ -247,10 +281,19 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
     lcfgs = [cfg.layer_cfg(l) for l in range(L)]
     colm = stacked_col_mask(slayout, masks)
     colms = layer_col_masks(slayout, colm)
+    cl = stacked_col_layout(slayout, masks) if col_compact else None
+    P_carry = cl.Pc_pad if cl is not None else slayout.P_pad
     a0 = cells.init_stacked_state(cfg, B)
-    gw0 = jnp.zeros((slayout.P_pad,), jnp.float32)
+    gw0 = jnp.zeros((P_carry,), jnp.float32)
     gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
                          params["out"])
+
+    def finish_grads(gw, gout):
+        if cl is not None:
+            gw = SP.cols_to_flat(cl, gw)
+        grads = unflatten_stacked_grads(cfg, slayout, gw)
+        grads["out"] = gout
+        return grads
 
     def inst_loss(po, a_top):
         return cells.xent(cells.readout({"out": po}, a_top), labels) / T
@@ -278,7 +321,8 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
             jms = tuple(SP.flat_jmask(lcfgs[l],
                                       None if masks is None else masks[l])
                         for l in range(L))
-        M0 = tuple(jnp.zeros((B, n, slayout.P_pad), jnp.float32)
+        klives = None if cl is None else layer_col_lives(slayout, cl)
+        M0 = tuple(jnp.zeros((B, n, P_carry), jnp.float32)
                    for n in cfg.layer_sizes)
 
         def body(carry, x_t):
@@ -289,9 +333,12 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
                 lay = slayout.layers[l]
                 a_new, hp, Jhat, Bhat, mbar = layer_partials(
                     l, a_prevs[l], inp)
-                Mb = SP.flat_mbar(lcfgs[l], lay, mbar, colms[l],
-                                  offset=slayout.offsets[l],
-                                  total_pad=slayout.P_pad)
+                if cl is not None:
+                    Mb = SP.flat_mbar_cols(lcfgs[l], lay, cl, mbar, layer=l)
+                else:
+                    Mb = SP.flat_mbar(lcfgs[l], lay, mbar, colms[l],
+                                      offset=slayout.offsets[l],
+                                      total_pad=slayout.P_pad)
                 if l > 0:
                     # cross-layer block row:  B-hat^(l) M^(l-1)_t  (Mbar' =
                     # M-bar + cross shares the kernel's D(hp) row gate)
@@ -299,7 +346,8 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
                 if backend == "pallas":
                     M_new = kops.influence_update(
                         hp, Jhat, Ms[l], Mb, jmask=jms[l],
-                        col_mask=colms[l], interpret=interpret)
+                        col_mask=colms[l] if cl is None else klives[l],
+                        interpret=interpret)
                 else:
                     M_new = hp[:, :, None] * (
                         jnp.einsum("bkl,blp->bkp", Jhat, Ms[l]) + Mb)
@@ -319,19 +367,17 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
 
         init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.ones((L,)))
         (_, _, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-        grads = unflatten_stacked_grads(cfg, slayout, gw)
-        grads["out"] = gout
-        return loss, grads, stats
+        return loss, finish_grads(gw, gout), stats
 
     # backend == "compact": per-layer row-compact carry via flat_compact_step
     Ks = tuple(SP.capacity_K(n, capacity) for n in cfg.layer_sizes)
-    vals0 = tuple(jnp.zeros((B, K, slayout.P_pad), jnp.float32) for K in Ks)
+    vals0 = tuple(jnp.zeros((B, K, P_carry), jnp.float32) for K in Ks)
     idx0 = tuple(jnp.full((B, K), -1, jnp.int32) for K in Ks)
 
     def body(carry, x_t):
         a_prevs, vals, idx, gw_acc, gout, loss, beta_prev = carry
         a_news, hps, vals_new, idx_new, ovs = stacked_compact_step(
-            cfg, ws, slayout, a_prevs, vals, idx, x_t, colms)
+            cfg, ws, slayout, a_prevs, vals, idx, x_t, colms, cl=cl)
         from repro.kernels.compact import compact_grads
         lt, (gout_t, cbar) = jax.value_and_grad(
             inst_loss, argnums=(0, 1))(params["out"], a_news[-1])
@@ -347,6 +393,4 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
 
     init = (a0, vals0, idx0, gw0, gout0, jnp.float32(0), jnp.ones((L,)))
     (_, _, _, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-    grads = unflatten_stacked_grads(cfg, slayout, gw)
-    grads["out"] = gout
-    return loss, grads, stats
+    return loss, finish_grads(gw, gout), stats

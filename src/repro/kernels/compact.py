@@ -13,6 +13,15 @@ The influence matrix is carried in compact form (values [B,K,P] + active-row
 indices [B,K]) across timesteps, so memory is the paper's beta~ n p too.
 Rows beyond capacity are dropped (capacity_factor sized so overflow ~never
 happens; overflow count is reported so callers can assert exactness).
+
+DUAL (row x column) compaction: every function here is width-agnostic in P,
+so the same contraction/gather/extraction machinery runs unchanged when the
+caller carries the parameter axis column-compact at Pc ~= w~ P
+(`repro.core.sparse_rtrl.ColLayout` — the fixed Sec.-6 masks make the live
+column set static).  vals become [B, K, Pc_pad]; `compact_update` then does
+K * K_prev * Pc MXU work — the paper's COMBINED  w~ beta~(t) beta~(t-1) n^2 p
+— and `compact_grads` emits the compact flat gradient [Pc_pad] that
+`sparse_rtrl.cols_to_flat` scatters back once per sequence.
 """
 from __future__ import annotations
 

@@ -25,6 +25,16 @@ VMEM tiling: J row-block [bk, n] stays resident across the p-grid; M is
 streamed as [bl, bp] tiles; the MXU sees only dense [bk, bl] x [bl, bp]
 products, all dims multiples of (8, 128) by padding in ops.py.
 
+DUAL-COMPACT mode (combined activity x parameter sparsity): the kernel is
+width-agnostic in P, so the `backend="pallas"` engine can feed it M/Mbar
+carried COLUMN-compact at Pc_pad ~= w~ P (`sparse_rtrl.ColLayout`; Mbar
+built directly at compact width by `flat_mbar_cols`).  The w~ p-side factor
+is then physical — the p-grid itself is w~ shorter, instead of relying on
+factor 3 to skip dead column blocks — while factor 4 (jmask) still prunes
+the R-blocks of the J contraction, the w~ factor on the n^2 side.  col_mask
+degenerates to the pad-block indicator.  Lane alignment is preserved because
+ColLayout pads Pc to a LANE (= bp) multiple.
+
 Validated in interpret mode on CPU against `repro.kernels.ref.influence_ref`
 over shape/dtype/sparsity sweeps (tests/test_kernels.py).
 """

@@ -50,6 +50,17 @@ def train_egru(args) -> dict:
     masks = None
     if args.sparsity > 0.0:
         masks = ST.make_stacked_masks(cfg, jax.random.key(1), args.sparsity)
+    # resolve the auto rule ONCE and pass the explicit bool to the engine,
+    # so the report below can never disagree with what the engine runs
+    col_flag = {"auto": None, "on": True, "off": False}[args.col_compact]
+    col_compact = (masks is not None and backend != "dense"
+                   if col_flag is None else col_flag)
+    if masks is not None and backend != "dense":
+        slayout = ST.stacked_layout(cfg)
+        live = int(np.asarray(ST.stacked_col_mask(slayout, masks)).sum())
+        print(f"influence columns: {live}/{slayout.P_total} live "
+              f"(omega~={ST.stacked_omega_tilde(masks):.3f}); "
+              f"col-compact carry {'ON' if col_compact else 'OFF'}")
     opt = make_optimizer("adamw", lr=cfg.lr)
     if masks is not None:
         opt = masked(opt, {"layers": masks, "out": None})
@@ -59,7 +70,7 @@ def train_egru(args) -> dict:
         xs, ys = batch
         loss, grads, stats = ST.stacked_rtrl_loss_and_grads(
             cfg, params, xs, ys, masks, backend=backend,
-            capacity=args.capacity)
+            capacity=args.capacity, col_compact=col_compact)
         params, opt_state = opt.update(grads, opt_state, params, step)
         metrics = {"loss": loss, "alpha": stats["alpha"].mean(),
                    "beta": stats["beta"].mean()}
@@ -121,6 +132,11 @@ def main():
                     help="compact-backend row capacity fraction")
     ap.add_argument("--sparsity", type=float, default=0.0,
                     help="fixed parameter sparsity (egru-spiral only)")
+    ap.add_argument("--col-compact", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="carry the influence parameter axis column-compact "
+                         "(auto: on whenever --sparsity > 0 and the backend "
+                         "is not 'dense')")
     args = ap.parse_args()
 
     if args.arch in ("egru-spiral", "egru_spiral"):

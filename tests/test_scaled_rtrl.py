@@ -36,12 +36,39 @@ def test_scaled_rtrl_grads_match_bptt():
     cfg, params, _ = _setup()
     xs = jax.random.normal(jax.random.key(2), (8, cfg.batch, cfg.n_in))
     labels = jnp.arange(cfg.batch) % cfg.n_out
-    loss_c, grads_c = SR.rtrl_grads(cfg, params, xs, labels)
+    loss_c, grads_c, stats = SR.rtrl_grads(cfg, params, xs, labels)
+    assert int(stats["overflow"].max()) == 0
     loss_b, grads_b, _ = bptt.bptt_loss_and_grads(cfg.cell_cfg(), params,
                                                   xs, labels)
     assert abs(float(loss_c - loss_b)) < 1e-5
     for gc, gb in zip(jax.tree.leaves(grads_c), jax.tree.leaves(grads_b)):
         np.testing.assert_allclose(np.asarray(gc), np.asarray(gb),
+                                   atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("sparsity", [0.5, 0.9])
+def test_scaled_rtrl_col_compact_matches_bptt(sparsity):
+    """Dual (row x column) compact carry == BPTT on the surviving params;
+    the carried width shrinks to Pc_pad ~= w~ P_pad."""
+    from repro.core import sparse_rtrl as SP
+    cfg, params, masks = _setup(sparsity=sparsity)
+    cl = cfg.col_layout(masks)
+    assert cl.Pc_pad < cfg.layout().P_pad
+    assert cl.Pc == int(np.asarray(
+        SP.flat_col_mask(cfg.layout(), masks)).sum())
+    xs = jax.random.normal(jax.random.key(2), (8, cfg.batch, cfg.n_in))
+    labels = jnp.arange(cfg.batch) % cfg.n_out
+    loss_c, grads_c, stats = SR.rtrl_grads(cfg, params, xs, labels, masks)
+    assert int(stats["overflow"].max()) == 0
+    assert jax.eval_shape(lambda: SR.init_state(cfg, cl))["vals"].shape[-1] \
+        == cl.Pc_pad
+    loss_b, grads_b, _ = bptt.bptt_loss_and_grads(cfg.cell_cfg(), params,
+                                                  xs, labels)
+    assert abs(float(loss_c - loss_b)) < 1e-5
+    gc = SP.apply_masks(grads_c, masks)
+    gb = SP.apply_masks(grads_b, masks)
+    for a, b in zip(jax.tree.leaves(gc), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-5, rtol=1e-4)
 
 
@@ -61,7 +88,8 @@ def test_stacked_scaled_rtrl_grads_match_bptt():
     params, masks = SR.init_params(cfg, jax.random.key(0))
     xs = jax.random.normal(jax.random.key(2), (6, cfg.batch, cfg.n_in))
     labels = jnp.arange(cfg.batch) % cfg.n_out
-    loss_c, grads_c = SR.rtrl_grads(cfg, params, xs, labels)
+    loss_c, grads_c, stats = SR.rtrl_grads(cfg, params, xs, labels)
+    assert int(stats["overflow"].max()) == 0
     loss_b, grads_b, _ = bptt.stacked_bptt_loss_and_grads(
         cfg.stacked_cfg(), params, xs, labels)
     assert abs(float(loss_c - loss_b)) < 1e-5
@@ -70,6 +98,59 @@ def test_stacked_scaled_rtrl_grads_match_bptt():
     for a, b in zip(jax.tree.leaves(gc), jax.tree.leaves(gb)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("sparsity", [0.5, 0.9])
+def test_stacked_scaled_col_compact_matches_bptt(sparsity):
+    """Depth + dual compaction: every layer's carry at [B, K, Pc_pad] on the
+    shared stacked compact axis == stacked BPTT on surviving params."""
+    from repro.core import stacked_rtrl as ST
+    cfg = SR.ScaledRTRLConfig(n=32, n_in=8, batch=3, n_layers=2,
+                              beta_capacity=1.0, sparsity=sparsity)
+    params, masks = SR.init_params(cfg, jax.random.key(0))
+    cl = cfg.col_layout(masks)
+    assert cl.Pc_pad < cfg.slayout().P_pad
+    xs = jax.random.normal(jax.random.key(2), (6, cfg.batch, cfg.n_in))
+    labels = jnp.arange(cfg.batch) % cfg.n_out
+    loss_c, grads_c, stats = SR.rtrl_grads(cfg, params, xs, labels, masks)
+    assert int(stats["overflow"].max()) == 0
+    loss_b, grads_b, _ = bptt.stacked_bptt_loss_and_grads(
+        cfg.stacked_cfg(), params, xs, labels)
+    assert abs(float(loss_c - loss_b)) < 1e-5
+    gc = ST.apply_stacked_masks(grads_c, masks)
+    gb = ST.apply_stacked_masks(grads_b, masks)
+    for a, b in zip(jax.tree.leaves(gc), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_col_compact_sharded_step_no_collectives():
+    """Dual-compact carry shards the COMPACT column axis to 'model' with
+    zero collectives — the contraction still has no cross-column reduction,
+    it is just w~ narrower per shard."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.costing import parse_collective_bytes
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_host_mesh()
+    cfg, params, masks = _setup(n=32, sparsity=0.9)
+    cl = cfg.col_layout(masks)
+    state_sh, _ = SR.sharded_step_specs(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+
+    def step(params, state, x):
+        w = cells.rec_param_tree(params)
+        return SR.compact_step(cfg, w, state, x, cl=cl)[0]
+
+    params_abs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    st_abs = jax.eval_shape(lambda: SR.init_state(cfg, cl))
+    x_abs = jax.ShapeDtypeStruct((cfg.batch, cfg.n_in), jnp.float32)
+    compiled = jax.jit(step, in_shardings=(
+        jax.tree.map(lambda _: rep, params_abs), state_sh,
+        NamedSharding(mesh, P("data", None)))).lower(
+        params_abs, st_abs, x_abs).compile()
+    coll = parse_collective_bytes(compiled.as_text())
+    assert sum(coll.values()) == 0, coll
 
 
 def test_stacked_distributed_step_shards_without_collectives():
