@@ -247,6 +247,32 @@ def stacked_egru_step_bench(rows: list, n=256, L=2, n_in=8, beta=0.8,
     return rec
 
 
+def _egru_operating_point(n, n_in, omega, batch, block, margin):
+    """Shared operating point for the compact/online step benches: masked
+    EGRU with a shifted threshold, binary activity, and the static row
+    capacity K sized from the MEASURED activity (masking shifts beta vs the
+    unmasked target) — one definition, so the benches that quote each other
+    stay comparable."""
+    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=4, kind="gru", eps=0.12)
+    key = jax.random.key(0)
+    params = cells.init_params(cfg, key)
+    params["theta"] = 0.4 + params["theta"]
+    masks = None
+    if omega > 0.0:
+        masks = make_masks(cfg, jax.random.fold_in(key, 9), omega,
+                           block=block)
+        params = SP.apply_masks(params, masks)
+    w = cells.rec_param_tree(params)
+    a = (jax.random.uniform(jax.random.fold_in(key, 1), (batch, n)) > 0.5) * 1.0
+    x = 4.0 * jax.random.normal(jax.random.fold_in(key, 2), (batch, n_in))
+    cbar = jax.random.normal(jax.random.fold_in(key, 3), (batch, n))
+    _, hp, _, _ = SP.cell_partials(cfg, w, a, x)
+    beta_meas = float(jnp.mean(hp == 0.0))
+    n_active = int(jnp.max(jnp.sum(hp != 0.0, axis=1)))
+    K = SP.capacity_K(n, min(1.0, n_active / n * margin))
+    return cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K
+
+
 def dual_compact_step_bench(rows: list, n=256, n_in=8, beta=0.8, omega=0.9,
                             batch=1, block=8, margin=1.25, reps=3) -> dict:
     """Row-only vs DUAL (row x column) compact wall clock for one full EGRU
@@ -258,28 +284,11 @@ def dual_compact_step_bench(rows: list, n=256, n_in=8, beta=0.8, omega=0.9,
     paper's combined  w~ beta~^2 n^2 p  as measured milliseconds and the
     w~ beta~ n p memory as allocated bytes.  omega=0 (masks=None) measures
     the representation overhead with every column live."""
-    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=4, kind="gru", eps=0.12)
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, n_in, omega, batch, block, margin)
     layout = SP.flat_layout(cfg)
-    key = jax.random.key(0)
-    params = cells.init_params(cfg, key)
-    params["theta"] = 0.4 + params["theta"]
-    masks = None
-    if omega > 0.0:
-        masks = make_masks(cfg, jax.random.fold_in(key, 9), omega,
-                           block=block)
-        params = SP.apply_masks(params, masks)
     colm = SP.flat_col_mask(layout, masks)
     cl = SP.col_layout(layout, masks)
-    w = cells.rec_param_tree(params)
-    a = (jax.random.uniform(jax.random.fold_in(key, 1), (batch, n)) > 0.5) * 1.0
-    x = 4.0 * jax.random.normal(jax.random.fold_in(key, 2), (batch, n_in))
-    cbar = jax.random.normal(jax.random.fold_in(key, 3), (batch, n))
-    _, hp, _, _ = SP.cell_partials(cfg, w, a, x)
-    beta_meas = float(jnp.mean(hp == 0.0))
-    n_active = int(jnp.max(jnp.sum(hp != 0.0, axis=1)))
-    # K sized from the MEASURED activity at this operating point (masking
-    # shifts beta vs the unmasked target), so the benched config is exact
-    K = SP.capacity_K(n, min(1.0, n_active / n * margin))
 
     def row_step(a, vals, idx, x, cbar):
         a_new, hp, vals, idx, count, ov = SP.flat_compact_step(
@@ -319,6 +328,50 @@ def dual_compact_step_bench(rows: list, n=256, n_in=8, beta=0.8, omega=0.9,
     return rec
 
 
+def online_step_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9,
+                      batch=1, block=8, margin=1.25, reps=20) -> list:
+    """STEADY-STATE per-step latency of the streaming Learner API — the
+    metric that matters for online learning (a reading is consumed after
+    every step; whole-sequence throughput amortizes nothing).
+
+    Times one jitted `learner.step` (carry in -> carry out) at the same
+    operating point as `dual_compact_step_bench`, for the dense reference,
+    the row-compact carry and the dual (row x column) compact carry, plus
+    the carried bytes each holds between steps."""
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.runtime.online import carry_nbytes
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, n_in, omega, batch, block, margin)
+    y = jnp.zeros((batch,), jnp.int32)
+    capacity = K / n        # capacity_K(n, K/n) == K: identical row capacity
+    recs = []
+    variants = [("dense", "dense", None),
+                ("compact-row", "compact", False),
+                ("compact-dual", "compact", True)]
+    for name, backend, col in variants:
+        learner = make_learner(LearnerSpec(
+            engine="sparse", cfg=cfg, backend=backend, capacity=capacity,
+            col_compact=col))
+        carry = learner.init(params, masks, (x, y), t_total=1.0)
+        f = jax.jit(lambda c, xi, yi: learner.step(c, xi, yi)[0])
+        carry = f(carry, x, y)                   # warm up + steady state
+        jax.block_until_ready(carry["loss"])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            carry = f(carry, x, y)
+        jax.block_until_ready(carry["loss"])
+        ms = (time.perf_counter() - t0) / reps * 1e3
+        state_keys = [k for k in ("M", "vals", "idx", "a") if k in carry]
+        state_bytes = carry_nbytes({k: carry[k] for k in state_keys})
+        recs.append({"variant": name, "n": n, "n_in": n_in, "batch": batch,
+                     "omega": omega, "beta_target": beta,
+                     "per_step_ms": round(ms, 3),
+                     "influence_state_bytes": state_bytes})
+        rows.append((f"online/step/n{n}_b{batch}_w{omega}/{name}",
+                     f"{ms:.2f}ms", f"state={state_bytes}B"))
+    return recs
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -336,6 +389,9 @@ if __name__ == "__main__":
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny dual-compact sweep only (CI fast lane)")
+    ap.add_argument("--online-only", action="store_true",
+                    help="run only online_step_bench and merge its record "
+                         "into the (existing) output JSON")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: repo-root BENCH_kernels.json"
                          ", or BENCH_kernels.ci.json with --smoke so the "
@@ -346,13 +402,24 @@ if __name__ == "__main__":
                        ("BENCH_kernels.ci.json" if args.smoke
                         else "BENCH_kernels.json"))
     rows: list = []
-    if args.smoke:
+    if args.online_only:
+        online = online_step_bench(rows, n=96, beta=args.beta, omega=0.9,
+                                   reps=max(args.reps, 10))
+        out = {}
+        if Path(args.out).exists():
+            out = json.loads(Path(args.out).read_text())
+        out["online_step"] = online
+    elif args.smoke:
         sweep = [dual_compact_step_bench(rows, n=96, beta=args.beta,
                                          omega=0.9, batch=b, reps=2)
                  for b in (1, 4)]
+        online = online_step_bench(rows, n=96, beta=args.beta, omega=0.9,
+                                   reps=5)
         out = {"compact_sweep": sweep,
+               "online_step": online,
                "note": "CI smoke: dual (row x column) compact vs row-only "
-                       "compact, tiny n; CPU wall clock, f32"}
+                       "compact + online per-step latency, tiny n; CPU "
+                       "wall clock, f32"}
     else:
         recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
                 for n in args.n]
@@ -364,9 +431,12 @@ if __name__ == "__main__":
                                          omega=om, batch=b, reps=args.reps)
                  for n in args.sweep_n for om in args.sweep_omega
                  for b in args.sweep_batch]
+        online = online_step_bench(rows, n=args.sweep_n[0], beta=args.beta,
+                                   omega=0.9, reps=max(args.reps, 10))
         out = {"egru_step": recs,
                "stacked_egru_step": stacked_recs,
                "compact_sweep": sweep,
+               "online_step": online,
                "note": "dense = masked-dense per-gate reference (stacked: "
                        "structural-width flat blocks); compact = "
                        "flat-influence row-compact engine (sparse_rtrl "

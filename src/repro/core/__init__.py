@@ -7,6 +7,10 @@ and parameter sparsity (Subramoney, 2023).
   snap         — SnAp-1/2 approximations (Menick et al. 2020 baselines)
   bptt         — BPTT baseline
   diag_rtrl    — exact O(p) RTRL for diagonal recurrences (RG-LRU / RWKV)
+  learner      — the streaming Learner protocol + make_learner registry:
+                 one init/step/grads API over every engine above (the
+                 whole-sequence *_loss_and_grads functions are thin scans
+                 over it; repro.runtime.online trains on it)
   costs        — Table-1 cost model + compute-adjusted iterations
 """
 from repro.core.cells import EGRUConfig

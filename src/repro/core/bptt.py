@@ -1,7 +1,12 @@
 """BPTT baseline (paper Table 1 row 1): same cells, same surrogate gradient.
 
 Memory grows O(T n) (stored states) and updates only happen after the full
-sequence — the two limitations motivating RTRL (paper Sec. 1).
+sequence — the two limitations motivating RTRL (paper Sec. 1).  Behind the
+streaming Learner API this baseline is `repro.core.learner.BPTTLearner`
+(`LearnerSpec(engine="bptt")`): a sequence adapter that buffers the window
+in its carry and reverse-differentiates it at `grads()` — with mid-stream
+updates it degrades to truncated BPTT, which is exactly the contrast the
+RTRL learners exist to beat.
 """
 from __future__ import annotations
 

@@ -94,38 +94,14 @@ def trace_update(cfg: DiagCellConfig, params, tr, h_prev, x_t):
 
 
 def rtrl_loss_and_grads(cfg: DiagCellConfig, params, xs, labels):
-    """Exact online RTRL for the diagonal cell: loss = mean_t CE(h_t W_out)."""
-    T, B, _ = xs.shape
+    """Exact online RTRL for the diagonal cell: loss = mean_t CE(h_t W_out).
 
-    def body(carry, x_t):
-        h, tr, gacc, gout, loss = carry
-        h_new, tr_new = trace_update(cfg, params, tr, h, x_t)
-
-        def inst_loss(po, hi):
-            logits = hi @ po["W"] + po["b"]
-            lab = jnp.maximum(labels, 0)
-            ls = jax.nn.log_softmax(logits, -1)
-            return -jnp.mean(jnp.take_along_axis(ls, lab[:, None], 1)) / T
-
-        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
-            params["out"], h_new)
-        gacc = {
-            "Wx": gacc["Wx"] + jnp.einsum("bk,bjk->jk", cbar, tr_new["Wx"]),
-            "Wa": gacc["Wa"] + jnp.einsum("bk,bjk->jk", cbar, tr_new["Wa"]),
-            "lam": gacc["lam"] + jnp.einsum("bk,bk->k", cbar, tr_new["lam"]),
-        }
-        gout = jax.tree.map(jnp.add, gout, gout_t)
-        return (h_new, tr_new, gacc, gout, loss + lt), None
-
-    h0 = jnp.zeros((B, cfg.n))
-    g0 = {"Wx": jnp.zeros_like(params["Wx"]),
-          "Wa": jnp.zeros_like(params["Wa"]),
-          "lam": jnp.zeros_like(params["lam"])}
-    gout0 = jax.tree.map(jnp.zeros_like, params["out"])
-    (h, tr, g, gout, loss), _ = jax.lax.scan(
-        body, (h0, init_traces(cfg, B), g0, gout0, jnp.float32(0)), xs)
-    grads = dict(g)
-    grads["out"] = gout
+    Thin whole-sequence scan over the streaming Learner API
+    (`repro.core.learner.DiagLearner`) — the hand-rolled scan loop this
+    module used to carry lives there now, as the shared per-step `step`."""
+    from repro.core.learner import LearnerSpec, make_learner, scan_learner
+    learner = make_learner(LearnerSpec(engine="diag", cfg=cfg))
+    loss, grads, _ = scan_learner(learner, params, None, xs, labels)
     return loss, grads
 
 

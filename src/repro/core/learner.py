@@ -1,0 +1,851 @@
+"""Streaming-first Learner API: one protocol over every gradient engine.
+
+The paper's central claim is that combined activity and parameter sparsity
+makes *online* RTRL practical — memory independent of sequence length,
+gradients available at every step.  This module is the seam that makes that
+expressible: every gradient engine in the repo (exact sparse RTRL in all its
+backends, the stacked block engine, the scaled/sharded carry, the diagonal
+eligibility traces, the SnAp approximations, and a BPTT sequence-adapter
+oracle) is reachable through ONE protocol:
+
+    learner = make_learner(LearnerSpec(engine=..., cfg=..., backend=...))
+    carry   = learner.init(params, masks, (x_0, y_0), t_total=T)
+    carry, out = learner.step(carry, x_t, y_t)    # any number of times
+    grads   = learner.grads(carry)                # whenever a consumer wants
+    carry   = learner.reset_grads(carry, new_params)   # after an update
+
+Contract:
+
+  * ``carry`` is a pytree (a dict) holding EVERYTHING that evolves: the
+    current ``params``, the recurrent activity, the influence/trace state,
+    the gradient accumulators (``gw``/``gout``), the running ``loss`` and
+    the per-step loss scale ``t_total``.  It is O(1) in stream length for
+    every RTRL engine (the point of RTRL) and is directly checkpointable —
+    `repro.runtime.online.OnlineTrainer` saves/restores it mid-stream.
+  * ``step`` consumes one timestep (x_t, y_t) and returns the new carry
+    plus a :class:`StepOut` — instantaneous loss, readout logits, per-step
+    stats, and (with ``spec.per_step_grads``) this step's gradient
+    contribution alone.
+  * ``grads`` finalizes the accumulated gradient into the parameter-tree
+    structure (column-compact flat accumulators are scattered back here,
+    once — not per step).
+  * ``reset_grads`` zeroes the accumulators (and swaps in updated params)
+    WITHOUT touching the influence state: the standard mid-sequence-update
+    regime of online RTRL (Irie et al., 2023).  The BPTT adapter instead
+    restarts its window here — truncated BPTT, the baseline RTRL frees you
+    from.
+
+The legacy whole-sequence entry points (`sparse_rtrl_loss_and_grads`,
+`stacked_rtrl_loss_and_grads`, `scaled_rtrl.rtrl_grads`,
+`diag_rtrl.rtrl_loss_and_grads`, `snap.snap_loss_and_grads`) are thin
+`jax.lax.scan` wrappers over these learners (``scan_learner``) — the
+per-step ops are literally the same code, so the refactor is bit-for-bit
+(tested in tests/test_online.py by replaying the stream path against the
+whole-sequence path).
+
+Loss convention: per-step loss is ``xent(readout(a_t), y_t) / t_total``
+with ``t_total`` carried as a scalar.  Legacy wrappers pass ``t_total=T``
+(the historical mean-over-sequence loss); online consumers pass the update
+window k so each window's accumulated loss is a window mean.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells, sparse_rtrl as SP, stacked_rtrl as ST
+from repro.core.cells import EGRUConfig, StackedEGRUConfig
+
+Tree = Any
+
+
+class StepOut(NamedTuple):
+    """What one online step yields to the consumer."""
+    loss: jax.Array            # instantaneous loss L_t (1/t_total-scaled)
+    readout: jax.Array | None  # logits [B, n_out] at this step (None: n/a)
+    stats: dict                # per-step sparsity/overflow stats (engine-specific)
+    grads: Tree | None = None  # THIS step's gradient term (spec.per_step_grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnerSpec:
+    """Everything needed to construct a learner — the one spec the serving
+    and scale layers configure engines through.
+
+    engine     'sparse' | 'stacked' | 'scaled' | 'diag' | 'snap' | 'bptt'
+    cfg        the engine's config object:
+                 sparse/snap/bptt  EGRUConfig
+                 stacked           StackedEGRUConfig (or EGRUConfig + layers)
+                 scaled            scaled_rtrl.ScaledRTRLConfig
+                 diag              diag_rtrl.DiagCellConfig
+    backend    sparse/stacked influence execution: dense | pallas | compact
+    col_compact carry the influence parameter axis column-compact
+               (None = auto: masks given and backend != dense)
+    layers     stacked depth when cfg is a plain EGRUConfig
+    capacity   compact-backend static row-capacity fraction
+    interpret  force Pallas interpret mode (None = auto)
+    order      SnAp order (1 or 2)
+    horizon    bptt adapter window length (None = round(t_total) at init)
+    per_step_grads  also emit each step's own gradient term in StepOut
+    delegate_single_layer  stacked L=1 runs the single-layer engine
+               (bit-for-bit the historical delegation)
+    """
+    engine: str = "sparse"
+    cfg: Any = None
+    backend: str = "dense"
+    col_compact: bool | None = None
+    layers: int = 1
+    capacity: float = 1.0
+    interpret: bool | None = None
+    order: int = 1
+    horizon: int | None = None
+    per_step_grads: bool = False
+    delegate_single_layer: bool = True
+
+
+class Learner(Protocol):
+    """Structural protocol every engine learner satisfies."""
+    spec: LearnerSpec
+
+    def init(self, params: Tree, masks: Tree | None, batch: tuple,
+             t_total: float = 1.0) -> Tree: ...
+
+    def step(self, carry: Tree, x_t: jax.Array,
+             y_t: jax.Array) -> tuple[Tree, StepOut]: ...
+
+    def grads(self, carry: Tree) -> Tree: ...
+
+    def reset_grads(self, carry: Tree, params: Tree | None = None) -> Tree: ...
+
+    def params_of(self, carry: Tree) -> Tree: ...
+
+
+class _LearnerBase:
+    """Shared carry conventions: dict carry with 'params', 'loss', 't_total'
+    and gradient accumulators 'gw'/'gout'."""
+    spec: LearnerSpec
+
+    def reset_grads(self, carry: Tree, params: Tree | None = None) -> Tree:
+        carry = dict(carry)
+        if params is not None:
+            carry["params"] = params
+        for k in ("gw", "gout"):
+            if k in carry:
+                carry[k] = jax.tree.map(jnp.zeros_like, carry[k])
+        carry["loss"] = jnp.zeros_like(carry["loss"])
+        return carry
+
+    def params_of(self, carry: Tree) -> Tree:
+        """The current parameters in the structure the OPTIMIZER sees (the
+        structure `grads` returns) — learners whose carry holds an internal
+        view override this."""
+        return carry["params"]
+
+    def _freeze_static(self, **kv):
+        """Bind init-derived static structure (masks, layouts, horizon) to
+        this learner instance ONCE.  A carry only makes sense against the
+        structure it was built with, so re-initializing the same instance
+        with different masks/settings would silently mis-map earlier carries
+        — make a new learner via make_learner(spec) instead."""
+        prev = getattr(self, "_frozen", None)
+        if prev is None:
+            self._frozen = kv
+            return
+        for k, v in kv.items():
+            old = prev[k]
+            same = old is v or (
+                isinstance(v, (int, float, bool, type(None))) and old == v)
+            if not same:
+                raise ValueError(
+                    f"learner already initialized with a different {k!r}; "
+                    "carries are bound to the init-time structure — create "
+                    "a fresh learner via make_learner(spec) instead")
+
+    @staticmethod
+    def _base_carry(params: Tree, t_total: float) -> dict:
+        return {"params": params, "loss": jnp.float32(0),
+                "t_total": jnp.float32(t_total)}
+
+    @staticmethod
+    def _inst_loss(po, ai, y_t, tt):
+        return cells.xent(cells.readout({"out": po}, ai), y_t) / tt
+
+
+# ---------------------------------------------------------------------------
+# Exact single-layer sparse RTRL (dense / pallas / compact x col-compact)
+# ---------------------------------------------------------------------------
+
+class SparseLearner(_LearnerBase):
+    """`repro.core.sparse_rtrl` as a streaming learner — all three backends,
+    optionally dual (row x column) compact.  Exact."""
+
+    def __init__(self, spec: LearnerSpec):
+        if spec.backend not in SP.BACKENDS:
+            raise ValueError(
+                f"backend must be one of {SP.BACKENDS}, got {spec.backend!r}")
+        self.spec = spec
+        self.cfg: EGRUConfig = spec.cfg
+        self.backend = spec.backend
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        cfg = self.cfg
+        x0, _ = batch
+        B = x0.shape[0]
+        col_compact = self.spec.col_compact
+        if col_compact is None:
+            col_compact = masks is not None and self.backend != "dense"
+        self._freeze_static(masks=masks, col_compact=col_compact)
+        self.masks = masks
+        carry = self._base_carry(params, t_total)
+        carry["a"] = cells.init_state(cfg, B)
+        carry["gout"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                     params["out"])
+        carry["beta_prev"] = jnp.float32(1.0)
+        self._cl = None
+        if self.backend == "dense":
+            carry["M"] = SP.init_influence(cfg, B)
+            carry["gw"] = jax.tree.map(
+                lambda x: jnp.zeros_like(x, jnp.float32),
+                cells.rec_param_tree(params))
+            return carry
+        layout = SP.flat_layout(cfg)
+        self.layout = layout
+        self._colm = SP.flat_col_mask(layout, masks)
+        if col_compact:
+            self._cl = SP.col_layout(layout, masks)
+        P_carry = self._cl.Pc_pad if self._cl is not None else layout.P_pad
+        carry["gw"] = jnp.zeros((P_carry,), jnp.float32)
+        if self.backend == "pallas":
+            self._jm = SP.flat_jmask(cfg, masks)
+            carry["M"] = jnp.zeros((B, layout.n, P_carry), jnp.float32)
+        else:
+            K = SP.capacity_K(cfg.n_hidden, self.spec.capacity)
+            carry["vals"] = jnp.zeros((B, K, P_carry), jnp.float32)
+            carry["idx"] = jnp.full((B, K), -1, jnp.int32)
+        return carry
+
+    def step(self, carry, x_t, y_t):
+        cfg, params = self.cfg, carry["params"]
+        w = cells.rec_param_tree(params)
+        tt = carry["t_total"]
+        new = dict(carry)
+        extra_stats = {}
+        if self.backend == "dense":
+            a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
+            M_new = SP.influence_update(cfg, carry["M"], hp, Jhat, mbar,
+                                        self.masks)
+            lt, (gout_t, cbar) = jax.value_and_grad(
+                self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
+            gw_t = SP.influence_grads(cfg, M_new, cbar)
+            new["gw"] = jax.tree.map(jnp.add, carry["gw"], gw_t)
+            new["M"] = M_new
+            row_density = SP._row_density(M_new)
+        elif self.backend == "pallas":
+            from repro.kernels import ops as kops
+            a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
+            if self._cl is not None:
+                Mbar = SP.flat_mbar_cols(cfg, self.layout, self._cl, mbar)
+                kcolm = self._cl.live
+            else:
+                Mbar = SP.flat_mbar(cfg, self.layout, mbar, self._colm)
+                kcolm = self._colm
+            M_new = kops.influence_update(hp, Jhat, carry["M"], Mbar,
+                                          jmask=self._jm, col_mask=kcolm,
+                                          interpret=self.spec.interpret)
+            lt, (gout_t, cbar) = jax.value_and_grad(
+                self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
+            gw_t = jnp.einsum("bk,bkp->p", cbar, M_new)
+            new["gw"] = carry["gw"] + gw_t
+            new["M"] = M_new
+            row_density = jnp.mean(jnp.any(M_new != 0.0, axis=2))
+        else:                                   # compact
+            from repro.kernels import compact as CK
+            a_new, hp, vals_new, idx_new, count, overflow = \
+                SP.flat_compact_step(cfg, w, self.layout, carry["a"],
+                                     carry["vals"], carry["idx"], x_t,
+                                     self._colm, cl=self._cl)
+            lt, (gout_t, cbar) = jax.value_and_grad(
+                self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
+            gw_t = CK.compact_grads(vals_new, idx_new, cbar)
+            new["gw"] = carry["gw"] + gw_t
+            new["vals"], new["idx"] = vals_new, idx_new
+            row_density = (jnp.sum(idx_new >= 0, axis=1).mean()
+                           / cfg.n_hidden)
+            extra_stats["overflow"] = jnp.max(overflow)
+        new["a"] = a_new
+        new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
+        new["loss"] = carry["loss"] + lt
+        stats = {"alpha": jnp.mean(a_new == 0.0), "beta": jnp.mean(hp == 0.0),
+                 "beta_prev": carry["beta_prev"],
+                 "m_row_density": row_density, **extra_stats}
+        new["beta_prev"] = stats["beta"]
+        step_grads = None
+        if self.spec.per_step_grads:
+            step_grads = self._finish_gw(gw_t)
+            step_grads["out"] = gout_t
+        out = StepOut(lt, cells.readout(params, a_new), stats, step_grads)
+        return new, out
+
+    def _finish_gw(self, gw):
+        if self.backend == "dense":
+            return dict(gw)
+        if self._cl is not None:
+            gw = SP.cols_to_flat(self._cl, gw)
+        return SP.unflatten_flat_grads(self.cfg, self.layout, gw)
+
+    def grads(self, carry):
+        grads = self._finish_gw(carry["gw"])
+        grads["out"] = carry["gout"]
+        return grads
+
+
+# ---------------------------------------------------------------------------
+# Exact stacked (multi-layer) RTRL
+# ---------------------------------------------------------------------------
+
+class _SingleLayerStackedLearner(_LearnerBase):
+    """Stacked L=1 delegation: the single-layer engine, with params/grads
+    re-wrapped into the stacked {'layers': [...], 'out': ...} structure —
+    bit-for-bit the historical `delegate_single_layer` path."""
+
+    def __init__(self, spec: LearnerSpec, scfg: StackedEGRUConfig):
+        self.spec = spec
+        self.cfg = scfg
+        self.inner = SparseLearner(
+            dataclasses.replace(spec, engine="sparse", cfg=scfg.layer_cfg(0)))
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        sparams = dict(params["layers"][0])
+        sparams["out"] = params["out"]
+        smasks = None
+        if masks is not None:
+            smasks = dict(masks[0])
+            smasks["out"] = None
+        return self.inner.init(sparams, smasks, batch, t_total)
+
+    def step(self, carry, x_t, y_t):
+        carry, out = self.inner.step(carry, x_t, y_t)
+        stats = dict(out.stats)
+        stats["alpha_layers"] = stats["alpha"][None]
+        stats["beta_layers"] = stats["beta"][None]
+        grads = out.grads
+        if grads is not None:
+            grads = self._rewrap(grads)
+        return carry, StepOut(out.loss, out.readout, stats, grads)
+
+    @staticmethod
+    def _rewrap(g):
+        return {"layers": [{k: v for k, v in g.items() if k != "out"}],
+                "out": g["out"]}
+
+    def grads(self, carry):
+        return self._rewrap(self.inner.grads(carry))
+
+    def params_of(self, carry):
+        return self._rewrap(carry["params"])
+
+    def reset_grads(self, carry, params=None):
+        if params is not None:                  # stacked -> single-layer view
+            sparams = dict(params["layers"][0])
+            sparams["out"] = params["out"]
+            params = sparams
+        return self.inner.reset_grads(carry, params)
+
+
+class StackedLearner(_LearnerBase):
+    """`repro.core.stacked_rtrl` as a streaming learner: the block
+    lower-triangular influence carried per layer, every backend.  Exact."""
+
+    def __new__(cls, spec: LearnerSpec):
+        scfg = cls._stacked_cfg(spec)
+        if scfg.n_layers == 1 and spec.delegate_single_layer:
+            return _SingleLayerStackedLearner(spec, scfg)
+        self = super().__new__(cls)
+        return self
+
+    @staticmethod
+    def _stacked_cfg(spec: LearnerSpec) -> StackedEGRUConfig:
+        if isinstance(spec.cfg, StackedEGRUConfig):
+            return spec.cfg
+        return cells.stacked_config(spec.cfg, spec.layers)
+
+    def __init__(self, spec: LearnerSpec):
+        if spec.backend not in SP.BACKENDS:
+            raise ValueError(
+                f"backend must be one of {SP.BACKENDS}, got {spec.backend!r}")
+        self.spec = spec
+        self.cfg = self._stacked_cfg(spec)
+        self.backend = spec.backend
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        cfg = self.cfg
+        x0, _ = batch
+        B = x0.shape[0]
+        L = cfg.n_layers
+        col_compact = self.spec.col_compact
+        if col_compact is None:
+            col_compact = masks is not None and self.backend != "dense"
+        self._freeze_static(masks=masks, col_compact=col_compact)
+        slayout = ST.stacked_layout(cfg)
+        self.slayout = slayout
+        self.lcfgs = [cfg.layer_cfg(l) for l in range(L)]
+        colm = ST.stacked_col_mask(slayout, masks)
+        self.colms = ST.layer_col_masks(slayout, colm)
+        self._cl = ST.stacked_col_layout(slayout, masks) if col_compact \
+            else None
+        self._klives = None if self._cl is None \
+            else ST.layer_col_lives(slayout, self._cl)
+        if self.backend == "pallas":
+            self._jms = tuple(
+                SP.flat_jmask(self.lcfgs[l],
+                              None if masks is None else masks[l])
+                for l in range(L))
+        P_carry = self._cl.Pc_pad if self._cl is not None else slayout.P_pad
+        carry = self._base_carry(params, t_total)
+        carry["a"] = cells.init_stacked_state(cfg, B)
+        carry["gw"] = jnp.zeros((P_carry,), jnp.float32)
+        carry["gout"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                     params["out"])
+        carry["beta_prev"] = jnp.ones((L,))
+        if self.backend in ("dense", "pallas"):
+            carry["M"] = tuple(jnp.zeros((B, n, P_carry), jnp.float32)
+                               for n in cfg.layer_sizes)
+        else:
+            Ks = tuple(SP.capacity_K(n, self.spec.capacity)
+                       for n in cfg.layer_sizes)
+            carry["vals"] = tuple(jnp.zeros((B, K, P_carry), jnp.float32)
+                                  for K in Ks)
+            carry["idx"] = tuple(jnp.full((B, K), -1, jnp.int32) for K in Ks)
+        return carry
+
+    def _layer_partials(self, l, ws, a_prev, inp):
+        if l == 0:
+            a_new, hp, Jhat, mbar = SP.cell_partials(
+                self.lcfgs[l], ws[l], a_prev, inp)
+            return a_new, hp, Jhat, None, mbar
+        return SP.cell_partials_full(self.lcfgs[l], ws[l], a_prev, inp)
+
+    def step(self, carry, x_t, y_t):
+        cfg, params = self.cfg, carry["params"]
+        ws = params["layers"]
+        tt = carry["t_total"]
+        L = cfg.n_layers
+        slayout = self.slayout
+        new = dict(carry)
+        extra_stats = {}
+        if self.backend in ("dense", "pallas"):
+            inp = x_t
+            a_news, hps, M_news = [], [], []
+            for l in range(L):
+                lay = slayout.layers[l]
+                a_new, hp, Jhat, Bhat, mbar = self._layer_partials(
+                    l, ws, carry["a"][l], inp)
+                if self._cl is not None:
+                    Mb = SP.flat_mbar_cols(self.lcfgs[l], lay, self._cl, mbar,
+                                           layer=l)
+                else:
+                    Mb = SP.flat_mbar(self.lcfgs[l], lay, mbar, self.colms[l],
+                                      offset=slayout.offsets[l],
+                                      total_pad=slayout.P_pad)
+                if l > 0:
+                    Mb = Mb + jnp.einsum("bkj,bjp->bkp", Bhat, M_news[l - 1])
+                if self.backend == "pallas":
+                    from repro.kernels import ops as kops
+                    M_new = kops.influence_update(
+                        hp, Jhat, carry["M"][l], Mb, jmask=self._jms[l],
+                        col_mask=self.colms[l] if self._cl is None
+                        else self._klives[l],
+                        interpret=self.spec.interpret)
+                else:
+                    M_new = hp[:, :, None] * (
+                        jnp.einsum("bkl,blp->bkp", Jhat, carry["M"][l]) + Mb)
+                a_news.append(a_new)
+                hps.append(hp)
+                M_news.append(M_new)
+                inp = a_new
+            lt, (gout_t, cbar) = jax.value_and_grad(
+                self._inst_loss, argnums=(0, 1))(params["out"], a_news[-1],
+                                                 y_t, tt)
+            gw_t = jnp.einsum("bk,bkp->p", cbar, M_news[-1])
+            new["M"] = tuple(M_news)
+            row_density = jnp.stack([jnp.mean(jnp.any(M != 0.0, axis=2))
+                                     for M in M_news]).mean()
+        else:                                   # compact
+            from repro.kernels.compact import compact_grads
+            a_news, hps, vals_new, idx_new, ovs = ST.stacked_compact_step(
+                cfg, ws, slayout, carry["a"], carry["vals"], carry["idx"],
+                x_t, self.colms, cl=self._cl)
+            lt, (gout_t, cbar) = jax.value_and_grad(
+                self._inst_loss, argnums=(0, 1))(params["out"], a_news[-1],
+                                                 y_t, tt)
+            gw_t = compact_grads(vals_new[-1], idx_new[-1], cbar)
+            new["vals"], new["idx"] = vals_new, idx_new
+            row_density = jnp.stack([
+                jnp.sum(i >= 0, axis=1).mean() / n
+                for i, n in zip(idx_new, cfg.layer_sizes)]).mean()
+            extra_stats["overflow"] = jnp.max(ovs)
+        new["a"] = tuple(a_news)
+        new["gw"] = carry["gw"] + gw_t
+        new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
+        new["loss"] = carry["loss"] + lt
+        alpha_l = jnp.stack([jnp.mean(a == 0.0) for a in a_news])
+        beta_l = jnp.stack([jnp.mean(h == 0.0) for h in hps])
+        stats = {"alpha": alpha_l.mean(), "beta": beta_l.mean(),
+                 "alpha_layers": alpha_l, "beta_layers": beta_l,
+                 "beta_prev": carry["beta_prev"],
+                 "m_row_density": row_density, **extra_stats}
+        new["beta_prev"] = beta_l
+        step_grads = None
+        if self.spec.per_step_grads:
+            step_grads = self._finish_gw(gw_t)
+            step_grads["out"] = gout_t
+        out = StepOut(lt, cells.readout(params, a_news[-1]), stats,
+                      step_grads)
+        return new, out
+
+    def _finish_gw(self, gw):
+        if self._cl is not None:
+            gw = SP.cols_to_flat(self._cl, gw)
+        return ST.unflatten_stacked_grads(self.cfg, self.slayout, gw)
+
+    def grads(self, carry):
+        grads = self._finish_gw(carry["gw"])
+        grads["out"] = carry["gout"]
+        return grads
+
+
+# ---------------------------------------------------------------------------
+# Scaled / sharded compact RTRL
+# ---------------------------------------------------------------------------
+
+class ScaledLearner(_LearnerBase):
+    """`repro.core.scaled_rtrl` as a streaming learner: the row-compact
+    (optionally dual-compact) carry at LM scale, single layer or stacked.
+    Exact up to row-capacity overflow (reported per step)."""
+
+    def __init__(self, spec: LearnerSpec):
+        self.spec = spec
+        self.cfg = spec.cfg                 # ScaledRTRLConfig
+        self.stacked = self.cfg.n_layers > 1
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        from repro.core import scaled_rtrl as SC
+        cfg = self.cfg
+        col_compact = self.spec.col_compact
+        if col_compact is None:
+            col_compact = masks is not None
+        self._freeze_static(masks=masks, col_compact=col_compact)
+        self._cl = cfg.col_layout(masks) if col_compact else None
+        if self._cl is not None:
+            P_carry = self._cl.Pc_pad
+        else:
+            P_carry = (cfg.slayout().P_pad if self.stacked
+                       else cfg.layout().P_pad)
+        carry = self._base_carry(params, t_total)
+        carry["state"] = SC.init_state(cfg, self._cl)
+        carry["gw"] = jnp.zeros((P_carry,), jnp.float32)
+        carry["gout"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                     params["out"])
+        return carry
+
+    def step(self, carry, x_t, y_t):
+        from repro.core import scaled_rtrl as SC
+        from repro.kernels.compact import compact_grads
+        cfg, params = self.cfg, carry["params"]
+        w = params["layers"] if self.stacked else cells.rec_param_tree(params)
+        tt = carry["t_total"]
+        state, overflow = SC.compact_step(cfg, w, carry["state"], x_t,
+                                          cl=self._cl)
+        a_top = state["a"][-1] if self.stacked else state["a"]
+        lt, (gout_t, cbar) = jax.value_and_grad(
+            self._inst_loss, argnums=(0, 1))(params["out"], a_top, y_t, tt)
+        if self.stacked:
+            gw_t = compact_grads(state["vals"][-1], state["idx"][-1], cbar)
+        else:
+            gw_t = compact_grads(state["vals"], state["idx"], cbar)
+        new = dict(carry)
+        new["state"] = state
+        new["gw"] = carry["gw"] + gw_t
+        new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
+        new["loss"] = carry["loss"] + lt
+        stats = {"overflow": overflow if self.stacked
+                 else jnp.max(overflow)}
+        step_grads = None
+        if self.spec.per_step_grads:
+            step_grads = self._finish_gw(gw_t)
+            step_grads["out"] = gout_t
+        return new, StepOut(lt, cells.readout(params, a_top), stats,
+                            step_grads)
+
+    def _finish_gw(self, gw):
+        cfg = self.cfg
+        if self._cl is not None:
+            gw = SP.cols_to_flat(self._cl, gw)
+        if self.stacked:
+            return ST.unflatten_stacked_grads(cfg.stacked_cfg(),
+                                              cfg.slayout(), gw)
+        return SP.unflatten_flat_grads(cfg.cell_cfg(), cfg.layout(), gw)
+
+    def grads(self, carry):
+        grads = self._finish_gw(carry["gw"])
+        grads["out"] = carry["gout"]
+        return grads
+
+
+# ---------------------------------------------------------------------------
+# Diagonal-recurrence eligibility traces (exact, O(p) per step)
+# ---------------------------------------------------------------------------
+
+class DiagLearner(_LearnerBase):
+    """`repro.core.diag_rtrl` as a streaming learner: per-parameter
+    eligibility traces for diagonal recurrences (RG-LRU / RWKV family).
+    Exact for its cell — the regime where RTRL is tractable at LM scale."""
+
+    def __init__(self, spec: LearnerSpec):
+        self.spec = spec
+        self.cfg = spec.cfg                 # DiagCellConfig
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        from repro.core import diag_rtrl as D
+        cfg = self.cfg
+        x0, _ = batch
+        B = x0.shape[0]
+        carry = self._base_carry(params, t_total)
+        carry["h"] = jnp.zeros((B, cfg.n))
+        carry["tr"] = D.init_traces(cfg, B)
+        carry["gw"] = {"Wx": jnp.zeros_like(params["Wx"]),
+                       "Wa": jnp.zeros_like(params["Wa"]),
+                       "lam": jnp.zeros_like(params["lam"])}
+        carry["gout"] = jax.tree.map(jnp.zeros_like, params["out"])
+        return carry
+
+    def step(self, carry, x_t, y_t):
+        from repro.core import diag_rtrl as D
+        cfg, params = self.cfg, carry["params"]
+        tt = carry["t_total"]
+        h_new, tr_new = D.trace_update(cfg, params, carry["tr"], carry["h"],
+                                       x_t)
+
+        def inst_loss(po, hi):
+            logits = hi @ po["W"] + po["b"]
+            lab = jnp.maximum(y_t, 0)
+            ls = jax.nn.log_softmax(logits, -1)
+            return -jnp.mean(jnp.take_along_axis(ls, lab[:, None], 1)) / tt
+
+        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
+            params["out"], h_new)
+        gw_t = {"Wx": jnp.einsum("bk,bjk->jk", cbar, tr_new["Wx"]),
+                "Wa": jnp.einsum("bk,bjk->jk", cbar, tr_new["Wa"]),
+                "lam": jnp.einsum("bk,bk->k", cbar, tr_new["lam"])}
+        new = dict(carry)
+        new["h"], new["tr"] = h_new, tr_new
+        new["gw"] = jax.tree.map(jnp.add, carry["gw"], gw_t)
+        new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
+        new["loss"] = carry["loss"] + lt
+        step_grads = None
+        if self.spec.per_step_grads:
+            step_grads = dict(gw_t)
+            step_grads["out"] = gout_t
+        logits = h_new @ params["out"]["W"] + params["out"]["b"]
+        return new, StepOut(lt, logits, {}, step_grads)
+
+    def grads(self, carry):
+        grads = dict(carry["gw"])
+        grads["out"] = carry["gout"]
+        return grads
+
+
+# ---------------------------------------------------------------------------
+# SnAp-1 / SnAp-2 approximations
+# ---------------------------------------------------------------------------
+
+class SnapLearner(_LearnerBase):
+    """`repro.core.snap` as a streaming learner: the influence pruned to the
+    SnAp-n pattern each step (an APPROXIMATION — the Table-1 baseline the
+    exact engines are measured against)."""
+
+    def __init__(self, spec: LearnerSpec):
+        self.spec = spec
+        self.cfg: EGRUConfig = spec.cfg
+        self.order = spec.order
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        from repro.core import snap as SN
+        cfg = self.cfg
+        x0, _ = batch
+        B = x0.shape[0]
+        self._freeze_static(masks=masks)
+        self.masks = masks
+        if self.order == 1:
+            self.keep = jnp.eye(cfg.n_hidden)
+        else:
+            self.keep = SN.snap2_pattern(cfg, masks)
+        carry = self._base_carry(params, t_total)
+        carry["a"] = cells.init_state(cfg, B)
+        carry["M"] = SP.init_influence(cfg, B)
+        carry["gw"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                   cells.rec_param_tree(params))
+        carry["gout"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                     params["out"])
+        return carry
+
+    def _prune(self, M):
+        keep = self.keep
+        return {g: Mg * (keep[None, :, :, None] if Mg.ndim == 4
+                         else keep[None]) for g, Mg in M.items()}
+
+    def step(self, carry, x_t, y_t):
+        cfg, params = self.cfg, carry["params"]
+        w = cells.rec_param_tree(params)
+        tt = carry["t_total"]
+        a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
+        M_new = self._prune(SP.influence_update(cfg, carry["M"], hp, Jhat,
+                                                mbar, self.masks))
+        lt, (gout_t, cbar) = jax.value_and_grad(
+            self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
+        gw_t = SP.influence_grads(cfg, M_new, cbar)
+        new = dict(carry)
+        new["a"], new["M"] = a_new, M_new
+        new["gw"] = jax.tree.map(jnp.add, carry["gw"], gw_t)
+        new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
+        new["loss"] = carry["loss"] + lt
+        stats = {"beta": jnp.mean(hp == 0.0)}
+        step_grads = None
+        if self.spec.per_step_grads:
+            step_grads = dict(gw_t)
+            step_grads["out"] = gout_t
+        return new, StepOut(lt, cells.readout(params, a_new), stats,
+                            step_grads)
+
+    def grads(self, carry):
+        grads = dict(carry["gw"])
+        grads["out"] = carry["gout"]
+        return grads
+
+
+# ---------------------------------------------------------------------------
+# BPTT sequence-adapter oracle
+# ---------------------------------------------------------------------------
+
+class BPTTLearner(_LearnerBase):
+    """BPTT behind the streaming protocol — the oracle that shows what RTRL
+    buys.  Buffers the last `horizon` inputs ([H, B, n_in] + labels) in the
+    carry; `grads` re-runs the window forward and reverse-differentiates it
+    (memory O(H), NOT O(1) — the limitation the paper removes).
+
+    `reset_grads` restarts the window at the current activity (truncated
+    BPTT): with an update every k <= horizon steps this is exactly TBPTT-k.
+    Steps beyond the horizon overwrite the last slot and set the
+    'bptt_overflow' stat — size the horizon to the update window."""
+
+    def __init__(self, spec: LearnerSpec):
+        self.spec = spec
+        self.cfg: EGRUConfig = spec.cfg
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        cfg = self.cfg
+        x0, y0 = batch
+        B = x0.shape[0]
+        H = self.spec.horizon
+        if H is None:
+            H = max(1, int(round(float(t_total))))
+        self._freeze_static(horizon=H)
+        self.horizon = H
+        carry = self._base_carry(params, t_total)
+        carry["a"] = cells.init_state(cfg, B)
+        carry["a0"] = cells.init_state(cfg, B)
+        carry["xbuf"] = jnp.zeros((H,) + x0.shape, jnp.float32)
+        carry["ybuf"] = jnp.zeros((H,) + y0.shape, jnp.int32)
+        carry["pos"] = jnp.int32(0)
+        return carry
+
+    def step(self, carry, x_t, y_t):
+        cfg, params = self.cfg, carry["params"]
+        w = cells.rec_param_tree(params)
+        tt = carry["t_total"]
+        a_new = cells.step_straight_through(cfg, w, carry["a"], x_t)
+        lt = cells.xent(cells.readout(params, a_new), y_t) / tt
+        slot = jnp.minimum(carry["pos"], self.horizon - 1)
+        new = dict(carry)
+        new["a"] = a_new
+        new["xbuf"] = jax.lax.dynamic_update_index_in_dim(
+            carry["xbuf"], x_t.astype(jnp.float32), slot, 0)
+        new["ybuf"] = jax.lax.dynamic_update_index_in_dim(
+            carry["ybuf"], y_t.astype(jnp.int32), slot, 0)
+        new["pos"] = carry["pos"] + 1
+        new["loss"] = carry["loss"] + lt
+        stats = {"alpha": jnp.mean(a_new == 0.0),
+                 "bptt_overflow": (carry["pos"] >= self.horizon)
+                 .astype(jnp.int32)}
+        return new, StepOut(lt, cells.readout(params, a_new), stats, None)
+
+    def grads(self, carry):
+        cfg = self.cfg
+        H = self.horizon
+        xbuf, ybuf = carry["xbuf"], carry["ybuf"]
+        a0, pos, tt = carry["a0"], carry["pos"], carry["t_total"]
+
+        def loss_fn(params):
+            w = cells.rec_param_tree(params)
+
+            def body(a, x_t):
+                a_new = cells.step_straight_through(cfg, w, a, x_t)
+                return a_new, cells.readout(params, a_new)
+
+            _, logits_t = jax.lax.scan(body, a0, xbuf)
+            losses = jax.vmap(cells.xent)(logits_t, ybuf)
+            wmask = (jnp.arange(H) < pos).astype(losses.dtype)
+            return jnp.sum(losses * wmask) / tt
+
+        return jax.grad(loss_fn)(carry["params"])
+
+    def reset_grads(self, carry, params=None):
+        carry = super().reset_grads(carry, params)
+        carry["a0"] = carry["a"]
+        carry["pos"] = jnp.zeros_like(carry["pos"])
+        return carry
+
+
+# ---------------------------------------------------------------------------
+# Registry + whole-sequence scan wrapper
+# ---------------------------------------------------------------------------
+
+ENGINES = {
+    "sparse": SparseLearner,
+    "stacked": StackedLearner,
+    "scaled": ScaledLearner,
+    "diag": DiagLearner,
+    "snap": SnapLearner,
+    "bptt": BPTTLearner,
+}
+
+
+def make_learner(spec: LearnerSpec) -> Learner:
+    """Construct the learner named by `spec.engine` — the single entry point
+    the legacy wrappers, the online trainer, and future serving/sharding
+    layers all configure engines through."""
+    if spec.engine not in ENGINES:
+        raise ValueError(
+            f"engine must be one of {tuple(ENGINES)}, got {spec.engine!r}")
+    if spec.cfg is None:
+        raise ValueError("LearnerSpec.cfg is required")
+    return ENGINES[spec.engine](spec)
+
+
+def scan_learner(learner: Learner, params: Tree, masks: Tree | None,
+                 xs: jax.Array, labels: jax.Array):
+    """Whole-sequence driver: scan the learner over xs [T, B, ...] with a
+    fixed label, normalizing the per-step loss by T.  This IS the legacy
+    `*_loss_and_grads` semantics — those functions are this wrapper."""
+    T = xs.shape[0]
+    carry0 = learner.init(params, masks, (xs[0], labels), t_total=T)
+
+    def body(carry, x_t):
+        carry, out = learner.step(carry, x_t, labels)
+        return carry, out.stats
+
+    carry, stats = jax.lax.scan(body, carry0, xs)
+    return carry["loss"], learner.grads(carry), stats

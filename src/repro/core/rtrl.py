@@ -137,7 +137,12 @@ def stacked_rtrl_loss_and_grads(cfg, params: dict, xs: jax.Array,
 def rtrl_online_train(cfg: EGRUConfig, params: dict, xs: jax.Array,
                       labels: jax.Array, opt, opt_state, step0):
     """Truly-online RTRL: a parameter update EVERY timestep (what BPTT cannot
-    do — the paper's motivation).  Memory O(B n p), no stored history."""
+    do — the paper's motivation).  Memory O(B n p), no stored history.
+
+    This is the O(n^2 p) jacrev demonstration; the production online path is
+    the streaming Learner API (`repro.core.learner` + `repro.runtime.online.
+    OnlineTrainer`), which does the same mid-stream updates on the sparse
+    engines at w~ b~^2 cost with a checkpointable carry."""
     T, B, _ = xs.shape
     n = cfg.n_hidden
 

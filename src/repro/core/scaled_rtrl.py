@@ -197,55 +197,15 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels, masks=None, *,
     block carry and the gradient reads the TOP layer's compact rows only.
     With `masks` (col_compact default None = auto-on) the carry is DUAL
     compact: [B, K, Pc_pad] with Pc ~= w~ P, the combined-sparsity memory
-    factor; the flat gradient scatters back once, after the scan."""
-    from repro.kernels.compact import compact_grads
-    if col_compact is None:
-        col_compact = masks is not None
-    cl = cfg.col_layout(masks) if col_compact else None
-    stacked = cfg.n_layers > 1
-    w = params["layers"] if stacked else cells.rec_param_tree(params)
-    T = xs.shape[0]
-    if cl is not None:
-        P_carry = cl.Pc_pad
-    else:
-        P_carry = cfg.slayout().P_pad if stacked else cfg.layout().P_pad
+    factor; the flat gradient scatters back once, after the scan.
 
-    def body(carry, x_t):
-        state, gw, gout, loss = carry
-        state, overflow = compact_step(cfg, w, state, x_t, cl=cl)
-
-        def inst_loss(po, ai):
-            return cells.xent(cells.readout({"out": po}, ai), labels) / T
-
-        a_top = state["a"][-1] if stacked else state["a"]
-        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
-            params["out"], a_top)
-        if stacked:
-            gw = gw + compact_grads(state["vals"][-1], state["idx"][-1],
-                                    cbar)
-        else:
-            gw = gw + compact_grads(state["vals"], state["idx"], cbar)
-        gout = jax.tree.map(jnp.add, gout, gout_t)
-        # [L] per-layer trace for a stack; [B] -> scalar for a single layer
-        return (state, gw, gout, loss + lt), (overflow if stacked
-                                              else jnp.max(overflow))
-
-    gw0 = jnp.zeros((P_carry,), jnp.float32)
-    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                         params["out"])
-    (state, gw, gout, loss), overflow = jax.lax.scan(
-        body, (init_state(cfg, cl), gw0, gout0, jnp.float32(0)), xs)
-    if cl is not None:
-        gw = sparse_rtrl.cols_to_flat(cl, gw)
-    if stacked:
-        from repro.core import stacked_rtrl as ST
-        grads = ST.unflatten_stacked_grads(cfg.stacked_cfg(), cfg.slayout(),
-                                           gw)
-    else:
-        grads = sparse_rtrl.unflatten_flat_grads(cfg.cell_cfg(),
-                                                 cfg.layout(), gw)
-    grads["out"] = gout
-    return loss, grads, {"overflow": overflow}
+    Thin whole-sequence scan over the streaming Learner API
+    (`repro.core.learner.ScaledLearner`) — the per-step compact engine is
+    the learner's `step`, shared bit-for-bit with online training."""
+    from repro.core.learner import LearnerSpec, make_learner, scan_learner
+    learner = make_learner(LearnerSpec(
+        engine="scaled", cfg=cfg, col_compact=col_compact))
+    return scan_learner(learner, params, masks, xs, labels)
 
 
 def sharded_step_specs(cfg: ScaledRTRLConfig, mesh):

@@ -16,12 +16,9 @@ Table 1's omega^3 n^2 p time scaling in the unstructured-hardware account.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import cells
 from repro.core.cells import EGRUConfig
-from repro.core.sparse_rtrl import cell_partials, influence_grads
 
 
 def snap2_pattern(cfg: EGRUConfig, masks) -> jax.Array:
@@ -39,43 +36,13 @@ def snap2_pattern(cfg: EGRUConfig, masks) -> jax.Array:
 
 def snap_loss_and_grads(cfg: EGRUConfig, params, xs, labels, order: int = 1,
                         masks=None):
-    """SnAp-{1,2} forward pass. Returns (loss, grads, stats)."""
-    T, B, _ = xs.shape
-    n = cfg.n_hidden
-    w = cells.rec_param_tree(params)
-    a0 = cells.init_state(cfg, B)
+    """SnAp-{1,2} forward pass. Returns (loss, grads, stats).
 
-    from repro.core.sparse_rtrl import init_influence, influence_update
-    M0 = init_influence(cfg, B)
-    if order == 1:
-        keep = jnp.eye(n)
-    else:
-        keep = snap2_pattern(cfg, masks)
-
-    def prune(M):
-        return {g: Mg * (keep[None, :, :, None] if Mg.ndim == 4
-                         else keep[None]) for g, Mg in M.items()}
-
-    def body(carry, x_t):
-        a, M, gw_acc, gout, loss = carry
-        a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
-        M_new = prune(influence_update(cfg, M, hp, Jhat, mbar, masks))
-
-        def inst_loss(po, ai):
-            return cells.xent(cells.readout({"out": po}, ai), labels) / T
-
-        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
-            params["out"], a_new)
-        gw_t = influence_grads(cfg, M_new, cbar)
-        gw_acc = jax.tree.map(jnp.add, gw_acc, gw_t)
-        gout = jax.tree.map(jnp.add, gout, gout_t)
-        return (a_new, M_new, gw_acc, gout, loss + lt), jnp.mean(hp == 0.0)
-
-    gw0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                       cells.rec_param_tree(params))
-    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params["out"])
-    (a, M, gw, gout, loss), betas = jax.lax.scan(
-        body, (a0, M0, gw0, gout0, jnp.float32(0)), xs)
-    grads = dict(gw)
-    grads["out"] = gout
-    return loss, grads, {"beta": betas.mean(), "keep_density": keep.mean()}
+    Thin whole-sequence scan over the streaming Learner API
+    (`repro.core.learner.SnapLearner`) — the hand-rolled scan loop this
+    module used to carry lives there now, as the shared per-step `step`."""
+    from repro.core.learner import LearnerSpec, make_learner, scan_learner
+    learner = make_learner(LearnerSpec(engine="snap", cfg=cfg, order=order))
+    loss, grads, stats = scan_learner(learner, params, masks, xs, labels)
+    return loss, grads, {"beta": stats["beta"].mean(),
+                         "keep_density": learner.keep.mean()}

@@ -44,7 +44,6 @@ measured beta/omega.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
@@ -728,112 +727,16 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
 
     stats carries per-step alpha/beta (and previous-step beta) so
     `repro.core.costs` can integrate the paper's compute-adjusted iterations.
+
+    This is a thin whole-sequence scan over the streaming Learner API
+    (`repro.core.learner.SparseLearner`) — the per-step engine is the
+    learner's `step`, shared bit-for-bit with online training.
     """
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
-    if col_compact is None:
-        col_compact = masks is not None and backend != "dense"
-    T, B, _ = xs.shape
-    w = cells.rec_param_tree(params)
-    a0 = cells.init_state(cfg, B)
-
-    def inst_loss(po, ai):
-        return cells.xent(cells.readout({"out": po}, ai), labels) / T
-
-    def step_stats(a_new, hp, beta_prev, row_density):
-        return {"alpha": jnp.mean(a_new == 0.0), "beta": jnp.mean(hp == 0.0),
-                "beta_prev": beta_prev, "m_row_density": row_density}
-
-    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                         params["out"])
-
-    if backend == "dense":
-        M0 = init_influence(cfg, B)
-
-        def body(carry, x_t):
-            a, M, gw_acc, gout, loss, beta_prev = carry
-            a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
-            M_new = influence_update(cfg, M, hp, Jhat, mbar, masks)
-            lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
-                params["out"], a_new)
-            gw_t = influence_grads(cfg, M_new, cbar)
-            gw_acc = jax.tree.map(jnp.add, gw_acc, gw_t)
-            gout = jax.tree.map(jnp.add, gout, gout_t)
-            stats = step_stats(a_new, hp, beta_prev, _row_density(M_new))
-            return (a_new, M_new, gw_acc, gout, loss + lt,
-                    stats["beta"]), stats
-
-        gw0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), w)
-        init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
-        (a, M, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-        grads = dict(gw)
-        grads["out"] = gout
-        return loss, grads, stats
-
-    layout = flat_layout(cfg)
-    colm = flat_col_mask(layout, masks)
-    cl = col_layout(layout, masks) if col_compact else None
-    P_carry = cl.Pc_pad if cl is not None else layout.P_pad
-    gw0 = jnp.zeros((P_carry,), jnp.float32)
-
-    def finish_grads(gw, gout):
-        if cl is not None:
-            gw = cols_to_flat(cl, gw)
-        grads = unflatten_flat_grads(cfg, layout, gw)
-        grads["out"] = gout
-        return grads
-
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        jm = flat_jmask(cfg, masks)
-        kcolm = cl.live if cl is not None else colm
-        M0 = jnp.zeros((B, layout.n, P_carry), jnp.float32)
-
-        def body(carry, x_t):
-            a, M, gw_acc, gout, loss, beta_prev = carry
-            a_new, hp, Jhat, mbar = cell_partials(cfg, w, a, x_t)
-            if cl is not None:
-                Mbar = flat_mbar_cols(cfg, layout, cl, mbar)
-            else:
-                Mbar = flat_mbar(cfg, layout, mbar, colm)
-            M_new = kops.influence_update(hp, Jhat, M, Mbar, jmask=jm,
-                                          col_mask=kcolm, interpret=interpret)
-            lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
-                params["out"], a_new)
-            gw_acc = gw_acc + jnp.einsum("bk,bkp->p", cbar, M_new)
-            gout = jax.tree.map(jnp.add, gout, gout_t)
-            row_density = jnp.mean(jnp.any(M_new != 0.0, axis=2))
-            stats = step_stats(a_new, hp, beta_prev, row_density)
-            return (a_new, M_new, gw_acc, gout, loss + lt,
-                    stats["beta"]), stats
-
-        init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
-        (a, M, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-        return loss, finish_grads(gw, gout), stats
-
-    # backend == "compact"
-    from repro.kernels import compact as CK
-    K = capacity_K(cfg.n_hidden, capacity)
-    vals0 = jnp.zeros((B, K, P_carry), jnp.float32)
-    idx0 = jnp.full((B, K), -1, jnp.int32)
-
-    def body(carry, x_t):
-        a, vals, idx, gw_acc, gout, loss, beta_prev = carry
-        a_new, hp, vals_new, idx_new, count, overflow = flat_compact_step(
-            cfg, w, layout, a, vals, idx, x_t, colm, cl=cl)
-        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
-            params["out"], a_new)
-        gw_acc = gw_acc + CK.compact_grads(vals_new, idx_new, cbar)
-        gout = jax.tree.map(jnp.add, gout, gout_t)
-        row_density = jnp.sum(idx_new >= 0, axis=1).mean() / cfg.n_hidden
-        stats = step_stats(a_new, hp, beta_prev, row_density)
-        stats["overflow"] = jnp.max(overflow)
-        return (a_new, vals_new, idx_new, gw_acc, gout, loss + lt,
-                stats["beta"]), stats
-
-    init = (a0, vals0, idx0, gw0, gout0, jnp.float32(0), jnp.float32(1.0))
-    (a, vals, idx, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-    return loss, finish_grads(gw, gout), stats
+    from repro.core.learner import LearnerSpec, make_learner, scan_learner
+    learner = make_learner(LearnerSpec(
+        engine="sparse", cfg=cfg, backend=backend, capacity=capacity,
+        interpret=interpret, col_compact=col_compact))
+    return scan_learner(learner, params, masks, xs, labels)
 
 
 def _row_density(M: Tree) -> jax.Array:

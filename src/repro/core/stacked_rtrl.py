@@ -43,7 +43,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import cells, sparse_rtrl as SP
+from repro.core import sparse_rtrl as SP
 from repro.core.cells import StackedEGRUConfig
 
 Tree = Any
@@ -219,18 +219,6 @@ def stacked_compact_step(cfg: StackedEGRUConfig, ws: tuple,
 # The stacked engine
 # ---------------------------------------------------------------------------
 
-def _single_layer_view(cfg: StackedEGRUConfig, params: Tree,
-                       masks: tuple | None):
-    scfg = cfg.layer_cfg(0)
-    sparams = dict(params["layers"][0])
-    sparams["out"] = params["out"]
-    smasks = None
-    if masks is not None:
-        smasks = dict(masks[0])
-        smasks["out"] = None
-    return scfg, sparams, smasks
-
-
 def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
                                 xs: jax.Array, labels: jax.Array,
                                 masks: tuple | None = None, *,
@@ -251,146 +239,18 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
     stacked parameter axis (`stacked_col_layout`) — exact, memory and
     contraction width both shrink by w~.
 
-    With `n_layers == 1` the call delegates to the single-layer engine
-    (`sparse_rtrl.sparse_rtrl_loss_and_grads`) — bit-for-bit the old code
-    path, with the [T, 1] per-layer stats keys added on top ("beta_prev"
-    keeps the single-layer [T] form there); pass
+    With `n_layers == 1` the call delegates to the single-layer engine —
+    bit-for-bit the old code path, with the [T, 1] per-layer stats keys
+    added on top ("beta_prev" keeps the single-layer [T] form there); pass
     delegate_single_layer=False to run the block engine instead.
+
+    This is a thin whole-sequence scan over the streaming Learner API
+    (`repro.core.learner.StackedLearner`) — the per-step block engine is
+    the learner's `step`, shared bit-for-bit with online training.
     """
-    if backend not in SP.BACKENDS:
-        raise ValueError(f"backend must be one of {SP.BACKENDS}, "
-                         f"got {backend!r}")
-    if col_compact is None:
-        col_compact = masks is not None and backend != "dense"
-    L = cfg.n_layers
-    if L == 1 and delegate_single_layer:
-        scfg, sparams, smasks = _single_layer_view(cfg, params, masks)
-        loss, g, stats = SP.sparse_rtrl_loss_and_grads(
-            scfg, sparams, xs, labels, smasks, backend=backend,
-            capacity=capacity, interpret=interpret, col_compact=col_compact)
-        grads = {"layers": [{k: v for k, v in g.items() if k != "out"}],
-                 "out": g["out"]}
-        stats = dict(stats)
-        stats["alpha_layers"] = stats["alpha"][:, None]
-        stats["beta_layers"] = stats["beta"][:, None]
-        return loss, grads, stats
-
-    T, B, _ = xs.shape
-    ws = params["layers"]
-    slayout = stacked_layout(cfg)
-    lcfgs = [cfg.layer_cfg(l) for l in range(L)]
-    colm = stacked_col_mask(slayout, masks)
-    colms = layer_col_masks(slayout, colm)
-    cl = stacked_col_layout(slayout, masks) if col_compact else None
-    P_carry = cl.Pc_pad if cl is not None else slayout.P_pad
-    a0 = cells.init_stacked_state(cfg, B)
-    gw0 = jnp.zeros((P_carry,), jnp.float32)
-    gout0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                         params["out"])
-
-    def finish_grads(gw, gout):
-        if cl is not None:
-            gw = SP.cols_to_flat(cl, gw)
-        grads = unflatten_stacked_grads(cfg, slayout, gw)
-        grads["out"] = gout
-        return grads
-
-    def inst_loss(po, a_top):
-        return cells.xent(cells.readout({"out": po}, a_top), labels) / T
-
-    def layer_partials(l, a_prev, inp):
-        if l == 0:
-            a_new, hp, Jhat, mbar = SP.cell_partials(
-                lcfgs[l], ws[l], a_prev, inp)
-            return a_new, hp, Jhat, None, mbar
-        return SP.cell_partials_full(lcfgs[l], ws[l], a_prev, inp)
-
-    def step_stats(a_news, hps, beta_prev, row_density, extra=None):
-        alpha_l = jnp.stack([jnp.mean(a == 0.0) for a in a_news])
-        beta_l = jnp.stack([jnp.mean(h == 0.0) for h in hps])
-        s = {"alpha": alpha_l.mean(), "beta": beta_l.mean(),
-             "alpha_layers": alpha_l, "beta_layers": beta_l,
-             "beta_prev": beta_prev, "m_row_density": row_density}
-        if extra:
-            s.update(extra)
-        return s, beta_l
-
-    if backend in ("dense", "pallas"):
-        if backend == "pallas":
-            from repro.kernels import ops as kops
-            jms = tuple(SP.flat_jmask(lcfgs[l],
-                                      None if masks is None else masks[l])
-                        for l in range(L))
-        klives = None if cl is None else layer_col_lives(slayout, cl)
-        M0 = tuple(jnp.zeros((B, n, P_carry), jnp.float32)
-                   for n in cfg.layer_sizes)
-
-        def body(carry, x_t):
-            a_prevs, Ms, gw_acc, gout, loss, beta_prev = carry
-            inp = x_t
-            a_news, hps, M_news = [], [], []
-            for l in range(L):
-                lay = slayout.layers[l]
-                a_new, hp, Jhat, Bhat, mbar = layer_partials(
-                    l, a_prevs[l], inp)
-                if cl is not None:
-                    Mb = SP.flat_mbar_cols(lcfgs[l], lay, cl, mbar, layer=l)
-                else:
-                    Mb = SP.flat_mbar(lcfgs[l], lay, mbar, colms[l],
-                                      offset=slayout.offsets[l],
-                                      total_pad=slayout.P_pad)
-                if l > 0:
-                    # cross-layer block row:  B-hat^(l) M^(l-1)_t  (Mbar' =
-                    # M-bar + cross shares the kernel's D(hp) row gate)
-                    Mb = Mb + jnp.einsum("bkj,bjp->bkp", Bhat, M_news[l - 1])
-                if backend == "pallas":
-                    M_new = kops.influence_update(
-                        hp, Jhat, Ms[l], Mb, jmask=jms[l],
-                        col_mask=colms[l] if cl is None else klives[l],
-                        interpret=interpret)
-                else:
-                    M_new = hp[:, :, None] * (
-                        jnp.einsum("bkl,blp->bkp", Jhat, Ms[l]) + Mb)
-                a_news.append(a_new)
-                hps.append(hp)
-                M_news.append(M_new)
-                inp = a_new
-            lt, (gout_t, cbar) = jax.value_and_grad(
-                inst_loss, argnums=(0, 1))(params["out"], a_news[-1])
-            gw_acc = gw_acc + jnp.einsum("bk,bkp->p", cbar, M_news[-1])
-            gout = jax.tree.map(jnp.add, gout, gout_t)
-            rd = jnp.stack([jnp.mean(jnp.any(M != 0.0, axis=2))
-                            for M in M_news]).mean()
-            stats, beta_l = step_stats(a_news, hps, beta_prev, rd)
-            return (tuple(a_news), tuple(M_news), gw_acc, gout, loss + lt,
-                    beta_l), stats
-
-        init = (a0, M0, gw0, gout0, jnp.float32(0), jnp.ones((L,)))
-        (_, _, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-        return loss, finish_grads(gw, gout), stats
-
-    # backend == "compact": per-layer row-compact carry via flat_compact_step
-    Ks = tuple(SP.capacity_K(n, capacity) for n in cfg.layer_sizes)
-    vals0 = tuple(jnp.zeros((B, K, P_carry), jnp.float32) for K in Ks)
-    idx0 = tuple(jnp.full((B, K), -1, jnp.int32) for K in Ks)
-
-    def body(carry, x_t):
-        a_prevs, vals, idx, gw_acc, gout, loss, beta_prev = carry
-        a_news, hps, vals_new, idx_new, ovs = stacked_compact_step(
-            cfg, ws, slayout, a_prevs, vals, idx, x_t, colms, cl=cl)
-        from repro.kernels.compact import compact_grads
-        lt, (gout_t, cbar) = jax.value_and_grad(
-            inst_loss, argnums=(0, 1))(params["out"], a_news[-1])
-        gw_acc = gw_acc + compact_grads(vals_new[-1], idx_new[-1], cbar)
-        gout = jax.tree.map(jnp.add, gout, gout_t)
-        rd = jnp.stack([
-            jnp.sum(i >= 0, axis=1).mean() / n
-            for i, n in zip(idx_new, cfg.layer_sizes)]).mean()
-        stats, beta_l = step_stats(a_news, hps, beta_prev, rd,
-                                   extra={"overflow": jnp.max(ovs)})
-        return (a_news, vals_new, idx_new, gw_acc,
-                gout, loss + lt, beta_l), stats
-
-    init = (a0, vals0, idx0, gw0, gout0, jnp.float32(0), jnp.ones((L,)))
-    (_, _, _, gw, gout, loss, _), stats = jax.lax.scan(body, init, xs)
-    return loss, finish_grads(gw, gout), stats
+    from repro.core.learner import LearnerSpec, make_learner, scan_learner
+    learner = make_learner(LearnerSpec(
+        engine="stacked", cfg=cfg, backend=backend, capacity=capacity,
+        interpret=interpret, col_compact=col_compact,
+        delegate_single_layer=delegate_single_layer))
+    return scan_learner(learner, params, masks, xs, labels)

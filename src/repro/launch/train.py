@@ -15,6 +15,16 @@ EGRU / exact-RTRL path (the paper's own experiment, stacked to depth L):
 trains an L-layer EGRU stack on the spiral task with exact block-structured
 stacked RTRL (repro.core.stacked_rtrl) through the same fault-tolerant
 Trainer / restart supervisor as the LM families.
+
+ONLINE path (the streaming Learner API — what RTRL buys over BPTT):
+
+    PYTHONPATH=src python -m repro.launch.train --arch egru-spiral \
+        --online --update-every 8 --steps 100 [--rtrl-backend compact]
+
+consumes the spiral task as an unbounded stream and applies an optimizer
+update every k steps MID-SEQUENCE (repro.runtime.online.OnlineTrainer):
+memory is O(1) in stream length, checkpoints include the learner carry so
+restarts resume mid-stream, and --steps counts optimizer updates.
 """
 from __future__ import annotations
 
@@ -65,6 +75,9 @@ def train_egru(args) -> dict:
     if masks is not None:
         opt = masked(opt, {"layers": masks, "out": None})
 
+    if args.online:
+        return train_egru_online(args, cfg, masks, opt, backend, col_compact)
+
     @jax.jit
     def step_fn(params, opt_state, batch, step):
         xs, ys = batch
@@ -112,6 +125,54 @@ def train_egru(args) -> dict:
     return out
 
 
+def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
+    """True ONLINE training on the spiral stream: optimizer updates every
+    `--update-every` stream steps, mid-sequence, through the streaming
+    Learner API — memory O(1) in stream length, learner carry checkpointed
+    so restarts resume mid-stream.  `--steps` counts optimizer updates."""
+    from repro.core import cells, stacked_rtrl as ST
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.data.spiral import spiral_dataset
+    from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
+
+    updates = min(args.steps, 12) if args.smoke else args.steps
+    k = args.update_every
+    spec = LearnerSpec(engine="stacked", cfg=cfg, backend=backend,
+                       capacity=args.capacity, col_compact=col_compact)
+    learner = make_learner(spec)
+
+    T = cfg.seq_len
+    xs_all, ys_all = spiral_dataset(T=T, seed=0)
+
+    def stream(step):    # step-keyed: replay-exact across restarts; one
+        s, t = divmod(step, T)                # spiral sequence per T steps
+        rng = np.random.default_rng(1234 + s)
+        sel = rng.integers(0, ys_all.shape[0], size=cfg.batch_size)
+        return xs_all[sel][:, t], ys_all[sel]
+
+    def make_trainer(attempt=0):
+        params = cells.init_stacked_params(cfg, jax.random.key(0))
+        if masks is not None:
+            params = ST.apply_stacked_masks(params, masks)
+        ocfg = OnlineTrainerConfig(
+            total_steps=updates * k, update_every=k,
+            ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+            fail_at_update=args.fail_at if attempt == 0 else -1,
+            metrics_path=args.metrics)
+        return OnlineTrainer(ocfg, learner, opt, params, masks, stream)
+
+    out = run_with_restart(make_trainer)
+    print(f"done: arch=egru-spiral ONLINE layers={args.layers} "
+          f"backend={backend} update_every={k} updates={out['updates']} "
+          f"stream_steps={out['final_step']} restarts={out['restarts']} "
+          f"carry={out['carry_bytes']}B (O(1) in stream length)")
+    if out["metrics"]:
+        first, last = out["metrics"][0], out["metrics"][-1]
+        beta = f" (beta {last['beta']:.2f})" if "beta" in last else ""
+        print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}{beta}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -132,6 +193,13 @@ def main():
                     help="compact-backend row capacity fraction")
     ap.add_argument("--sparsity", type=float, default=0.0,
                     help="fixed parameter sparsity (egru-spiral only)")
+    ap.add_argument("--online", action="store_true",
+                    help="streaming Learner-API training: optimizer updates "
+                         "every --update-every stream steps, mid-sequence "
+                         "(egru-spiral only; --steps counts updates)")
+    ap.add_argument("--update-every", type=int, default=8,
+                    help="online mode: stream steps between optimizer "
+                         "updates")
     ap.add_argument("--col-compact", choices=["auto", "on", "off"],
                     default="auto",
                     help="carry the influence parameter axis column-compact "

@@ -1,0 +1,189 @@
+"""True online training over an unbounded stream — the thing RTRL buys.
+
+BPTT must hold the whole sequence and update at its end; an RTRL learner
+(`repro.core.learner`) carries an O(1)-in-T state and can hand out gradients
+at ANY step.  :class:`OnlineTrainer` exercises exactly that: it consumes a
+step-keyed stream `(x_t, y_t) = stream(t)`, applies an optimizer update
+every `update_every` steps — mid-sequence, no sequence boundary exists —
+and checkpoints the FULL learner carry (influence buffer, activity,
+gradient accumulators, loss scale) plus RNG key and stream position, so a
+restarted worker resumes mid-stream to bit-identical gradients
+(tests/test_online.py injects a crash and proves it).
+
+The per-update work is one jitted `lax.scan` of `learner.step` over the
+k-step window followed by `learner.grads` + optimizer + `reset_grads`
+(`online_update_chunk`); with `update_every=T` this reproduces the legacy
+whole-sequence `*_loss_and_grads` gradients bit-for-bit — `stream_grads`
+is that equivalence surface, tested for every engine x backend x
+col_compact combination.
+
+Loss convention: the learner's per-step loss is scaled by 1/t_total
+(default: the update window k), so each update's summed loss is a window
+mean — comparable across window sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.trainer import InjectedFailure
+
+Tree = Any
+
+
+def stream_grads(learner, carry: Tree, xs: jax.Array, ys: jax.Array):
+    """Drive the learner over a [k]-step window and read out the gradient.
+
+    Returns (carry, loss, grads, stats): the online code path's gradient
+    computation, WITHOUT the optimizer — the equivalence surface against the
+    whole-sequence wrappers (update window == T reproduces them exactly)."""
+    def body(c, xy):
+        c, out = learner.step(c, xy[0], xy[1])
+        return c, out.stats
+
+    carry, stats = jax.lax.scan(body, carry, (xs, ys))
+    return carry, carry["loss"], learner.grads(carry), stats
+
+
+def online_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
+                        xs: jax.Array, ys: jax.Array, upd: jax.Array):
+    """One online update: scan the window, update params mid-stream, reset
+    the accumulators (influence state carries over — the online-RTRL
+    regime).  Pure; jit it once per window shape."""
+    carry, loss, grads, stats = stream_grads(learner, carry, xs, ys)
+    params, opt_state = opt.update(grads, opt_state,
+                                   learner.params_of(carry), upd)
+    carry = learner.reset_grads(carry, params)
+    metrics = {"loss": loss}
+    for k in ("alpha", "beta"):
+        if k in stats:
+            metrics[k] = jnp.asarray(stats[k]).mean()
+    if "overflow" in stats:
+        # max, not mean: any nonzero step means the window's gradients are
+        # no longer exact — same semantics as the offline metrics path
+        metrics["overflow"] = jnp.asarray(stats["overflow"]).max()
+    return carry, opt_state, metrics
+
+
+@dataclasses.dataclass
+class OnlineTrainerConfig:
+    total_steps: int = 170          # stream steps (not updates)
+    update_every: int = 1           # optimizer update every k stream steps
+    ckpt_every: int = 0             # checkpoint every N updates (0 = off)
+    ckpt_dir: str = "/tmp/repro_online_ckpt"
+    keep: int = 3
+    log_every: int = 10             # log every N updates
+    fail_at_update: int = -1        # failure injection (once)
+    metrics_path: str | None = None
+    seed: int = 0
+    t_total: float | None = None    # per-step loss scale (None: update_every)
+
+
+class OnlineTrainer:
+    """Streaming trainer over a Learner: mid-sequence updates, O(1) memory,
+    carry-inclusive checkpoints.
+
+    stream: a step-keyed callable `t -> (x_t [B, ...], y_t [B])` so a
+    restarted worker replays its exact shard (same discipline as
+    `runtime.trainer.Trainer`).  Works with `run_with_restart`."""
+
+    def __init__(self, cfg: OnlineTrainerConfig, learner, opt, params: Tree,
+                 masks: Tree | None, stream: Callable[[int], tuple]):
+        self.cfg = cfg
+        self.learner = learner
+        self.opt = opt
+        self.stream = stream
+        x0, y0 = stream(0)
+        tt = cfg.t_total if cfg.t_total is not None else float(cfg.update_every)
+        self.carry = learner.init(params, masks,
+                                  (jnp.asarray(x0), jnp.asarray(y0)),
+                                  t_total=tt)
+        self.opt_state = jax.jit(opt.init)(params)
+        self.step = 0                     # stream position
+        self.update = 0                   # optimizer updates applied
+        self.key = jax.random.key(cfg.seed)
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+                     if cfg.ckpt_every > 0 else None)
+        self.metrics: list[dict] = []
+        self._failed_once = False
+        self._chunk = jax.jit(
+            lambda carry, opt_state, xs, ys, upd: online_update_chunk(
+                learner, opt, carry, opt_state, xs, ys, upd))
+
+    # -- checkpoint/restore: carry + opt + RNG + stream position ------------
+
+    def _ckpt_tree(self) -> Tree:
+        return {"carry": self.carry, "opt": self.opt_state,
+                "pos": jnp.int32(self.step),
+                "key": jax.random.key_data(self.key)}
+
+    def save(self):
+        if self.ckpt is not None:
+            self.ckpt.save(self.update, self._ckpt_tree(),
+                           extra={"step": self.step})
+
+    def try_resume(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() < 0:
+            return False
+        tree, upd = self.ckpt.restore(self._ckpt_tree())
+        self.carry, self.opt_state = tree["carry"], tree["opt"]
+        self.step = int(tree["pos"])
+        self.update = upd
+        self.key = jax.random.wrap_key_data(tree["key"])
+        return True
+
+    # -- loop ---------------------------------------------------------------
+
+    def _gather(self, start: int, k: int):
+        xs, ys = zip(*(self.stream(start + i) for i in range(k)))
+        return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)))
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        while self.step < cfg.total_steps:
+            if self.update == cfg.fail_at_update and not self._failed_once:
+                self._failed_once = True
+                raise InjectedFailure(
+                    f"injected failure at update {self.update} "
+                    f"(stream step {self.step})")
+            k = min(cfg.update_every, cfg.total_steps - self.step)
+            xs, ys = self._gather(self.step, k)
+            t0 = time.perf_counter()
+            self.carry, self.opt_state, m = self._chunk(
+                self.carry, self.opt_state, xs, ys, jnp.int32(self.update))
+            jax.block_until_ready(m["loss"])
+            dt = time.perf_counter() - t0
+            self.step += k
+            self.update += 1
+            self.key = jax.random.fold_in(self.key, self.update)
+            if self.ckpt is not None and self.update % cfg.ckpt_every == 0:
+                self.save()
+            if (self.update % cfg.log_every == 0
+                    or self.step >= cfg.total_steps):
+                rec = {"update": self.update, "step": self.step,
+                       "dt_s": round(dt, 4),
+                       **{k_: float(np.asarray(v)) for k_, v in m.items()}}
+                self.metrics.append(rec)
+                if cfg.metrics_path:
+                    with open(cfg.metrics_path, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+        self.save()
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return {"final_step": self.step, "updates": self.update,
+                "metrics": self.metrics,
+                "carry_bytes": carry_nbytes(self.carry)}
+
+
+def carry_nbytes(carry: Tree) -> int:
+    """Total bytes held by the learner carry — the O(1)-in-stream-length
+    memory claim, as a number callers can assert on and logs can report."""
+    return int(sum(np.asarray(jax.device_get(x)).nbytes
+                   for x in jax.tree.leaves(carry)))

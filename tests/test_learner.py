@@ -1,0 +1,232 @@
+"""The streaming Learner API: every engine constructible via make_learner,
+protocol contract (init/step/grads/reset_grads), per-step outputs, and the
+approximation-quality of the approximate engines (diag, snap) against the
+exact learner on the SAME stream."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bptt, cells, diag_rtrl, sparse_rtrl as SP
+from repro.core.cells import EGRUConfig
+from repro.core.learner import (ENGINES, LearnerSpec, StepOut, make_learner,
+                                scan_learner)
+
+
+def _setup(kind="gru", sparsity=None, seed=0, n=8, T=7, B=4, n_in=3):
+    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=2, kind=kind)
+    params = cells.init_params(cfg, jax.random.key(seed))
+    masks = None
+    if sparsity is not None:
+        masks = SP.make_masks(cfg, jax.random.key(seed + 7), sparsity)
+        params = SP.apply_masks(params, masks)
+    xs = jax.random.normal(jax.random.key(seed + 1), (T, B, n_in))
+    labels = jnp.array([i % 2 for i in range(B)])
+    return cfg, params, masks, xs, labels
+
+
+def _drive(learner, params, masks, xs, labels, t_total=None):
+    """Step the learner through xs one call at a time (no scan)."""
+    T = xs.shape[0]
+    carry = learner.init(params, masks, (xs[0], labels),
+                         t_total=T if t_total is None else t_total)
+    outs = []
+    for t in range(T):
+        carry, out = learner.step(carry, xs[t], labels)
+        outs.append(out)
+    return carry, outs
+
+
+def _specs_every_engine():
+    cfg, _, _, _, _ = _setup()
+    from repro.core.scaled_rtrl import ScaledRTRLConfig
+    from repro.core.diag_rtrl import DiagCellConfig
+    scfg = cells.stacked_config(cfg, 2)
+    dcfg = DiagCellConfig(n=8, n_in=3, n_out=2)
+    xcfg = ScaledRTRLConfig(n=16, n_in=4, n_out=2, batch=2, beta_capacity=1.0,
+                            sparsity=0.5, mask_block=2)
+    return {
+        "sparse-dense": LearnerSpec(engine="sparse", cfg=cfg),
+        "sparse-pallas": LearnerSpec(engine="sparse", cfg=cfg,
+                                     backend="pallas", interpret=True),
+        "sparse-compact": LearnerSpec(engine="sparse", cfg=cfg,
+                                      backend="compact"),
+        "stacked": LearnerSpec(engine="stacked", cfg=scfg,
+                               backend="compact"),
+        "scaled": LearnerSpec(engine="scaled", cfg=xcfg),
+        "diag": LearnerSpec(engine="diag", cfg=dcfg),
+        "snap1": LearnerSpec(engine="snap", cfg=cfg, order=1),
+        "snap2": LearnerSpec(engine="snap", cfg=cfg, order=2),
+        "bptt": LearnerSpec(engine="bptt", cfg=cfg),
+    }
+
+
+def test_every_engine_constructible_and_steppable():
+    """Acceptance: every engine is constructible via make_learner(spec) and
+    satisfies init/step/grads on a short stream."""
+    from repro.core import scaled_rtrl as SC
+    from repro.core.diag_rtrl import init_params as diag_init
+    cfg, params, masks, xs, labels = _setup()
+    for name, spec in _specs_every_engine().items():
+        if spec.engine == "scaled":
+            p, m = SC.init_params(spec.cfg, jax.random.key(0))
+            x = jax.random.normal(jax.random.key(1),
+                                  (3, spec.cfg.batch, spec.cfg.n_in))
+            y = jnp.array([i % 2 for i in range(spec.cfg.batch)])
+        elif spec.engine == "diag":
+            p, m = diag_init(spec.cfg, jax.random.key(0)), None
+            x, y = xs[:3], labels
+        elif spec.engine == "stacked":
+            p = cells.init_stacked_params(spec.cfg, jax.random.key(0))
+            m, x, y = None, xs[:3], labels
+        else:
+            p, m, x, y = params, masks, xs[:3], labels
+        learner = make_learner(spec)
+        carry, outs = _drive(learner, p, m, x, y)
+        assert all(isinstance(o, StepOut) for o in outs), name
+        assert np.isfinite(float(carry["loss"])), name
+        g = learner.grads(carry)
+        for leaf in jax.tree.leaves(g):
+            assert np.all(np.isfinite(np.asarray(leaf))), name
+        # reset keeps the recurrent state but zeroes the accumulators
+        carry2 = learner.reset_grads(carry, learner.params_of(carry))
+        assert float(carry2["loss"]) == 0.0, name
+
+
+def test_reinit_with_different_masks_raises():
+    """A learner instance is bound to its init-time static structure: a
+    carry built against masks A must not be silently stepped through the
+    layout of masks B — re-init with different masks raises."""
+    cfg, params, masks, xs, labels = _setup(sparsity=0.5)
+    other = SP.make_masks(cfg, jax.random.key(99), 0.5)
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact"))
+    learner.init(params, masks, (xs[0], labels), t_total=7)
+    learner.init(params, masks, (xs[0], labels), t_total=7)  # same: fine
+    with pytest.raises(ValueError):
+        learner.init(params, other, (xs[0], labels), t_total=7)
+    # bptt: the window length is static too
+    lb = make_learner(LearnerSpec(engine="bptt", cfg=cfg))
+    lb.init(params, None, (xs[0], labels), t_total=7)
+    with pytest.raises(ValueError):
+        lb.init(params, None, (xs[0], labels), t_total=9)
+
+
+def test_make_learner_rejects_unknown():
+    cfg, *_ = _setup()
+    with pytest.raises(ValueError):
+        make_learner(LearnerSpec(engine="nope", cfg=cfg))
+    with pytest.raises(ValueError):
+        make_learner(LearnerSpec(engine="sparse", cfg=cfg, backend="nope"))
+    with pytest.raises(ValueError):
+        make_learner(LearnerSpec(engine="sparse"))       # cfg required
+    assert set(ENGINES) == {"sparse", "stacked", "scaled", "diag", "snap",
+                            "bptt"}
+
+
+def test_scan_learner_matches_legacy_sparse():
+    """The legacy function IS scan_learner over the learner — same object."""
+    cfg, params, masks, xs, labels = _setup(sparsity=0.5)
+    l1, g1, s1 = SP.sparse_rtrl_loss_and_grads(cfg, params, xs, labels,
+                                               masks, backend="compact")
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact"))
+    l2, g2, s2 = scan_learner(learner, params, masks, xs, labels)
+    assert float(l1) == float(l2)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_per_step_grads_sum_to_total():
+    """spec.per_step_grads: the per-step gradient terms sum to grads()."""
+    cfg, params, masks, xs, labels = _setup(sparsity=0.5)
+    for backend in ("dense", "compact"):
+        learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                           backend=backend,
+                                           per_step_grads=True))
+        carry, outs = _drive(learner, params, masks, xs, labels)
+        total = learner.grads(carry)
+        summed = outs[0].grads
+        for o in outs[1:]:
+            summed = jax.tree.map(jnp.add, summed, o.grads)
+        for a, b in zip(jax.tree.leaves(total), jax.tree.leaves(summed)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_step_readout_matches_sequence_logits():
+    """StepOut.readout is the per-step logits of the same forward pass."""
+    cfg, params, masks, xs, labels = _setup()
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg))
+    _, outs = _drive(learner, params, None, xs, labels)
+    logits_ref, _ = cells.sequence_logits(cfg, params, xs)
+    got = np.stack([np.asarray(o.readout) for o in outs])
+    np.testing.assert_allclose(got, np.asarray(logits_ref), atol=1e-6)
+
+
+# --- approximation quality on the SAME stream --------------------------------
+
+def _cos(g1, g2):
+    v1 = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(g1)])
+    v2 = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(g2)])
+    return float(v1 @ v2 / (jnp.linalg.norm(v1) * jnp.linalg.norm(v2)))
+
+
+def test_snap_approximation_quality_vs_exact_learner():
+    """SnAp-1/2 on the same stream as the exact learner: positively aligned
+    gradients, SnAp-2 at least as aligned as SnAp-1 (it keeps a superset of
+    the influence), and both exact on the readout (which bypasses M)."""
+    cfg, params, masks, xs, labels = _setup(kind="gru", sparsity=0.5, T=9)
+    exact = make_learner(LearnerSpec(engine="sparse", cfg=cfg))
+    ce, _ = _drive(exact, params, masks, xs, labels)
+    g_exact = exact.grads(ce)
+    cos = {}
+    for order in (1, 2):
+        ln = make_learner(LearnerSpec(engine="snap", cfg=cfg, order=order))
+        c, _ = _drive(ln, params, masks, xs, labels)
+        g = ln.grads(c)
+        # the readout gradient does not flow through the pruned influence
+        np.testing.assert_allclose(np.asarray(g["out"]["W"]),
+                                   np.asarray(g_exact["out"]["W"]),
+                                   atol=1e-6)
+        rec = {k: v for k, v in g.items() if k != "out"}
+        rec_exact = {k: v for k, v in g_exact.items() if k != "out"}
+        cos[order] = _cos(rec, rec_exact)
+    assert cos[1] > 0.3, cos
+    assert cos[2] > cos[1] - 1e-3, cos
+
+
+def test_diag_learner_is_exact_vs_bptt():
+    """The diag learner (eligibility traces) is EXACT for its cell: grads
+    equal BPTT through the same unrolled stream."""
+    from repro.core.diag_rtrl import DiagCellConfig, init_params
+    cfg = DiagCellConfig(n=12, n_in=5, n_out=3)
+    params = init_params(cfg, jax.random.key(0))
+    T, B = 9, 4
+    xs = jax.random.normal(jax.random.key(1), (T, B, cfg.n_in))
+    labels = jnp.array([i % 3 for i in range(B)])
+    learner = make_learner(LearnerSpec(engine="diag", cfg=cfg))
+    carry, _ = _drive(learner, params, None, xs, labels)
+    g = learner.grads(carry)
+    l_ref, g_ref = diag_rtrl.bptt_loss_and_grads(cfg, params, xs, labels)
+    assert abs(float(carry["loss"]) - float(l_ref)) < 1e-5
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_bptt_learner_matches_bptt_oracle():
+    """The BPTT sequence-adapter behind the streaming protocol reproduces
+    `bptt.bptt_loss_and_grads` on a full window."""
+    cfg, params, masks, xs, labels = _setup(T=7)
+    l_ref, g_ref, _ = bptt.bptt_loss_and_grads(cfg, params, xs, labels)
+    learner = make_learner(LearnerSpec(engine="bptt", cfg=cfg))
+    carry, outs = _drive(learner, params, None, xs, labels)
+    g = learner.grads(carry)
+    assert abs(float(carry["loss"]) - float(l_ref)) < 1e-6
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # TBPTT reset: window restarts at the current activity
+    carry2 = learner.reset_grads(carry, carry["params"])
+    assert int(carry2["pos"]) == 0
+    np.testing.assert_array_equal(np.asarray(carry2["a0"]),
+                                  np.asarray(carry["a"]))
