@@ -126,6 +126,31 @@ def influence_carry_bytes(B: int, K: int, P: int,
     return B * K * P * dtype_bytes + B * K * 4
 
 
+def live_col_fraction(live_cols: int, total_cols: int) -> float:
+    """Live fraction of a parameter-column axis — the w~ factor.  The ONE
+    definition shared by `sparse_rtrl.flat_col_density` (layout-level) and
+    `carry_footprint` (byte-level), so density and size accounting can never
+    drift apart."""
+    return live_cols / max(total_cols, 1)
+
+
+def carry_footprint(B: int, K: int, n_cols: int, live_cols: int | None = None,
+                    dtype_bytes: int = 4) -> dict:
+    """Allocated vs LIVE influence-carry footprint of one [B, K, n_cols]
+    buffer, via `influence_carry_bytes` for both widths.
+
+    `live_cols` (e.g. ColLayout.Pc, or a column-mask popcount) prices the
+    buffer at its live width — the true O(w~ beta~ n p) footprint a
+    prune-and-regrow rewire event shrinks or grows, as opposed to the
+    lane-padded allocation which is static."""
+    alloc = influence_carry_bytes(B, K, n_cols, dtype_bytes)
+    live = alloc if live_cols is None else \
+        influence_carry_bytes(B, K, live_cols, dtype_bytes)
+    return {"alloc_bytes": alloc, "live_bytes": live,
+            "col_density": (1.0 if live_cols is None
+                            else live_col_fraction(live_cols, n_cols))}
+
+
 def stacked_influence_update_flops(ns, Ps, betas_t=None, betas_prev=None,
                                    omegas=None) -> dict:
     """Op accounting for ONE stacked influence update as the sum over the

@@ -92,6 +92,11 @@ class LearnerSpec:
     per_step_grads  also emit each step's own gradient term in StepOut
     delegate_single_layer  stacked L=1 runs the single-layer engine
                (bit-for-bit the historical delegation)
+    rewirable  support prune-and-regrow rewire events (repro.sparsity):
+               all mask-derived state (mask tree, column maps, J pattern)
+               moves INTO the carry so `rewire(carry, event_key)` can swap
+               it between jitted chunks without retracing — requires masks
+               at init; sparse/stacked/scaled engines only
     """
     engine: str = "sparse"
     cfg: Any = None
@@ -104,6 +109,7 @@ class LearnerSpec:
     horizon: int | None = None
     per_step_grads: bool = False
     delegate_single_layer: bool = True
+    rewirable: bool = False
 
 
 class Learner(Protocol):
@@ -122,11 +128,33 @@ class Learner(Protocol):
 
     def params_of(self, carry: Tree) -> Tree: ...
 
+    def rewire(self, carry: Tree, event_key: jax.Array, *,
+               frac: float = 0.1, method: str = "rigl",
+               block: int = 1) -> Tree: ...
+
 
 class _LearnerBase:
     """Shared carry conventions: dict carry with 'params', 'loss', 't_total'
     and gradient accumulators 'gw'/'gout'."""
     spec: LearnerSpec
+
+    def rewire(self, carry: Tree, event_key: jax.Array, *,
+               frac: float = 0.1, method: str = "rigl",
+               block: int = 1) -> Tree:
+        """Prune-and-regrow mask rewire event (repro.sparsity).  Defined for
+        the exact sparse/stacked/scaled RTRL learners constructed with
+        ``LearnerSpec(rewirable=True)``; everywhere else there is no mask
+        state to evolve, so this is a hard error, not a silent no-op."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no dynamic-sparsity support: rewire "
+            "is defined for the sparse/stacked/scaled exact-RTRL learners "
+            "constructed with LearnerSpec(rewirable=True)")
+
+    def opt_mask_of(self, carry: Tree) -> Tree:
+        """The CURRENT mask tree in the optimizer's parameter structure
+        (what `optim.optimizers.set_opt_mask` consumes after a rewire)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} carries no mask state")
 
     def reset_grads(self, carry: Tree, params: Tree | None = None) -> Tree:
         carry = dict(carry)
@@ -178,9 +206,24 @@ class _LearnerBase:
 # Exact single-layer sparse RTRL (dense / pallas / compact x col-compact)
 # ---------------------------------------------------------------------------
 
+_CL_FIELDS = ("src", "layer", "gate", "q", "j", "live")
+
+
+def _cl_arrays(cl) -> dict:
+    """The ColLayout's array fields as a carry-able dict — the static ints
+    (Pc/Pc_pad/P_pad) stay on the learner because count-preserving rewire
+    never changes them."""
+    return {f: getattr(cl, f) for f in _CL_FIELDS}
+
 class SparseLearner(_LearnerBase):
     """`repro.core.sparse_rtrl` as a streaming learner — all three backends,
-    optionally dual (row x column) compact.  Exact."""
+    optionally dual (row x column) compact.  Exact.
+
+    With ``spec.rewirable`` the mask-derived state (mask tree, column
+    mask/map, J pattern) lives in ``carry["rw"]`` instead of on the
+    instance, so `rewire` can evolve the masks between jitted chunks with
+    every buffer SHAPE — and therefore every compiled step — unchanged
+    (count-preserving prune-and-regrow keeps Pc static)."""
 
     def __init__(self, spec: LearnerSpec):
         if spec.backend not in SP.BACKENDS:
@@ -189,14 +232,18 @@ class SparseLearner(_LearnerBase):
         self.spec = spec
         self.cfg: EGRUConfig = spec.cfg
         self.backend = spec.backend
+        self._score_fn = None
+        self._apply_fn = None
 
     def init(self, params, masks, batch, t_total: float = 1.0):
         cfg = self.cfg
-        x0, _ = batch
+        x0, y0 = batch
         B = x0.shape[0]
         col_compact = self.spec.col_compact
         if col_compact is None:
             col_compact = masks is not None and self.backend != "dense"
+        if self.spec.rewirable and masks is None:
+            raise ValueError("rewirable=True requires parameter masks")
         self._freeze_static(masks=masks, col_compact=col_compact)
         self.masks = masks
         carry = self._base_carry(params, t_total)
@@ -205,38 +252,65 @@ class SparseLearner(_LearnerBase):
                                      params["out"])
         carry["beta_prev"] = jnp.float32(1.0)
         self._cl = None
+        rw = {"masks": masks} if self.spec.rewirable else None
         if self.backend == "dense":
             carry["M"] = SP.init_influence(cfg, B)
             carry["gw"] = jax.tree.map(
                 lambda x: jnp.zeros_like(x, jnp.float32),
                 cells.rec_param_tree(params))
-            return carry
+            return self._attach_rw(carry, rw, x0, y0)
         layout = SP.flat_layout(cfg)
         self.layout = layout
         self._colm = SP.flat_col_mask(layout, masks)
         if col_compact:
             self._cl = SP.col_layout(layout, masks)
+        if rw is not None:
+            if self._cl is not None:
+                rw["cl"] = _cl_arrays(self._cl)
+            else:
+                rw["colm"] = self._colm
         P_carry = self._cl.Pc_pad if self._cl is not None else layout.P_pad
         carry["gw"] = jnp.zeros((P_carry,), jnp.float32)
         if self.backend == "pallas":
             self._jm = SP.flat_jmask(cfg, masks)
+            if rw is not None:
+                rw["jmask"] = self._jm
             carry["M"] = jnp.zeros((B, layout.n, P_carry), jnp.float32)
         else:
             K = SP.capacity_K(cfg.n_hidden, self.spec.capacity)
             carry["vals"] = jnp.zeros((B, K, P_carry), jnp.float32)
             carry["idx"] = jnp.full((B, K), -1, jnp.int32)
+        return self._attach_rw(carry, rw, x0, y0)
+
+    @staticmethod
+    def _attach_rw(carry, rw, x0, y0):
+        if rw is not None:
+            carry["rw"] = rw
+            # last (x, y) seen: the rewire event's RigL scoring input
+            carry["last"] = {"x": jnp.zeros_like(x0, dtype=jnp.float32),
+                             "y": jnp.zeros_like(y0, dtype=jnp.int32)}
         return carry
+
+    def _cl_view(self, rw):
+        """The CURRENT ColLayout: static ints from init (Pc never changes),
+        column maps from the carry when rewirable."""
+        if self._cl is None or rw is None:
+            return self._cl
+        return dataclasses.replace(self._cl, **rw["cl"])
 
     def step(self, carry, x_t, y_t):
         cfg, params = self.cfg, carry["params"]
         w = cells.rec_param_tree(params)
         tt = carry["t_total"]
+        rw = carry.get("rw")
+        masks = rw["masks"] if rw is not None else self.masks
+        cl = self._cl_view(rw)
         new = dict(carry)
         extra_stats = {}
         if self.backend == "dense":
             a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
             M_new = SP.influence_update(cfg, carry["M"], hp, Jhat, mbar,
-                                        self.masks)
+                                        masks)
             lt, (gout_t, cbar) = jax.value_and_grad(
                 self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
             gw_t = SP.influence_grads(cfg, M_new, cbar)
@@ -245,15 +319,17 @@ class SparseLearner(_LearnerBase):
             row_density = SP._row_density(M_new)
         elif self.backend == "pallas":
             from repro.kernels import ops as kops
+            colm = rw.get("colm", self._colm) if rw is not None else self._colm
+            jm = rw["jmask"] if rw is not None else self._jm
             a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
-            if self._cl is not None:
-                Mbar = SP.flat_mbar_cols(cfg, self.layout, self._cl, mbar)
-                kcolm = self._cl.live
+            if cl is not None:
+                Mbar = SP.flat_mbar_cols(cfg, self.layout, cl, mbar)
+                kcolm = cl.live
             else:
-                Mbar = SP.flat_mbar(cfg, self.layout, mbar, self._colm)
-                kcolm = self._colm
+                Mbar = SP.flat_mbar(cfg, self.layout, mbar, colm)
+                kcolm = colm
             M_new = kops.influence_update(hp, Jhat, carry["M"], Mbar,
-                                          jmask=self._jm, col_mask=kcolm,
+                                          jmask=jm, col_mask=kcolm,
                                           interpret=self.spec.interpret)
             lt, (gout_t, cbar) = jax.value_and_grad(
                 self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
@@ -263,10 +339,11 @@ class SparseLearner(_LearnerBase):
             row_density = jnp.mean(jnp.any(M_new != 0.0, axis=2))
         else:                                   # compact
             from repro.kernels import compact as CK
+            colm = rw.get("colm", self._colm) if rw is not None else self._colm
             a_new, hp, vals_new, idx_new, count, overflow = \
                 SP.flat_compact_step(cfg, w, self.layout, carry["a"],
                                      carry["vals"], carry["idx"], x_t,
-                                     self._colm, cl=self._cl)
+                                     colm, cl=cl)
             lt, (gout_t, cbar) = jax.value_and_grad(
                 self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
             gw_t = CK.compact_grads(vals_new, idx_new, cbar)
@@ -278,28 +355,125 @@ class SparseLearner(_LearnerBase):
         new["a"] = a_new
         new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
         new["loss"] = carry["loss"] + lt
+        if rw is not None:
+            new["last"] = {"x": x_t.astype(jnp.float32),
+                           "y": y_t.astype(jnp.int32)}
         stats = {"alpha": jnp.mean(a_new == 0.0), "beta": jnp.mean(hp == 0.0),
                  "beta_prev": carry["beta_prev"],
                  "m_row_density": row_density, **extra_stats}
         new["beta_prev"] = stats["beta"]
         step_grads = None
         if self.spec.per_step_grads:
-            step_grads = self._finish_gw(gw_t)
+            step_grads = self._finish_gw(gw_t, cl)
             step_grads["out"] = gout_t
         out = StepOut(lt, cells.readout(params, a_new), stats, step_grads)
         return new, out
 
-    def _finish_gw(self, gw):
+    def _finish_gw(self, gw, cl=None):
         if self.backend == "dense":
             return dict(gw)
-        if self._cl is not None:
-            gw = SP.cols_to_flat(self._cl, gw)
+        cl = cl if cl is not None else self._cl
+        if cl is not None:
+            gw = SP.cols_to_flat(cl, gw)
         return SP.unflatten_flat_grads(self.cfg, self.layout, gw)
 
     def grads(self, carry):
-        grads = self._finish_gw(carry["gw"])
+        grads = self._finish_gw(carry["gw"], self._cl_view(carry.get("rw")))
         grads["out"] = carry["gout"]
         return grads
+
+    # -- dynamic sparsity ---------------------------------------------------
+
+    def _rigl_scores(self, carry):
+        """Dense one-step gradient (straight-through surrogate) from the
+        carry's current activity and last (x, y) — RigL's occasional dense
+        scoring pass, computed only at rewire events."""
+        if self._score_fn is None:
+            cfg = self.cfg
+
+            def loss_fn(params, a, x, y):
+                w = cells.rec_param_tree(params)
+                a_new = cells.step_straight_through(cfg, w, a, x)
+                return cells.xent(cells.readout(params, a_new), y)
+
+            self._score_fn = jax.jit(jax.grad(loss_fn))
+        g = self._score_fn(carry["params"], carry["a"], carry["last"]["x"],
+                           carry["last"]["y"])
+        return cells.rec_param_tree(g)
+
+    def rewire(self, carry, event_key, *, frac: float = 0.1,
+               method: str = "rigl", block: int = 1):
+        """One prune-and-regrow event with EXACT carry migration.  Host-side
+        (between jitted chunks); every carry shape is preserved, so the
+        compiled step keeps running — only the carry-borne column maps
+        change.  Fire at update boundaries (after `reset_grads`): the
+        gradient accumulator entries of pruned columns are then already
+        consumed, and the surviving ones migrate like the influence."""
+        from repro import sparsity as DS
+        if "rw" not in carry:
+            raise NotImplementedError(
+                "rewire needs LearnerSpec(rewirable=True) (mask state must "
+                "live in the carry)")
+        cfg = self.cfg
+        carry = dict(carry)
+        rw = dict(carry["rw"])
+        old_masks = rw["masks"]
+        params = carry["params"]
+        grads = self._rigl_scores(carry) if method == "rigl" else None
+        new_masks = DS.rewire_masks(old_masks, cells.rec_param_tree(params),
+                                    grads, frac=frac, key=event_key,
+                                    method=method, block=block)
+        rw["masks"] = new_masks
+        # the device-side event work — old-then-new param masking (pruned
+        # weights -> 0, grown weights EXACTLY 0) + the migration gather on
+        # influence and gradient accumulator — runs as ONE jitted call so a
+        # per-event cost is a single dispatch, amortizing under the
+        # every_k-step cadence
+        if self._apply_fn is None:
+            def apply(params, om, nm, bufs, gather, carried):
+                params = SP.apply_masks(SP.apply_masks(params, om), nm)
+                bufs = {k: jnp.take(v, gather, axis=-1) * carried
+                        for k, v in bufs.items()}
+                return params, bufs
+
+            def apply_dense(params, om, nm, M, gw):
+                params = SP.apply_masks(SP.apply_masks(params, om), nm)
+                M = DS.migrate_dense(cfg, M, nm)
+                wm = {k: v for k, v in nm.items() if k != "out"}
+                return params, M, SP.apply_masks(gw, wm)
+
+            self._apply_fn = jax.jit(
+                apply_dense if self.backend == "dense" else apply)
+        if self.backend == "dense":
+            carry["params"], carry["M"], carry["gw"] = self._apply_fn(
+                params, old_masks, new_masks, carry["M"], carry["gw"])
+        else:
+            buf = "M" if self.backend == "pallas" else "vals"
+            if self._cl is not None:
+                old_cl = self._cl_view(rw)
+                new_cl = SP.col_layout(self.layout, new_masks)
+                gather, carried = DS.migration_plan(old_cl, new_cl)
+                rw["cl"] = _cl_arrays(new_cl)
+            else:
+                # full-width carry: identity gather, new column mask kills
+                # the pruned columns (grown ones are already exactly zero)
+                colm = SP.flat_col_mask(self.layout, new_masks)
+                gather = jnp.arange(colm.shape[0], dtype=jnp.int32)
+                carried = colm
+                rw["colm"] = colm
+            carry["params"], bufs = self._apply_fn(
+                params, old_masks, new_masks,
+                {buf: carry[buf], "gw": carry["gw"]}, gather, carried)
+            carry[buf], carry["gw"] = bufs[buf], bufs["gw"]
+        if self.backend == "pallas":
+            rw["jmask"] = SP.flat_jmask(cfg, new_masks)
+        carry["rw"] = rw
+        return carry
+
+    def opt_mask_of(self, carry):
+        masks = dict(carry["rw"]["masks"])
+        masks.setdefault("out", None)
+        return masks
 
 
 # ---------------------------------------------------------------------------
@@ -320,11 +494,17 @@ class _SingleLayerStackedLearner(_LearnerBase):
     def init(self, params, masks, batch, t_total: float = 1.0):
         sparams = dict(params["layers"][0])
         sparams["out"] = params["out"]
-        smasks = None
-        if masks is not None:
-            smasks = dict(masks[0])
-            smasks["out"] = None
-        return self.inner.init(sparams, smasks, batch, t_total)
+        # memoize the single-layer mask view: re-init with the SAME stacked
+        # masks (e.g. a restarted trainer attempt) must hand the inner
+        # learner the same object, or its _freeze_static identity check
+        # would reject the rebuild
+        if masks is None:
+            self._smasks = None
+        elif getattr(self, "_smasks_src", None) is not masks:
+            self._smasks_src = masks
+            self._smasks = dict(masks[0])
+            self._smasks["out"] = None
+        return self.inner.init(sparams, self._smasks, batch, t_total)
 
     def step(self, carry, x_t, y_t):
         carry, out = self.inner.step(carry, x_t, y_t)
@@ -354,6 +534,18 @@ class _SingleLayerStackedLearner(_LearnerBase):
             params = sparams
         return self.inner.reset_grads(carry, params)
 
+    def rewire(self, carry, event_key, *, frac: float = 0.1,
+               method: str = "rigl", block: int = 1):
+        # layer 0 of a stacked rewire folds 0 into the event key
+        # (rewire_stacked_masks convention) — keep the delegation aligned
+        return self.inner.rewire(carry, jax.random.fold_in(event_key, 0),
+                                 frac=frac, method=method, block=block)
+
+    def opt_mask_of(self, carry):
+        masks = self.inner.opt_mask_of(carry)
+        return {"layers": [{k: v for k, v in masks.items() if k != "out"}],
+                "out": None}
+
 
 class StackedLearner(_LearnerBase):
     """`repro.core.stacked_rtrl` as a streaming learner: the block
@@ -379,15 +571,18 @@ class StackedLearner(_LearnerBase):
         self.spec = spec
         self.cfg = self._stacked_cfg(spec)
         self.backend = spec.backend
+        self._score_fn = None
 
     def init(self, params, masks, batch, t_total: float = 1.0):
         cfg = self.cfg
-        x0, _ = batch
+        x0, y0 = batch
         B = x0.shape[0]
         L = cfg.n_layers
         col_compact = self.spec.col_compact
         if col_compact is None:
             col_compact = masks is not None and self.backend != "dense"
+        if self.spec.rewirable and masks is None:
+            raise ValueError("rewirable=True requires parameter masks")
         self._freeze_static(masks=masks, col_compact=col_compact)
         slayout = ST.stacked_layout(cfg)
         self.slayout = slayout
@@ -403,6 +598,15 @@ class StackedLearner(_LearnerBase):
                 SP.flat_jmask(self.lcfgs[l],
                               None if masks is None else masks[l])
                 for l in range(L))
+        rw = None
+        if self.spec.rewirable:
+            rw = {"masks": tuple(masks)}
+            if self._cl is not None:
+                rw["cl"] = _cl_arrays(self._cl)
+            else:
+                rw["colms"] = self.colms
+            if self.backend == "pallas":
+                rw["jms"] = self._jms
         P_carry = self._cl.Pc_pad if self._cl is not None else slayout.P_pad
         carry = self._base_carry(params, t_total)
         carry["a"] = cells.init_stacked_state(cfg, B)
@@ -419,7 +623,12 @@ class StackedLearner(_LearnerBase):
             carry["vals"] = tuple(jnp.zeros((B, K, P_carry), jnp.float32)
                                   for K in Ks)
             carry["idx"] = tuple(jnp.full((B, K), -1, jnp.int32) for K in Ks)
-        return carry
+        return SparseLearner._attach_rw(carry, rw, x0, y0)
+
+    def _cl_view(self, rw):
+        if self._cl is None or rw is None:
+            return self._cl
+        return dataclasses.replace(self._cl, **rw["cl"])
 
     def _layer_partials(self, l, ws, a_prev, inp):
         if l == 0:
@@ -434,6 +643,15 @@ class StackedLearner(_LearnerBase):
         tt = carry["t_total"]
         L = cfg.n_layers
         slayout = self.slayout
+        rw = carry.get("rw")
+        cl = self._cl_view(rw)
+        if rw is not None:
+            colms = rw.get("colms", self.colms)
+            klives = None if cl is None else ST.layer_col_lives(slayout, cl)
+            jms = rw.get("jms")
+        else:
+            colms, klives, jms = self.colms, self._klives, \
+                getattr(self, "_jms", None)
         new = dict(carry)
         extra_stats = {}
         if self.backend in ("dense", "pallas"):
@@ -443,11 +661,11 @@ class StackedLearner(_LearnerBase):
                 lay = slayout.layers[l]
                 a_new, hp, Jhat, Bhat, mbar = self._layer_partials(
                     l, ws, carry["a"][l], inp)
-                if self._cl is not None:
-                    Mb = SP.flat_mbar_cols(self.lcfgs[l], lay, self._cl, mbar,
+                if cl is not None:
+                    Mb = SP.flat_mbar_cols(self.lcfgs[l], lay, cl, mbar,
                                            layer=l)
                 else:
-                    Mb = SP.flat_mbar(self.lcfgs[l], lay, mbar, self.colms[l],
+                    Mb = SP.flat_mbar(self.lcfgs[l], lay, mbar, colms[l],
                                       offset=slayout.offsets[l],
                                       total_pad=slayout.P_pad)
                 if l > 0:
@@ -455,9 +673,8 @@ class StackedLearner(_LearnerBase):
                 if self.backend == "pallas":
                     from repro.kernels import ops as kops
                     M_new = kops.influence_update(
-                        hp, Jhat, carry["M"][l], Mb, jmask=self._jms[l],
-                        col_mask=self.colms[l] if self._cl is None
-                        else self._klives[l],
+                        hp, Jhat, carry["M"][l], Mb, jmask=jms[l],
+                        col_mask=colms[l] if cl is None else klives[l],
                         interpret=self.spec.interpret)
                 else:
                     M_new = hp[:, :, None] * (
@@ -477,7 +694,7 @@ class StackedLearner(_LearnerBase):
             from repro.kernels.compact import compact_grads
             a_news, hps, vals_new, idx_new, ovs = ST.stacked_compact_step(
                 cfg, ws, slayout, carry["a"], carry["vals"], carry["idx"],
-                x_t, self.colms, cl=self._cl)
+                x_t, colms, cl=cl)
             lt, (gout_t, cbar) = jax.value_and_grad(
                 self._inst_loss, argnums=(0, 1))(params["out"], a_news[-1],
                                                  y_t, tt)
@@ -491,6 +708,9 @@ class StackedLearner(_LearnerBase):
         new["gw"] = carry["gw"] + gw_t
         new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
         new["loss"] = carry["loss"] + lt
+        if rw is not None:
+            new["last"] = {"x": x_t.astype(jnp.float32),
+                           "y": y_t.astype(jnp.int32)}
         alpha_l = jnp.stack([jnp.mean(a == 0.0) for a in a_news])
         beta_l = jnp.stack([jnp.mean(h == 0.0) for h in hps])
         stats = {"alpha": alpha_l.mean(), "beta": beta_l.mean(),
@@ -500,21 +720,89 @@ class StackedLearner(_LearnerBase):
         new["beta_prev"] = beta_l
         step_grads = None
         if self.spec.per_step_grads:
-            step_grads = self._finish_gw(gw_t)
+            step_grads = self._finish_gw(gw_t, cl)
             step_grads["out"] = gout_t
         out = StepOut(lt, cells.readout(params, a_news[-1]), stats,
                       step_grads)
         return new, out
 
-    def _finish_gw(self, gw):
-        if self._cl is not None:
-            gw = SP.cols_to_flat(self._cl, gw)
+    def _finish_gw(self, gw, cl=None):
+        cl = cl if cl is not None else self._cl
+        if cl is not None:
+            gw = SP.cols_to_flat(cl, gw)
         return ST.unflatten_stacked_grads(self.cfg, self.slayout, gw)
 
     def grads(self, carry):
-        grads = self._finish_gw(carry["gw"])
+        grads = self._finish_gw(carry["gw"], self._cl_view(carry.get("rw")))
         grads["out"] = carry["gout"]
         return grads
+
+    # -- dynamic sparsity ---------------------------------------------------
+
+    def _rigl_scores(self, carry):
+        if self._score_fn is None:
+            cfg = self.cfg
+
+            def loss_fn(params, a_prevs, x, y):
+                a_new = cells.stacked_step_straight_through(
+                    cfg, params["layers"], a_prevs, x)
+                return cells.xent(cells.readout(params, a_new[-1]), y)
+
+            self._score_fn = jax.jit(jax.grad(loss_fn))
+        g = self._score_fn(carry["params"], carry["a"], carry["last"]["x"],
+                           carry["last"]["y"])
+        return g["layers"]
+
+    def rewire(self, carry, event_key, *, frac: float = 0.1,
+               method: str = "rigl", block: int = 1):
+        """Stacked prune-and-regrow event: per-layer criteria on the shared
+        concatenated column axis; ONE migration plan remaps every layer's
+        buffer (they share the stacked ColLayout).  See
+        SparseLearner.rewire for the exactness contract."""
+        from repro import sparsity as DS
+        if "rw" not in carry:
+            raise NotImplementedError(
+                "rewire needs LearnerSpec(rewirable=True) (mask state must "
+                "live in the carry)")
+        carry = dict(carry)
+        rw = dict(carry["rw"])
+        old_masks = list(rw["masks"])
+        params = dict(carry["params"])
+        grads = self._rigl_scores(carry) if method == "rigl" else None
+        new_masks = DS.rewire_stacked_masks(
+            old_masks, params["layers"], grads, frac=frac, key=event_key,
+            method=method, block=block)
+        params["layers"] = [
+            SP.apply_masks(SP.apply_masks(p, om), nm)
+            for p, om, nm in zip(params["layers"], old_masks, new_masks)]
+        carry["params"] = params
+        rw["masks"] = tuple(new_masks)
+        buf = "M" if self.backend in ("dense", "pallas") else "vals"
+        if self._cl is not None:
+            old_cl = self._cl_view(rw)
+            new_cl = ST.stacked_col_layout(self.slayout, new_masks)
+            plan = DS.migration_plan(old_cl, new_cl)
+            carry[buf] = tuple(
+                DS.migrate_influence(old_cl, new_cl, M, plan=plan)
+                for M in carry[buf])
+            carry["gw"] = DS.migrate_influence(old_cl, new_cl, carry["gw"],
+                                               plan=plan)
+            rw["cl"] = _cl_arrays(new_cl)
+        else:
+            colm = ST.stacked_col_mask(self.slayout, new_masks)
+            colms = ST.layer_col_masks(self.slayout, colm)
+            carry[buf] = tuple(DS.migrate_flat(cm, M)
+                               for cm, M in zip(colms, carry[buf]))
+            carry["gw"] = DS.migrate_flat(colm, carry["gw"])
+            rw["colms"] = colms
+        if self.backend == "pallas":
+            rw["jms"] = tuple(SP.flat_jmask(self.lcfgs[l], new_masks[l])
+                              for l in range(self.cfg.n_layers))
+        carry["rw"] = rw
+        return carry
+
+    def opt_mask_of(self, carry):
+        return {"layers": list(carry["rw"]["masks"]), "out": None}
 
 
 # ---------------------------------------------------------------------------
@@ -530,13 +818,20 @@ class ScaledLearner(_LearnerBase):
         self.spec = spec
         self.cfg = spec.cfg                 # ScaledRTRLConfig
         self.stacked = self.cfg.n_layers > 1
+        self._score_fn = None
 
     def init(self, params, masks, batch, t_total: float = 1.0):
         from repro.core import scaled_rtrl as SC
         cfg = self.cfg
+        x0, y0 = batch
         col_compact = self.spec.col_compact
         if col_compact is None:
             col_compact = masks is not None
+        if self.spec.rewirable and not (masks is not None and col_compact):
+            raise ValueError(
+                "rewirable ScaledLearner requires masks and col_compact "
+                "(the full-width scaled carry tracks dead columns, so "
+                "grow-at-zero exactness only holds on the compact carry)")
         self._freeze_static(masks=masks, col_compact=col_compact)
         self._cl = cfg.col_layout(masks) if col_compact else None
         if self._cl is not None:
@@ -549,7 +844,16 @@ class ScaledLearner(_LearnerBase):
         carry["gw"] = jnp.zeros((P_carry,), jnp.float32)
         carry["gout"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
                                      params["out"])
-        return carry
+        rw = None
+        if self.spec.rewirable:
+            rw = {"masks": tuple(masks) if self.stacked else masks,
+                  "cl": _cl_arrays(self._cl)}
+        return SparseLearner._attach_rw(carry, rw, x0, y0)
+
+    def _cl_view(self, rw):
+        if self._cl is None or rw is None:
+            return self._cl
+        return dataclasses.replace(self._cl, **rw["cl"])
 
     def step(self, carry, x_t, y_t):
         from repro.core import scaled_rtrl as SC
@@ -557,8 +861,10 @@ class ScaledLearner(_LearnerBase):
         cfg, params = self.cfg, carry["params"]
         w = params["layers"] if self.stacked else cells.rec_param_tree(params)
         tt = carry["t_total"]
+        rw = carry.get("rw")
+        cl = self._cl_view(rw)
         state, overflow = SC.compact_step(cfg, w, carry["state"], x_t,
-                                          cl=self._cl)
+                                          cl=cl)
         a_top = state["a"][-1] if self.stacked else state["a"]
         lt, (gout_t, cbar) = jax.value_and_grad(
             self._inst_loss, argnums=(0, 1))(params["out"], a_top, y_t, tt)
@@ -571,28 +877,117 @@ class ScaledLearner(_LearnerBase):
         new["gw"] = carry["gw"] + gw_t
         new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
         new["loss"] = carry["loss"] + lt
+        if rw is not None:
+            new["last"] = {"x": x_t.astype(jnp.float32),
+                           "y": y_t.astype(jnp.int32)}
         stats = {"overflow": overflow if self.stacked
                  else jnp.max(overflow)}
         step_grads = None
         if self.spec.per_step_grads:
-            step_grads = self._finish_gw(gw_t)
+            step_grads = self._finish_gw(gw_t, cl)
             step_grads["out"] = gout_t
         return new, StepOut(lt, cells.readout(params, a_top), stats,
                             step_grads)
 
-    def _finish_gw(self, gw):
+    def _finish_gw(self, gw, cl=None):
         cfg = self.cfg
-        if self._cl is not None:
-            gw = SP.cols_to_flat(self._cl, gw)
+        cl = cl if cl is not None else self._cl
+        if cl is not None:
+            gw = SP.cols_to_flat(cl, gw)
         if self.stacked:
             return ST.unflatten_stacked_grads(cfg.stacked_cfg(),
                                               cfg.slayout(), gw)
         return SP.unflatten_flat_grads(cfg.cell_cfg(), cfg.layout(), gw)
 
     def grads(self, carry):
-        grads = self._finish_gw(carry["gw"])
+        grads = self._finish_gw(carry["gw"], self._cl_view(carry.get("rw")))
         grads["out"] = carry["gout"]
         return grads
+
+    # -- dynamic sparsity ---------------------------------------------------
+
+    def _rigl_scores(self, carry):
+        cfg = self.cfg
+        if self._score_fn is None:
+            if self.stacked:
+                scfg = cfg.stacked_cfg()
+
+                def loss_fn(params, a, x, y):
+                    a_new = cells.stacked_step_straight_through(
+                        scfg, params["layers"], a, x)
+                    return cells.xent(cells.readout(params, a_new[-1]), y)
+            else:
+                ccfg = cfg.cell_cfg()
+
+                def loss_fn(params, a, x, y):
+                    w = cells.rec_param_tree(params)
+                    a_new = cells.step_straight_through(ccfg, w, a, x)
+                    return cells.xent(cells.readout(params, a_new), y)
+
+            self._score_fn = jax.jit(jax.grad(loss_fn))
+        g = self._score_fn(carry["params"], carry["state"]["a"],
+                           carry["last"]["x"], carry["last"]["y"])
+        return g["layers"] if self.stacked else cells.rec_param_tree(g)
+
+    def rewire(self, carry, event_key, *, frac: float = 0.1,
+               method: str = "rigl", block: int = 1):
+        """Scaled (optionally stacked/sharded) prune-and-regrow event on
+        the dual-compact carry.  The once-per-event migration gather may
+        move surviving columns across model shards; the steady-state step
+        keeps its zero-collective influence update unchanged."""
+        from repro import sparsity as DS
+        if "rw" not in carry:
+            raise NotImplementedError(
+                "rewire needs LearnerSpec(rewirable=True) (mask state must "
+                "live in the carry)")
+        cfg = self.cfg
+        carry = dict(carry)
+        rw = dict(carry["rw"])
+        grads = self._rigl_scores(carry) if method == "rigl" else None
+        params = dict(carry["params"])
+        if self.stacked:
+            old_masks = list(rw["masks"])
+            new_masks = DS.rewire_stacked_masks(
+                old_masks, params["layers"], grads, frac=frac, key=event_key,
+                method=method, block=block)
+            params["layers"] = [
+                SP.apply_masks(SP.apply_masks(p, om), nm)
+                for p, om, nm in zip(params["layers"], old_masks, new_masks)]
+            rw["masks"] = tuple(new_masks)
+        else:
+            old_masks = rw["masks"]
+            new_masks = DS.rewire_masks(
+                old_masks, cells.rec_param_tree(params), grads, frac=frac,
+                key=event_key, method=method, block=block)
+            params = SP.apply_masks(SP.apply_masks(params, old_masks),
+                                    new_masks)
+            rw["masks"] = new_masks
+        carry["params"] = params
+        old_cl = self._cl_view(rw)
+        new_cl = cfg.col_layout(new_masks)
+        plan = DS.migration_plan(old_cl, new_cl)
+        state = dict(carry["state"])
+        if self.stacked:
+            state["vals"] = tuple(
+                DS.migrate_influence(old_cl, new_cl, v, plan=plan)
+                for v in state["vals"])
+        else:
+            state["vals"] = DS.migrate_influence(old_cl, new_cl,
+                                                 state["vals"], plan=plan)
+        carry["state"] = state
+        carry["gw"] = DS.migrate_influence(old_cl, new_cl, carry["gw"],
+                                           plan=plan)
+        rw["cl"] = _cl_arrays(new_cl)
+        carry["rw"] = rw
+        return carry
+
+    def opt_mask_of(self, carry):
+        masks = carry["rw"]["masks"]
+        if self.stacked:
+            return {"layers": list(masks), "out": None}
+        masks = dict(masks)
+        masks.setdefault("out", None)
+        return masks
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,27 @@ LANE = 128        # TPU lane width: flat influence buffers are lane-padded
 # Parameter-sparsity masks (fixed at init — paper Sec. 6)
 # ---------------------------------------------------------------------------
 
+def mask_gates(kind: str) -> tuple:
+    """The gates whose W/R matrices are maskable, in canonical order — the
+    order every mask-key convention below folds over."""
+    return ("v",) if kind == "rnn" else ("u", "r", "z")
+
+
+def gate_param_keys(key: jax.Array, gates: tuple) -> dict:
+    """THE per-call key split convention for mask draws: gate i (in `gates`
+    order) folds the base key with i, then splits once into the (W, R) draw
+    keys.  `make_masks` consumes its key through this helper, and rewire
+    events (`repro.sparsity.schedule`) reuse it with the per-event key from
+    `RewireSchedule.event_key` — every mask draw, at init or at any
+    prune-and-regrow event, is fully determined by (base key, gate order),
+    with no ad-hoc folding at call sites."""
+    out = {}
+    for i, g in enumerate(gates):
+        kW, kR = jax.random.split(jax.random.fold_in(key, i))
+        out[g] = {"W": kW, "R": kR}
+    return out
+
+
 def make_masks(cfg: EGRUConfig, key: jax.Array, sparsity: float,
                block: int = 1, mask_input: bool = True) -> Tree:
     """Random fixed masks with density (1-sparsity).
@@ -70,7 +91,12 @@ def make_masks(cfg: EGRUConfig, key: jax.Array, sparsity: float,
     block > 1 draws the mask at [block x block] granularity — the
     TPU-friendly variant (DESIGN.md §3); block=1 is the paper's unstructured
     setting.
-    """
+
+    `key` is consumed through `gate_param_keys` (one explicit per-call base
+    key; per-gate/per-tensor sub-keys derived by the documented convention),
+    so callers never fold keys ad hoc and rewire events can draw from the
+    same convention.  Stacked networks fold the layer index into the base
+    key first (`stacked_rtrl.make_stacked_masks`)."""
     def bernoulli(key, shape):
         if block == 1:
             return (jax.random.uniform(key, shape) >= sparsity).astype(jnp.float32)
@@ -80,14 +106,14 @@ def make_masks(cfg: EGRUConfig, key: jax.Array, sparsity: float,
         # [bshape * block^2] intermediate, and no trailing crop
         return coarse[jnp.arange(shape[0]) // block][:, jnp.arange(shape[1]) // block]
 
-    gates = ("v",) if cfg.kind == "rnn" else ("u", "r", "z")
+    gates = mask_gates(cfg.kind)
+    keys = gate_param_keys(key, gates)
     masks = {}
-    for i, g in enumerate(gates):
-        kW, kR = jax.random.split(jax.random.fold_in(key, i))
+    for g in gates:
         masks[g] = {
-            "W": bernoulli(kW, (cfg.n_in, cfg.n_hidden)) if mask_input
+            "W": bernoulli(keys[g]["W"], (cfg.n_in, cfg.n_hidden)) if mask_input
             else jnp.ones((cfg.n_in, cfg.n_hidden)),
-            "R": bernoulli(kR, (cfg.n_hidden, cfg.n_hidden)),
+            "R": bernoulli(keys[g]["R"], (cfg.n_hidden, cfg.n_hidden)),
             "b": jnp.ones((cfg.n_hidden,)),
         }
     masks["theta"] = jnp.ones((cfg.n_hidden,))
@@ -341,25 +367,32 @@ def init_influence_flat(layout: FlatLayout, batch: int) -> jax.Array:
     return jnp.zeros((batch, layout.n, layout.P_pad), jnp.float32)
 
 
+def _flat_col_mask_np(layout: FlatLayout, masks: Tree | None) -> np.ndarray:
+    """Host (numpy) [P] column liveness — the single source `flat_col_mask`
+    pads/uploads and `build_col_layout` consumes directly (rewire events
+    rebuild layouts on the host; no device round trips)."""
+    if masks is None:
+        return np.ones((layout.P,), np.float32)
+    n = layout.n
+    parts = []
+    for g in layout.gates:
+        mk = masks[g]
+        cols = [np.asarray(mk["W"]).T, np.asarray(mk["R"]).T,
+                np.ones((n, 1), np.float32)]
+        if layout.kind == "rnn":
+            cols.append(np.ones((n, 1), np.float32))     # theta column
+        parts.append(np.concatenate(cols, axis=1).reshape(-1))
+    if layout.kind != "rnn":
+        parts.append(np.ones((n,), np.float32))          # theta block
+    return np.concatenate(parts).astype(np.float32)
+
+
 def flat_col_mask(layout: FlatLayout, masks: Tree | None) -> jax.Array:
     """[P_pad] column liveness from the fixed parameter masks (Sec. 5).
 
     Padding columns are dead, so block-granular backends skip whole padded
     column blocks even without parameter sparsity."""
-    if masks is None:
-        live = jnp.ones((layout.P,), jnp.float32)
-    else:
-        n = layout.n
-        parts = []
-        for g in layout.gates:
-            mk = masks[g]
-            cols = [mk["W"].T, mk["R"].T, jnp.ones((n, 1))]
-            if layout.kind == "rnn":
-                cols.append(jnp.ones((n, 1)))        # theta column
-            parts.append(jnp.concatenate(cols, axis=1).reshape(-1))
-        if layout.kind != "rnn":
-            parts.append(jnp.ones((n,)))             # theta block
-        live = jnp.concatenate(parts).astype(jnp.float32)
+    live = jnp.asarray(_flat_col_mask_np(layout, masks))
     return jnp.pad(live, (0, layout.P_pad - layout.P))
 
 
@@ -434,7 +467,7 @@ def build_col_layout(parts, P_pad: int) -> ColLayout:
     entry for a single-layer axis, one per layer for the stacked axis."""
     srcs, layers, gates, qs, js = [], [], [], [], []
     for lay, mk, off, lid in parts:
-        live = np.asarray(flat_col_mask(lay, mk))[:lay.P] > 0
+        live = _flat_col_mask_np(lay, mk) > 0
         g, q, j = _decompose_columns(lay)
         idx = np.nonzero(live)[0]
         srcs.append(idx + off)
@@ -466,8 +499,12 @@ def col_layout(layout: FlatLayout, masks: Tree | None) -> ColLayout:
 
 def flat_col_density(layout: FlatLayout, masks: Tree | None) -> float:
     """Live fraction of the P logical parameter columns — the omega~ factor
-    the column compaction realises (Pc == flat_col_density * P)."""
-    return float(np.mean(np.asarray(flat_col_mask(layout, masks))[:layout.P]))
+    the column compaction realises (Pc == flat_col_density * P).  Shares the
+    ONE live-fraction definition with the byte accounting in
+    `repro.core.costs.carry_footprint`."""
+    from repro.core.costs import live_col_fraction
+    live = int(_flat_col_mask_np(layout, masks).sum())
+    return live_col_fraction(live, layout.P)
 
 
 def flat_to_cols(cl: ColLayout, x: jax.Array) -> jax.Array:

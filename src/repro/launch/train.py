@@ -57,9 +57,21 @@ def train_egru(args) -> dict:
 
     cfg = egru_spiral.stacked(args.layers)
     backend = args.rtrl_backend
+    rewiring = args.rewire != "off"
+    if rewiring and not args.online:
+        raise SystemExit("--rewire needs --online (events fire at online "
+                         "update boundaries)")
+    if rewiring and args.sparsity <= 0.0:
+        raise SystemExit("--rewire needs --sparsity > 0 (there is no mask "
+                         "to evolve at density 1)")
+    # --seed threads EVERYTHING: params, mask draws (via the documented
+    # make_masks key convention), the stream shuffle base, and the per-event
+    # rewire keys — one seed reproduces a run end-to-end, rewires included
+    base_key = jax.random.key(args.seed)
     masks = None
     if args.sparsity > 0.0:
-        masks = ST.make_stacked_masks(cfg, jax.random.key(1), args.sparsity)
+        masks = ST.make_stacked_masks(cfg, jax.random.fold_in(base_key, 1),
+                                      args.sparsity)
     # resolve the auto rule ONCE and pass the explicit bool to the engine,
     # so the report below can never disagree with what the engine runs
     col_flag = {"auto": None, "on": True, "off": False}[args.col_compact]
@@ -73,7 +85,12 @@ def train_egru(args) -> dict:
               f"col-compact carry {'ON' if col_compact else 'OFF'}")
     opt = make_optimizer("adamw", lr=cfg.lr)
     if masks is not None:
-        opt = masked(opt, {"layers": masks, "out": None})
+        from repro.optim.optimizers import masked_dynamic
+        opt_mask = {"layers": masks, "out": None}
+        # rewiring swaps masks at runtime -> the mask must live in the
+        # optimizer STATE, not a jit-baked closure constant
+        opt = masked_dynamic(opt, opt_mask) if rewiring \
+            else masked(opt, opt_mask)
 
     if args.online:
         return train_egru_online(args, cfg, masks, opt, backend, col_compact)
@@ -100,7 +117,7 @@ def train_egru(args) -> dict:
                 jnp.asarray(ys_all[sel]))
 
     def make_trainer(attempt=0):
-        params = cells.init_stacked_params(cfg, jax.random.key(0))
+        params = cells.init_stacked_params(cfg, jax.random.key(args.seed))
         if masks is not None:
             params = ST.apply_stacked_masks(params, masks)
         opt_state = jax.jit(opt.init)(params)
@@ -134,38 +151,51 @@ def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
     from repro.core.learner import LearnerSpec, make_learner
     from repro.data.spiral import spiral_dataset
     from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
+    from repro.sparsity import RewireSchedule
 
     updates = min(args.steps, 12) if args.smoke else args.steps
     k = args.update_every
+    rewiring = args.rewire != "off"
     spec = LearnerSpec(engine="stacked", cfg=cfg, backend=backend,
-                       capacity=args.capacity, col_compact=col_compact)
+                       capacity=args.capacity, col_compact=col_compact,
+                       rewirable=rewiring)
     learner = make_learner(spec)
+    schedule = None
+    if rewiring:
+        n_events = max(1, updates // args.rewire_every)
+        schedule = RewireSchedule(method=args.rewire,
+                                  every_k=args.rewire_every,
+                                  frac=args.rewire_frac, t_end=n_events)
 
     T = cfg.seq_len
     xs_all, ys_all = spiral_dataset(T=T, seed=0)
 
     def stream(step):    # step-keyed: replay-exact across restarts; one
         s, t = divmod(step, T)                # spiral sequence per T steps
-        rng = np.random.default_rng(1234 + s)
+        rng = np.random.default_rng(1234 + args.seed * 100003 + s)
         sel = rng.integers(0, ys_all.shape[0], size=cfg.batch_size)
         return xs_all[sel][:, t], ys_all[sel]
 
     def make_trainer(attempt=0):
-        params = cells.init_stacked_params(cfg, jax.random.key(0))
+        params = cells.init_stacked_params(cfg, jax.random.key(args.seed))
         if masks is not None:
             params = ST.apply_stacked_masks(params, masks)
         ocfg = OnlineTrainerConfig(
             total_steps=updates * k, update_every=k,
             ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
             fail_at_update=args.fail_at if attempt == 0 else -1,
-            metrics_path=args.metrics)
-        return OnlineTrainer(ocfg, learner, opt, params, masks, stream)
+            metrics_path=args.metrics, seed=args.seed)
+        return OnlineTrainer(ocfg, learner, opt, params, masks, stream,
+                             rewire_schedule=schedule)
 
     out = run_with_restart(make_trainer)
+    rew = (f" rewire={args.rewire}x{out['rewire_events']}"
+           if rewiring else "")
     print(f"done: arch=egru-spiral ONLINE layers={args.layers} "
           f"backend={backend} update_every={k} updates={out['updates']} "
-          f"stream_steps={out['final_step']} restarts={out['restarts']} "
-          f"carry={out['carry_bytes']}B (O(1) in stream length)")
+          f"stream_steps={out['final_step']} restarts={out['restarts']}{rew} "
+          f"carry={out['carry_bytes']}B live={out['carry_live_bytes']}B "
+          f"(O(1) in stream length)")
     if out["metrics"]:
         first, last = out["metrics"][0], out["metrics"][-1]
         beta = f" (beta {last['beta']:.2f})" if "beta" in last else ""
@@ -205,6 +235,22 @@ def main():
                     help="carry the influence parameter axis column-compact "
                          "(auto: on whenever --sparsity > 0 and the backend "
                          "is not 'dense')")
+    ap.add_argument("--rewire", choices=["off", "set", "rigl"],
+                    default="off",
+                    help="dynamic sparsity: prune-and-regrow the parameter "
+                         "masks at online update boundaries with EXACT "
+                         "influence-carry migration (egru-spiral --online "
+                         "only; 'set' = random regrowth, 'rigl' = "
+                         "gradient-magnitude regrowth)")
+    ap.add_argument("--rewire-every", type=int, default=50,
+                    help="optimizer updates between rewire events")
+    ap.add_argument("--rewire-frac", type=float, default=0.3,
+                    help="initial rewired fraction of live weights per "
+                         "tensor (cosine-decayed to 0 over the run)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed threaded through param init, mask "
+                         "draws, the data stream, and rewire event keys — "
+                         "one value reproduces a run end-to-end")
     args = ap.parse_args()
 
     if args.arch in ("egru-spiral", "egru_spiral"):

@@ -198,17 +198,54 @@ def masked(opt: Optimizer, mask: Tree) -> Optimizer:
     def init(params):
         return opt.init(params)
 
-    def _mask_tree(tree):
-        # mask-first walk: None masks an entire (dense) subtree untouched
-        return jax.tree.map(
-            lambda mk, t: t if mk is None else t * mk.astype(t.dtype),
-            mask, tree, is_leaf=lambda x: x is None)
-
     def update(grads, state, params, step):
-        p_new, s_new = opt.update(_mask_tree(grads), state, params, step)
-        return _mask_tree(p_new), s_new
+        p_new, s_new = opt.update(_apply_mask_tree(mask, grads), state,
+                                  params, step)
+        return _apply_mask_tree(mask, p_new), s_new
 
     return Optimizer(init, update)
+
+
+def _apply_mask_tree(mask: Tree, tree: Tree) -> Tree:
+    # mask-first walk: None masks an entire (dense) subtree untouched
+    return jax.tree.map(
+        lambda mk, t: t if mk is None else t * mk.astype(t.dtype),
+        mask, tree, is_leaf=lambda x: x is None)
+
+
+def masked_dynamic(opt: Optimizer, mask0: Tree) -> Optimizer:
+    """`masked`, but the mask lives in the optimizer STATE instead of a
+    closure — so prune-and-regrow rewire events can swap it with
+    `set_opt_mask` while the jitted update keeps its compiled form (the
+    mask is a traced input, not a baked constant).  State shape:
+    ``{"inner": <wrapped state>, "mask": mask tree}``."""
+
+    def init(params):
+        return {"inner": opt.init(params), "mask": mask0}
+
+    def update(grads, state, params, step):
+        mk = state["mask"]
+        p_new, s_new = opt.update(_apply_mask_tree(mk, grads),
+                                  state["inner"], params, step)
+        return _apply_mask_tree(mk, p_new), {"inner": s_new, "mask": mk}
+
+    return Optimizer(init, update)
+
+
+def set_opt_mask(state: Tree, new_mask: Tree) -> Tree:
+    """Swap the mask of a `masked_dynamic` state after a rewire event, and
+    flush moment state outside the new mask ('m'/'v' entries): pruned
+    weights lose their momentum, regrown weights start from zero moments —
+    RigL's restart-at-zero convention, and the Table-1 memory contract
+    (pruned optimizer state stays zero)."""
+    if not (isinstance(state, dict) and "mask" in state):
+        raise ValueError("set_opt_mask expects a masked_dynamic state "
+                         "({'inner': ..., 'mask': ...})")
+    inner = dict(state["inner"])
+    for k in ("m", "v"):
+        if k in inner:
+            inner[k] = _apply_mask_tree(new_mask, inner[k])
+    return {"inner": inner, "mask": new_mask}
 
 
 def make_optimizer(name: str, lr=None, **kw) -> Optimizer:

@@ -92,10 +92,20 @@ class OnlineTrainer:
 
     stream: a step-keyed callable `t -> (x_t [B, ...], y_t [B])` so a
     restarted worker replays its exact shard (same discipline as
-    `runtime.trainer.Trainer`).  Works with `run_with_restart`."""
+    `runtime.trainer.Trainer`).  Works with `run_with_restart`.
+
+    rewire_schedule (`repro.sparsity.RewireSchedule`): prune-and-regrow
+    mask evolution.  Events fire at UPDATE boundaries (right after the
+    optimizer consumed and reset the gradient accumulator) via
+    `learner.rewire` — the learner must be built with
+    ``LearnerSpec(rewirable=True)``.  Count-preserving rewire keeps every
+    carry shape static, so the jitted update chunk never recompiles; the
+    mask state lives in the carry and the event counter in the checkpoint,
+    so a restarted worker replays the identical mask sequence."""
 
     def __init__(self, cfg: OnlineTrainerConfig, learner, opt, params: Tree,
-                 masks: Tree | None, stream: Callable[[int], tuple]):
+                 masks: Tree | None, stream: Callable[[int], tuple],
+                 rewire_schedule=None):
         self.cfg = cfg
         self.learner = learner
         self.opt = opt
@@ -106,9 +116,28 @@ class OnlineTrainer:
                                   (jnp.asarray(x0), jnp.asarray(y0)),
                                   t_total=tt)
         self.opt_state = jax.jit(opt.init)(params)
+        if rewire_schedule is not None:
+            # fail at construction, not at the first event hours into a run
+            if "rw" not in self.carry:
+                raise ValueError(
+                    "rewire_schedule requires a rewirable learner — "
+                    "construct it with LearnerSpec(rewirable=True)")
+            if not (isinstance(self.opt_state, dict)
+                    and "mask" in self.opt_state):
+                # a closure-masked (or unmasked) optimizer would keep stale
+                # moments alive at pruned positions and pin grown weights
+                # at 0
+                raise ValueError(
+                    "rewire_schedule requires a masked_dynamic optimizer "
+                    "(the mask must live in the optimizer state so rewire "
+                    "events can swap it) — see "
+                    "repro.optim.optimizers.masked_dynamic")
         self.step = 0                     # stream position
         self.update = 0                   # optimizer updates applied
         self.key = jax.random.key(cfg.seed)
+        self.rewire_schedule = rewire_schedule
+        self.rewire_events = 0            # events fired (checkpointed)
+        self._rewire_base = jax.random.key(cfg.seed)
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
                      if cfg.ckpt_every > 0 else None)
         self.metrics: list[dict] = []
@@ -122,6 +151,7 @@ class OnlineTrainer:
     def _ckpt_tree(self) -> Tree:
         return {"carry": self.carry, "opt": self.opt_state,
                 "pos": jnp.int32(self.step),
+                "rewire_events": jnp.int32(self.rewire_events),
                 "key": jax.random.key_data(self.key)}
 
     def save(self):
@@ -136,8 +166,82 @@ class OnlineTrainer:
         self.carry, self.opt_state = tree["carry"], tree["opt"]
         self.step = int(tree["pos"])
         self.update = upd
+        self.rewire_events = int(tree["rewire_events"])
         self.key = jax.random.wrap_key_data(tree["key"])
         return True
+
+    # -- dynamic sparsity ---------------------------------------------------
+
+    def _maybe_rewire(self) -> dict:
+        """Fire a prune-and-regrow event if the schedule says so.  Returns
+        metric entries for the log (empty when no event fired)."""
+        sch = self.rewire_schedule
+        if sch is None or not sch.fires(self.update):
+            return {}
+        from repro.optim.optimizers import set_opt_mask
+        t0 = time.perf_counter()
+        ev = self.rewire_events
+        self.carry = self.learner.rewire(
+            self.carry, sch.event_key(self._rewire_base, ev),
+            frac=sch.fraction(ev), method=sch.method, block=sch.block)
+        if isinstance(self.opt_state, dict) and "mask" in self.opt_state:
+            self.opt_state = set_opt_mask(self.opt_state,
+                                          self.learner.opt_mask_of(self.carry))
+        self.rewire_events = ev + 1
+        fp = self.carry_nbytes()
+        return {"rewire_event": ev, "rewire_frac": round(sch.fraction(ev), 5),
+                "rewire_ms": round((time.perf_counter() - t0) * 1e3, 2),
+                "carry_live_bytes": fp["live"]}
+
+    def carry_nbytes(self) -> dict:
+        """{'alloc', 'live', 'col_density'}: the carry's allocated bytes vs
+        its LIVE footprint, pricing each influence buffer at its live column
+        count (`costs.carry_footprint` — the O(w~ beta~ n p) claim), so
+        rewire events report the true footprint rather than the init-time
+        allocation width.  Stacked buffers are priced per layer: layer l's
+        buffer structurally zeroes the columns of layers j > l, so its live
+        width is the <= l share of the shared compact axis."""
+        from repro.core.costs import carry_footprint
+        c = self.carry
+        total = carry_nbytes(c)
+        out = {"alloc": total, "live": total, "col_density": 1.0}
+        rw = c.get("rw") if isinstance(c, dict) else None
+        if rw is None:
+            return out
+        if "cl" in rw:
+            live_v = np.asarray(rw["cl"]["live"])
+            layer_v = np.asarray(rw["cl"]["layer"])
+            n_cols = live_v.shape[-1]
+            n_live = int(live_v.sum())
+            layer_live = lambda l: int((live_v * (layer_v <= l)).sum())
+        elif "colm" in rw:
+            colm = np.asarray(rw["colm"])
+            n_cols, n_live = colm.shape[-1], int(colm.sum())
+            layer_live = lambda l: n_live
+        elif "colms" in rw:
+            colms = [np.asarray(cm) for cm in rw["colms"]]
+            n_cols, n_live = colms[-1].shape[-1], int(colms[-1].sum())
+            layer_live = lambda l: int(colms[l].sum())
+        else:
+            return out
+        bufs = []                                    # (buffer, layer-or-None)
+        for holder in (c, c.get("state") or {}):
+            for k in ("vals", "M"):
+                src = holder.get(k)
+                if src is None:
+                    continue
+                bufs += ([(b, l) for l, b in enumerate(src)]
+                         if isinstance(src, tuple) else [(src, None)])
+        live_total = total
+        for b, l in bufs:
+            if hasattr(b, "shape") and b.shape[-1] == n_cols:
+                rows = b.size // n_cols
+                nl = n_live if l is None else layer_live(l)
+                fp = carry_footprint(1, rows, n_cols, nl)
+                live_total += fp["live_bytes"] - fp["alloc_bytes"]
+        out["live"] = live_total
+        out["col_density"] = n_live / n_cols
+        return out
 
     # -- loop ---------------------------------------------------------------
 
@@ -163,12 +267,13 @@ class OnlineTrainer:
             self.step += k
             self.update += 1
             self.key = jax.random.fold_in(self.key, self.update)
+            rewire_rec = self._maybe_rewire()
             if self.ckpt is not None and self.update % cfg.ckpt_every == 0:
                 self.save()
-            if (self.update % cfg.log_every == 0
+            if (rewire_rec or self.update % cfg.log_every == 0
                     or self.step >= cfg.total_steps):
                 rec = {"update": self.update, "step": self.step,
-                       "dt_s": round(dt, 4),
+                       "dt_s": round(dt, 4), **rewire_rec,
                        **{k_: float(np.asarray(v)) for k_, v in m.items()}}
                 self.metrics.append(rec)
                 if cfg.metrics_path:
@@ -177,9 +282,10 @@ class OnlineTrainer:
         self.save()
         if self.ckpt is not None:
             self.ckpt.wait()
+        fp = self.carry_nbytes()
         return {"final_step": self.step, "updates": self.update,
-                "metrics": self.metrics,
-                "carry_bytes": carry_nbytes(self.carry)}
+                "metrics": self.metrics, "rewire_events": self.rewire_events,
+                "carry_bytes": fp["alloc"], "carry_live_bytes": fp["live"]}
 
 
 def carry_nbytes(carry: Tree) -> int:

@@ -1,0 +1,25 @@
+"""Dynamic sparsity: prune-and-regrow mask evolution with EXACT
+influence-carry migration.
+
+  schedule  RewireSchedule (cadence + cosine-decayed fraction + per-event
+            deterministic keys) and the SET/RigL criteria on the mask Tree
+            format, fine- or block-granular, count-preserving per tensor
+  migrate   exact column remapping between two ColLayouts (surviving
+            columns bit-for-bit, grown columns zero, pruned flushed) —
+            single-layer, stacked, and scaled/sharded carries
+
+Integration: `Learner.rewire(carry, event_key)` (repro.core.learner),
+`OnlineTrainer(rewire_schedule=)` (repro.runtime.online), and
+`launch/train.py --online --rewire {set,rigl}`.
+"""
+from repro.sparsity.migrate import (gate_col_mask, migrate_dense,
+                                    migrate_flat, migrate_influence,
+                                    migrate_via_flat, migration_plan)
+from repro.sparsity.schedule import (RewireSchedule, rewire_masks,
+                                     rewire_stacked_masks, rewire_tensor)
+
+__all__ = [
+    "RewireSchedule", "rewire_masks", "rewire_stacked_masks",
+    "rewire_tensor", "migration_plan", "migrate_influence", "migrate_flat",
+    "migrate_dense", "migrate_via_flat", "gate_col_mask",
+]

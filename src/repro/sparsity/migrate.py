@@ -1,0 +1,120 @@
+"""Exact influence-carry migration between two ColLayouts.
+
+A rewire event replaces the fixed masks, so the static live-column set of
+the compact influence carry changes.  Migration is EXACT, not approximate:
+
+  * surviving columns (live under both masks) keep their accumulated
+    influence bit-for-bit — a pure gather, no arithmetic;
+  * grown columns initialize to exactly 0: the grown weight starts at 0 and
+    the restarted reference engine carries zero influence for it, so 0 IS
+    the exact value, not a truncation;
+  * pruned columns are dropped; their flat-gradient-accumulator entries are
+    flushed the same way (rewire fires at update boundaries where the
+    accumulator was just consumed, so nothing is lost).
+
+`migrate_influence` equals the "rebuild from scattered flat" oracle
+    flat_to_cols(new_cl, cols_to_flat(old_cl, M))
+bit-for-bit (tests/test_rewire.py), but runs as ONE gather on the compact
+axis — the full [..., P_pad] buffer is never materialized, so migration
+costs O(B K Pc), not O(B K P).
+
+Count-preserving rewire criteria (`repro.sparsity.schedule`) keep Pc — and
+therefore Pc_pad and every carry shape — invariant, so the same plan shape
+serves every event and jitted steps never recompile.  Works unchanged for
+single-layer, stacked (`stacked_col_layout`'s shared concatenated axis:
+one plan remaps every layer's buffer), and scaled/sharded carries (a
+surviving column may hop shards, so the once-per-event gather may
+communicate — amortized over every_k steps it is noise; the steady-state
+step stays zero-collective as before).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_rtrl as SP
+
+Tree = Any
+
+
+def migration_plan(old_cl: "SP.ColLayout",
+                   new_cl: "SP.ColLayout") -> tuple[jax.Array, jax.Array]:
+    """Precompute the surviving-column gather between two ColLayouts.
+
+    Returns (gather [Pc_pad] int32, carried [Pc_pad] float32): new compact
+    column c reads old compact column gather[c] iff carried[c] == 1 (its
+    flat source column is live under BOTH masks); grown and pad columns are
+    zero-filled.  Host-side one-off per event (src maps are strictly
+    increasing, so this is one searchsorted over Pc entries)."""
+    if (old_cl.Pc_pad, old_cl.P_pad) != (new_cl.Pc_pad, new_cl.P_pad):
+        raise ValueError(
+            "migration requires equal compact widths (count-preserving "
+            f"rewire): old Pc_pad={old_cl.Pc_pad}/P_pad={old_cl.P_pad}, "
+            f"new Pc_pad={new_cl.Pc_pad}/P_pad={new_cl.P_pad}")
+    old_src = np.asarray(old_cl.src)[:old_cl.Pc]
+    new_src = np.asarray(new_cl.src)
+    live_new = np.asarray(new_cl.live) > 0
+    pos = np.searchsorted(old_src, new_src)
+    safe = np.minimum(pos, max(old_src.size - 1, 0))
+    carried = live_new & (pos < old_src.size) & (old_src[safe] == new_src)
+    gather = np.where(carried, safe, 0).astype(np.int32)
+    return jnp.asarray(gather), jnp.asarray(carried.astype(np.float32))
+
+
+def migrate_influence(old_cl: "SP.ColLayout", new_cl: "SP.ColLayout",
+                      M: jax.Array,
+                      plan: tuple[jax.Array, jax.Array] | None = None
+                      ) -> jax.Array:
+    """Remap a compact-column buffer [..., Pc_pad] from old_cl to new_cl.
+
+    Surviving columns carry bit-for-bit, grown/pad columns come back exactly
+    zero — identical to scattering through the full flat axis and
+    re-gathering, without ever building it.  Works on the row-compact vals
+    [B, K, Pc_pad], the full-row pallas buffer [B, n, Pc_pad], and the flat
+    gradient accumulator [Pc_pad] (whose pruned entries this flushes)."""
+    gather, carried = migration_plan(old_cl, new_cl) if plan is None else plan
+    return jnp.take(M, gather, axis=-1) * carried
+
+
+def migrate_flat(new_col_mask: jax.Array, M: jax.Array) -> jax.Array:
+    """Full-width sibling: on a [..., P_pad] carry the column set is already
+    the flat axis, so migration is just killing the newly-dead columns
+    (grown columns are already exactly zero — the old column mask kept
+    them zero every step)."""
+    return M * new_col_mask
+
+
+def gate_col_mask(cfg, masks: Tree, g: str) -> jax.Array:
+    """Per-gate (q, m) column liveness of the masked-dense influence dict —
+    the same concatenation `influence_update` gates its M-bar with."""
+    n = cfg.n_hidden
+    mk = masks[g]
+    cols = [mk["W"].T, mk["R"].T, jnp.ones((n, 1))]
+    if cfg.kind == "rnn":
+        cols.append(jnp.ones((n, 1)))            # folded theta column
+    return jnp.concatenate(cols, axis=1)
+
+
+def migrate_dense(cfg, M: Tree, new_masks: Tree) -> Tree:
+    """Masked-dense per-gate influence dict migration: newly-dead (q, m)
+    columns are zeroed; grown columns are already exactly zero because the
+    dense update masks M-bar every step and the J M term cannot repopulate a
+    zero column.  theta is never masked."""
+    out = {}
+    for g, Mg in M.items():
+        if g == "theta":
+            out[g] = Mg
+        else:
+            out[g] = Mg * gate_col_mask(cfg, new_masks, g)[None, None]
+    return out
+
+
+def migrate_via_flat(old_cl: "SP.ColLayout", new_cl: "SP.ColLayout",
+                     M: jax.Array) -> jax.Array:
+    """The 'rebuild from scattered flat' ORACLE: scatter the compact buffer
+    to the full [..., P_pad] axis and re-gather under the new layout.  Used
+    only to validate `migrate_influence` bit-for-bit — O(B K P) memory."""
+    return SP.flat_to_cols(new_cl, SP.cols_to_flat(old_cl, M))

@@ -1,0 +1,207 @@
+"""Prune-and-regrow mask evolution: schedule + criteria (SET / RigL).
+
+The paper fixes its parameter masks at init (Sec. 6) — that is what makes
+the live influence-column set static and the combined w~ b~^2 n^2 p cost
+possible.  Dynamic sparse training (SET: Mocanu et al. 2018; RigL: Evci et
+al. 2020, and Menick et al.'s sparse-RTRL line) instead *evolves* the mask:
+periodically prune the smallest-magnitude live weights and regrow the same
+number of dead ones (randomly for SET, by dense-gradient magnitude for
+RigL).  Crucially this composes with EXACT RTRL:
+
+  * a grown weight starts at 0 with zero accumulated influence, so its
+    compact column initializes to 0 with no approximation — the post-event
+    gradients equal a fresh exact-RTRL engine restarted on the new masks;
+  * pruned columns are dropped after their gradient accumulator entries are
+    flushed (rewire fires at update boundaries, where the accumulator was
+    just consumed and reset);
+  * prune count == grow count PER TENSOR, so the live-column count Pc — and
+    with it every compact carry shape — is invariant across events: the
+    jitted step recompiles never, only the carry-borne column maps change
+    (`repro.core.learner` rewirable carries, `repro.sparsity.migrate`).
+
+Everything here is deterministic: per-event keys fold a base key with the
+event index (`RewireSchedule.event_key`), per-tensor draw keys reuse the
+`sparse_rtrl.gate_param_keys` convention, and all selections break ties by
+index with stable sorts — a restarted worker replays identical masks.
+
+Criteria operate on the existing mask Tree format (`make_masks` /
+`mask_counts` / `omega_tilde`), at fine (block=1) or block granularity
+(whole [block x block] tiles pruned/grown, scored by their summed
+magnitude; tensor dims must divide by `block`, as the engines' block masks
+already require).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_rtrl as SP
+
+Tree = Any
+
+_EVENT_SALT = 0x5e7  # separates the rewire key stream from training RNG
+
+
+@dataclasses.dataclass(frozen=True)
+class RewireSchedule:
+    """When and how much to rewire.
+
+    method    'rigl' (gradient-magnitude regrowth) | 'set' (random regrowth)
+    every_k   fire every K optimizer updates (at update boundaries only —
+              the gradient accumulator is empty there, so pruned columns'
+              entries have already been consumed)
+    frac      initial rewired fraction of each tensor's LIVE weights
+    t_end     cosine-decay horizon in EVENTS: fraction(e) follows RigL's
+              frac/2 * (1 + cos(pi e / t_end)), reaching 0 at t_end
+              (None: constant frac — SET's default)
+    block     mask granularity (1 = unstructured; >1 = whole tiles)
+    """
+    method: str = "rigl"
+    every_k: int = 100
+    frac: float = 0.3
+    t_end: int | None = None
+    block: int = 1
+
+    def __post_init__(self):
+        if self.method not in ("rigl", "set"):
+            raise ValueError(f"method must be 'rigl' or 'set', "
+                             f"got {self.method!r}")
+        if self.every_k < 1:
+            raise ValueError("every_k must be >= 1")
+
+    def fires(self, update: int) -> bool:
+        """Does a rewire event fire after optimizer update `update`?"""
+        return update > 0 and update % self.every_k == 0
+
+    def fraction(self, event: int) -> float:
+        """Rewire fraction at event index `event` (cosine-decayed)."""
+        if self.t_end is None or self.t_end <= 0:
+            return self.frac
+        e = min(event, self.t_end)
+        return 0.5 * self.frac * (1.0 + math.cos(math.pi * e / self.t_end))
+
+    @staticmethod
+    def event_key(base_key: jax.Array, event: int) -> jax.Array:
+        """Deterministic per-event key: fold (salt, event index) into the
+        base key.  No wall-clock or global state — restarts replay the
+        identical mask sequence."""
+        return jax.random.fold_in(jax.random.fold_in(base_key, _EVENT_SALT),
+                                  event)
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor prune-and-regrow (count-preserving by construction)
+# ---------------------------------------------------------------------------
+
+def _coarse(x: np.ndarray, block: int) -> np.ndarray:
+    """Sum |x| over [block x block] tiles -> the tile score grid."""
+    r, c = x.shape
+    return np.abs(x).reshape(r // block, block, c // block, block).sum((1, 3))
+
+
+def _expand(coarse: np.ndarray, shape: tuple, block: int) -> np.ndarray:
+    """Replicate a coarse grid back to the fine mask (same indexing rule as
+    `make_masks`' block construction)."""
+    return coarse[np.arange(shape[0]) // block][:, np.arange(shape[1]) // block]
+
+
+def rewire_tensor(mask, param, grad, *, frac: float, key: jax.Array,
+                  method: str = "rigl", block: int = 1) -> jax.Array:
+    """One tensor's prune-and-regrow event.  Returns the new float mask.
+
+    Prunes the k smallest-|param| live units and grows k dead units — by
+    largest |grad| (rigl) or uniformly at random from `key` (set) — with
+    k = min(round(frac * live), dead): the live count NEVER changes, so the
+    flat live-column set downstream keeps its exact size.  Deterministic:
+    stable sorts, ties broken by unit index."""
+    m = np.asarray(mask) > 0
+    p = np.asarray(param, dtype=np.float64)
+    if block > 1:
+        if any(s % block for s in m.shape):
+            raise ValueError(
+                f"block={block} rewire needs tensor dims divisible by the "
+                f"block (got {m.shape}); draw the mask at a dividing block")
+        mc = m[::block, ::block]
+        if not np.array_equal(m, _expand(mc, m.shape, block)):
+            # a corner-sampled coarse grid would silently rewrite the mask
+            # block-constant and change the fine live count
+            raise ValueError(
+                f"block={block} rewire needs a block-constant mask (draw it "
+                f"with make_masks(block={block}), or rewire with block=1)")
+        sp = _coarse(p, block)
+    else:
+        mc, sp = m, np.abs(p)
+    live = mc.reshape(-1)
+    n_live, n_dead = int(live.sum()), int((~live).sum())
+    k = min(int(round(frac * n_live)), n_dead, n_live)
+    if k <= 0:
+        return jnp.asarray(np.asarray(mask, np.float32))
+    # prune: k smallest-magnitude live units (dead -> +inf, never picked)
+    prune_score = np.where(live, sp.reshape(-1), np.inf)
+    pruned = np.argsort(prune_score, kind="stable")[:k]
+    # grow: k best dead units (live -> -inf, never picked)
+    if method == "rigl":
+        if grad is None:
+            raise ValueError("method='rigl' needs a dense gradient to score "
+                             "regrowth; pass grad or use method='set'")
+        gs = _coarse(np.asarray(grad, np.float64), block) if block > 1 \
+            else np.abs(np.asarray(grad, np.float64))
+    elif method == "set":
+        gs = np.asarray(jax.random.uniform(key, mc.shape), np.float64)
+    else:
+        raise ValueError(f"unknown rewire method {method!r}")
+    grow_score = np.where(live, -np.inf, gs.reshape(-1))
+    grown = np.argsort(-grow_score, kind="stable")[:k]
+    new = live.copy()
+    new[pruned] = False
+    new[grown] = True
+    assert int(new.sum()) == n_live          # count-preserving, always
+    newc = new.reshape(mc.shape)
+    fine = _expand(newc, m.shape, block) if block > 1 else newc
+    return jnp.asarray(fine.astype(np.float32))
+
+
+def rewire_masks(masks: Tree, w: Tree, grads: Tree | None = None, *,
+                 frac: float, key: jax.Array, method: str = "rigl",
+                 block: int = 1) -> Tree:
+    """One mask tree's prune-and-regrow event (single layer).
+
+    masks: the `make_masks` Tree; w: the matching recurrent parameter tree
+    ({gate: {W, R, b}, theta}); grads: same structure (dense one-step
+    scores) for 'rigl', ignored for 'set'.  Only the maskable tensors (each
+    gate's W and R — the `mask_counts` rule) are touched; b/theta/out masks
+    pass through.  Per-tensor draw keys come from the SAME
+    `gate_param_keys` convention `make_masks` uses, applied to the per-event
+    key."""
+    gates = tuple(g for g in masks
+                  if g not in ("out", "theta") and masks[g] is not None)
+    keys = SP.gate_param_keys(key, gates)
+    new = {}
+    for g, sub in masks.items():
+        if g in ("out", "theta") or sub is None:
+            new[g] = sub
+            continue
+        new[g] = dict(sub)
+        for t in ("W", "R"):
+            gt = None if grads is None else grads[g][t]
+            new[g][t] = rewire_tensor(sub[t], w[g][t], gt, frac=frac,
+                                      key=keys[g][t], method=method,
+                                      block=block)
+    return new
+
+
+def rewire_stacked_masks(masks: list, ws: list, grads: list | None = None, *,
+                         frac: float, key: jax.Array, method: str = "rigl",
+                         block: int = 1) -> list:
+    """Per-layer rewire of a stacked mask list; layer l folds l into the
+    event key — the same per-layer convention as `make_stacked_masks`."""
+    return [rewire_masks(masks[l], ws[l],
+                         None if grads is None else grads[l],
+                         frac=frac, key=jax.random.fold_in(key, l),
+                         method=method, block=block)
+            for l in range(len(masks))]

@@ -1,0 +1,669 @@
+"""Dynamic sparsity: prune-and-regrow rewire events with EXACT carry
+migration (repro.sparsity + Learner.rewire + OnlineTrainer rewire_schedule).
+
+The contract under test:
+
+  * ColLayout remap invariants — `migrate_influence(cl, cl, M) == M`,
+    migration == the "rebuild from scattered flat" oracle bit-for-bit, and
+    prune -> grow -> prune round trips carry surviving columns bit-for-bit;
+  * criteria invariants — per-tensor live counts (and hence Pc and every
+    carry shape) are preserved, block-granular rewire keeps tiles intact;
+  * grown-column exactness — after a rewire event, the learner's gradients
+    equal a FRESH masked-dense engine initialized on the new masks with the
+    migrated influence scattered back (grow-at-zero => zero influence is
+    the exact restart value), across sparse backends x col_compact, stacked
+    L in {1, 2}, and the scaled (incl. sharded-carry) engine;
+  * determinism — mid-stream rewire + injected-failure restart resumes to
+    identical masks and params.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparsity as DS
+from repro.core import cells, stacked_rtrl as ST, sparse_rtrl as SP
+from repro.core.cells import EGRUConfig
+from repro.core.learner import LearnerSpec, make_learner
+from repro.sparsity import RewireSchedule
+
+
+def _setup(kind="gru", sparsity=0.5, seed=0, n=10, T=8, B=3, n_in=4):
+    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=2, kind=kind)
+    params = cells.init_params(cfg, jax.random.key(seed))
+    masks = SP.make_masks(cfg, jax.random.key(seed + 7), sparsity)
+    params = SP.apply_masks(params, masks)
+    xs = jax.random.normal(jax.random.key(seed + 1), (T, B, n_in))
+    labels = jnp.array([i % 2 for i in range(B)])
+    return cfg, params, masks, xs, labels
+
+
+# ---------------------------------------------------------------------------
+# ColLayout remap invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["rnn", "gru"])
+def test_migrate_identity(kind):
+    """migrate_influence(cl, cl, M) == M, bitwise."""
+    cfg = EGRUConfig(n_hidden=12, n_in=4, kind=kind)
+    layout = SP.flat_layout(cfg)
+    masks = SP.make_masks(cfg, jax.random.key(0), 0.6)
+    cl = SP.col_layout(layout, masks)
+    M = jax.random.normal(jax.random.key(1), (2, 5, cl.Pc_pad)) * cl.live
+    np.testing.assert_array_equal(
+        np.asarray(DS.migrate_influence(cl, cl, M)), np.asarray(M))
+
+
+@pytest.mark.parametrize("kind", ["rnn", "gru"])
+def test_migrate_matches_scattered_flat_oracle(kind):
+    """The compact gather equals scatter-to-flat + re-gather, bit-for-bit —
+    without ever materializing the [.., P_pad] buffer.  Uses a real
+    prune-and-regrow mask pair so both directions (pruned and grown
+    columns) are exercised."""
+    cfg = EGRUConfig(n_hidden=12, n_in=4, kind=kind)
+    layout = SP.flat_layout(cfg)
+    masks = SP.make_masks(cfg, jax.random.key(0), 0.6)
+    params = SP.apply_masks(cells.init_params(cfg, jax.random.key(1)), masks)
+    new_masks = DS.rewire_masks(masks, cells.rec_param_tree(params),
+                                frac=0.4, key=jax.random.key(2),
+                                method="set")
+    cl_old = SP.col_layout(layout, masks)
+    cl_new = SP.col_layout(layout, new_masks)
+    assert cl_new.Pc == cl_old.Pc                 # count-preserving
+    M = jax.random.normal(jax.random.key(3), (2, 6, cl_old.Pc_pad)) \
+        * cl_old.live
+    got = DS.migrate_influence(cl_old, cl_new, M)
+    oracle = DS.migrate_via_flat(cl_old, cl_new, M)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+    # grown columns come back exactly zero
+    surv = np.asarray(DS.migration_plan(cl_old, cl_new)[1])
+    grown = (np.asarray(cl_new.live) > 0) & (surv == 0)
+    assert grown.any()
+    assert np.all(np.asarray(got)[..., grown] == 0.0)
+
+
+def test_migrate_stacked_shared_axis():
+    """One plan remaps every layer's buffer of the shared stacked compact
+    axis, matching the scattered-flat oracle bitwise."""
+    cfg = cells.stacked_config(EGRUConfig(n_hidden=8, n_in=3, kind="gru"), 2)
+    slayout = ST.stacked_layout(cfg)
+    masks = ST.make_stacked_masks(cfg, jax.random.key(0), 0.5)
+    params = ST.apply_stacked_masks(
+        cells.init_stacked_params(cfg, jax.random.key(1)), masks)
+    new_masks = DS.rewire_stacked_masks(masks, params["layers"], frac=0.4,
+                                        key=jax.random.key(2), method="set")
+    cl_old = ST.stacked_col_layout(slayout, masks)
+    cl_new = ST.stacked_col_layout(slayout, new_masks)
+    plan = DS.migration_plan(cl_old, cl_new)
+    for l in range(2):
+        M = jax.random.normal(jax.random.key(3 + l), (2, 4, cl_old.Pc_pad)) \
+            * cl_old.live
+        np.testing.assert_array_equal(
+            np.asarray(DS.migrate_influence(cl_old, cl_new, M, plan=plan)),
+            np.asarray(DS.migrate_via_flat(cl_old, cl_new, M)))
+
+
+def test_prune_grow_prune_roundtrip_bitwise():
+    """Across a chain of rewire events, columns that survive EVERY event
+    carry their values bit-for-bit (composition of exact gathers)."""
+    cfg = EGRUConfig(n_hidden=10, n_in=4, kind="gru")
+    layout = SP.flat_layout(cfg)
+    masks = SP.make_masks(cfg, jax.random.key(0), 0.5)
+    params = SP.apply_masks(cells.init_params(cfg, jax.random.key(1)), masks)
+    w = cells.rec_param_tree(params)
+    cl0 = SP.col_layout(layout, masks)
+    M = jax.random.normal(jax.random.key(9), (2, 4, cl0.Pc_pad)) * cl0.live
+    cls, Ms, cur_masks, cur_M, cur_cl = [cl0], [M], masks, M, cl0
+    for e in range(3):
+        cur_masks = DS.rewire_masks(cur_masks, w, frac=0.3,
+                                    key=jax.random.key(20 + e), method="set")
+        nxt = SP.col_layout(layout, cur_masks)
+        cur_M = DS.migrate_influence(cur_cl, nxt, cur_M)
+        cur_cl = nxt
+        cls.append(nxt)
+        Ms.append(cur_M)
+    # columns live in EVERY layout: value at the end == value at the start
+    src0 = {int(s) for s, lv in zip(np.asarray(cls[0].src),
+                                    np.asarray(cls[0].live)) if lv > 0}
+    alive = src0.intersection(*(
+        {int(s) for s, lv in zip(np.asarray(c.src), np.asarray(c.live))
+         if lv > 0} for c in cls[1:]))
+    assert alive                                     # bias columns always survive
+    flat_first = np.asarray(SP.cols_to_flat(cls[0], Ms[0]))
+    flat_last = np.asarray(SP.cols_to_flat(cls[-1], Ms[-1]))
+    for s in alive:
+        np.testing.assert_array_equal(flat_last[..., s], flat_first[..., s])
+
+
+# ---------------------------------------------------------------------------
+# Criteria invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["set", "rigl"])
+@pytest.mark.parametrize("block", [1, 4])
+def test_rewire_masks_preserve_counts_and_blocks(method, block):
+    """Per-tensor live counts are invariant (=> Pc invariant) and block
+    granularity is preserved; rewiring actually moves entries."""
+    cfg = EGRUConfig(n_hidden=16, n_in=8, kind="gru")
+    masks = SP.make_masks(cfg, jax.random.key(0), 0.5, block=block)
+    params = SP.apply_masks(cells.init_params(cfg, jax.random.key(1)), masks)
+    w = cells.rec_param_tree(params)
+    grads = jax.tree.map(lambda x: x + 1.0, w)       # arbitrary dense scores
+    new = DS.rewire_masks(masks, w, grads, frac=0.4,
+                          key=jax.random.key(3), method=method, block=block)
+    moved = 0.0
+    for g in ("u", "r", "z"):
+        for t in ("W", "R"):
+            old_t, new_t = np.asarray(masks[g][t]), np.asarray(new[g][t])
+            assert old_t.sum() == new_t.sum(), (g, t)
+            moved += np.abs(old_t - new_t).sum()
+            if block > 1:
+                r, c = new_t.shape
+                tiles = new_t.reshape(r // block, block, c // block, block)
+                assert (tiles.min((1, 3)) == tiles.max((1, 3))).all()
+    assert moved > 0
+    np.testing.assert_allclose(float(SP.omega_tilde(new)),
+                               float(SP.omega_tilde(masks)))
+    layout = SP.flat_layout(cfg)
+    assert SP.col_layout(layout, new).Pc == SP.col_layout(layout, masks).Pc
+
+
+def test_block_rewire_rejects_non_block_constant_mask():
+    """Rewiring an unstructured mask at block granularity would silently
+    rewrite it block-constant and change the live count — refused."""
+    cfg = EGRUConfig(n_hidden=16, n_in=8, kind="gru")
+    masks = SP.make_masks(cfg, jax.random.key(0), 0.5, block=1)
+    params = SP.apply_masks(cells.init_params(cfg, jax.random.key(1)), masks)
+    with pytest.raises(ValueError, match="block-constant"):
+        DS.rewire_masks(masks, cells.rec_param_tree(params), frac=0.3,
+                        key=jax.random.key(2), method="set", block=4)
+
+
+def test_rewire_is_deterministic_per_event_key():
+    """Same (state, event key) -> identical masks; different event index ->
+    a different draw (the fold-in convention)."""
+    cfg, params, masks, _, _ = _setup()
+    w = cells.rec_param_tree(params)
+    base = jax.random.key(5)
+    k0 = RewireSchedule.event_key(base, 0)
+    a = DS.rewire_masks(masks, w, frac=0.4, key=k0, method="set")
+    b = DS.rewire_masks(masks, w, frac=0.4, key=k0, method="set")
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = DS.rewire_masks(masks, w, frac=0.4,
+                        key=RewireSchedule.event_key(base, 1), method="set")
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(c)))
+
+
+def test_schedule_cosine_decay_and_cadence():
+    sch = RewireSchedule(method="rigl", every_k=10, frac=0.4, t_end=8)
+    assert not sch.fires(0) and not sch.fires(5)
+    assert sch.fires(10) and sch.fires(20)
+    fr = [sch.fraction(e) for e in range(9)]
+    assert fr[0] == pytest.approx(0.4)
+    assert all(a >= b for a, b in zip(fr, fr[1:]))
+    assert fr[8] == pytest.approx(0.0)
+    assert sch.fraction(100) == pytest.approx(0.0)   # clamped past t_end
+    assert RewireSchedule(every_k=5, frac=0.2).fraction(7) == 0.2
+
+
+def test_make_masks_key_convention_is_reusable():
+    """`gate_param_keys` IS the split make_masks consumes — drawing with the
+    helper's keys reproduces the mask draw (the documented rewire-reuse
+    convention)."""
+    cfg = EGRUConfig(n_hidden=12, n_in=5, kind="gru")
+    key = jax.random.key(3)
+    masks = SP.make_masks(cfg, key, 0.6)
+    keys = SP.gate_param_keys(key, SP.mask_gates(cfg.kind))
+    for g in ("u", "r", "z"):
+        ref = (jax.random.uniform(keys[g]["R"], (12, 12)) >= 0.6)
+        np.testing.assert_array_equal(np.asarray(masks[g]["R"]),
+                                      np.asarray(ref.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Grown-column exactness: rewired learner == restarted masked-dense engine
+# ---------------------------------------------------------------------------
+
+def _flat_to_gate_dict(cfg, layout, Mflat):
+    """[B, n, P_pad] flat influence -> the masked-dense per-gate dict."""
+    n, m = layout.n, layout.m
+    B = Mflat.shape[0]
+    out = {}
+    for i, g in enumerate(layout.gates):
+        out[g] = Mflat[..., i * n * m:(i + 1) * n * m].reshape(B, n, n, m)
+    if cfg.kind == "rnn":
+        return out
+    out["theta"] = Mflat[..., layout.theta_offset:layout.theta_offset + n]
+    return out
+
+
+def _gate_dict_to_flat(cfg, layout, M):
+    """Masked-dense per-gate dict -> [B, n, P_pad] flat influence."""
+    n, m = layout.n, layout.m
+    B = next(iter(M.values())).shape[0]
+    blocks = [M[g].reshape(B, n, n * m) for g in layout.gates]
+    if cfg.kind != "rnn":
+        blocks.append(M["theta"])
+    flat = jnp.concatenate(blocks, axis=-1)
+    return jnp.pad(flat, ((0, 0), (0, 0), (0, layout.P_pad - layout.P)))
+
+
+def _scatter_rows(vals, idx, n):
+    """Row-compact [B, K, P] + idx -> full [B, n, P]."""
+    B, K, P = vals.shape
+    out = jnp.zeros((B, n + 1, P), vals.dtype)
+    safe = jnp.where(idx < 0, n, idx)
+    return out.at[jnp.arange(B)[:, None], safe].set(vals)[:, :n]
+
+
+def _carry_flat_influence(learner, carry):
+    """The carry's influence scattered back to the full flat axis."""
+    cl = learner._cl_view(carry.get("rw"))
+    if "M" in carry:                                 # pallas full rows
+        M = carry["M"]
+        return SP.cols_to_flat(cl, M) if cl is not None else M
+    vals = carry["vals"]
+    if cl is not None:
+        vals = SP.cols_to_flat(cl, vals)
+    return _scatter_rows(vals, carry["idx"], learner.cfg.n_hidden)
+
+
+def _run_rewired(spec, params, masks, xs, labels, t_split, event_key,
+                 method="rigl", frac=0.4):
+    """Drive a rewirable learner: t_split steps, reset (update boundary),
+    rewire, remaining steps.  Returns (learner, carry_after_rewire, grads)."""
+    learner = make_learner(spec)
+    carry = learner.init(params, masks, (xs[0], labels),
+                         t_total=float(xs.shape[0]))
+    for t in range(t_split):
+        carry, _ = learner.step(carry, xs[t], labels)
+    carry = learner.reset_grads(carry)
+    carry = learner.rewire(carry, event_key, frac=frac, method=method)
+    mid = carry
+    for t in range(t_split, xs.shape[0]):
+        carry, _ = learner.step(carry, xs[t], labels)
+    return learner, mid, learner.grads(carry)
+
+
+@pytest.mark.parametrize("backend,col", [("dense", None), ("pallas", False),
+                                         ("pallas", True),
+                                         ("compact", False),
+                                         ("compact", True)])
+@pytest.mark.parametrize("method", ["rigl", "set"])
+def test_rewire_grads_match_restarted_dense_oracle(backend, col, method):
+    """Post-rewire gradients == a FRESH masked-dense engine initialized on
+    the new masks with the migrated influence scattered back to flat (the
+    grow-at-zero exactness claim), for every backend x col_compact."""
+    cfg, params, masks, xs, labels = _setup(T=8)
+    t_split = 4
+    spec = LearnerSpec(engine="sparse", cfg=cfg, backend=backend,
+                       interpret=True, col_compact=col, rewirable=True)
+    learner, mid, grads = _run_rewired(spec, params, masks, xs, labels,
+                                       t_split, jax.random.key(42),
+                                       method=method)
+    new_masks = mid["rw"]["masks"]
+    # --- restart oracle: fresh masked-dense learner on the new masks ------
+    oracle = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                      backend="dense"))
+    oc = oracle.init(mid["params"], new_masks, (xs[0], labels),
+                     t_total=float(xs.shape[0]))
+    oc["a"] = mid["a"]
+    oc["beta_prev"] = mid["beta_prev"]
+    if backend == "dense":
+        oc["M"] = mid["M"]
+    else:
+        layout = SP.flat_layout(cfg)
+        oc["M"] = _flat_to_gate_dict(cfg, layout,
+                                     _carry_flat_influence(learner, mid))
+    for t in range(t_split, xs.shape[0]):
+        oc, _ = oracle.step(oc, xs[t], labels)
+    g_ref = oracle.grads(oc)
+    if backend == "dense":                           # same representation:
+        for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(grads)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:
+        for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(grads)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+    # grown weights were exactly zero at the event
+    for g in ("u", "r", "z"):
+        for t in ("W", "R"):
+            grown = (np.asarray(new_masks[g][t]) > 0) \
+                & (np.asarray(masks[g][t]) == 0)
+            assert np.all(np.asarray(mid["params"][g][t])[grown] == 0.0)
+
+
+@pytest.mark.parametrize("L", [1, 2])
+@pytest.mark.parametrize("backend,col", [("dense", None),
+                                         ("compact", True)])
+def test_rewire_stacked_matches_dense_restart(L, backend, col):
+    """Stacked rewire (L=1 delegation and the L=2 block engine): post-event
+    grads equal a fresh stacked masked-dense engine restarted on the new
+    masks with the migrated influence scattered back."""
+    cfg, _, _, xs, labels = _setup(T=8)
+    scfg = cells.stacked_config(cfg, L)
+    params = cells.init_stacked_params(scfg, jax.random.key(0))
+    masks = ST.make_stacked_masks(scfg, jax.random.key(7), 0.5)
+    params = ST.apply_stacked_masks(params, masks)
+    t_split = 4
+    spec = LearnerSpec(engine="stacked", cfg=scfg, backend=backend,
+                       interpret=True, col_compact=col, rewirable=True)
+    learner, mid, grads = _run_rewired(spec, params, masks, xs, labels,
+                                       t_split, jax.random.key(42))
+    # fresh rewirable-shaped DENSE stacked learner on the new masks
+    oracle = make_learner(LearnerSpec(engine="stacked", cfg=scfg,
+                                      backend="dense", rewirable=True,
+                                      delegate_single_layer=False))
+    new_masks = learner.opt_mask_of(mid)["layers"]
+    oc = oracle.init(learner.params_of(mid), new_masks, (xs[0], labels),
+                     t_total=float(xs.shape[0]))
+    if L == 1:                       # delegated carries are single-layer
+        oc["a"] = (mid["a"],)
+        oc["beta_prev"] = mid["beta_prev"][None] \
+            if np.asarray(mid["beta_prev"]).ndim == 0 else mid["beta_prev"]
+    else:
+        oc["a"] = mid["a"]
+        oc["beta_prev"] = mid["beta_prev"]
+    # scatter each layer's migrated influence back to the stacked flat axis
+    slayout = ST.stacked_layout(scfg)
+    if L == 1:
+        lay0 = SP.flat_layout(scfg.layer_cfg(0))
+        if backend == "dense":
+            flat = _gate_dict_to_flat(scfg.layer_cfg(0), lay0, mid["M"])
+        else:
+            flat = _carry_flat_influence(learner.inner, mid)
+        oc["M"] = (jnp.pad(flat, ((0, 0), (0, 0),
+                                  (0, slayout.P_pad - flat.shape[-1]))),)
+    else:
+        cl = learner._cl_view(mid.get("rw"))
+        Ms = []
+        for l in range(L):
+            if backend == "dense":
+                Ms.append(mid["M"][l])
+            else:
+                vals = mid["vals"][l]
+                if cl is not None:
+                    vals = SP.cols_to_flat(cl, vals)
+                Ms.append(_scatter_rows(vals, mid["idx"][l],
+                                        scfg.layer_sizes[l]))
+        oc["M"] = tuple(Ms)
+    for t in range(t_split, xs.shape[0]):
+        oc, _ = oracle.step(oc, xs[t], labels)
+    g_ref = oracle.grads(oc)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_rewire_scaled_matches_restarted_engine(stacked):
+    """Scaled dual-compact rewire: continuing the rewired carry equals a
+    FRESH scaled engine built on the new masks with the migrated state
+    injected — bitwise (same step code, same values)."""
+    from repro.core import scaled_rtrl as SR
+    cfg = SR.ScaledRTRLConfig(n=16, n_in=4, n_out=2, batch=2,
+                              n_layers=2 if stacked else 1,
+                              beta_capacity=1.0, sparsity=0.5, mask_block=2)
+    params, masks = SR.init_params(cfg, jax.random.key(0))
+    xs = jax.random.normal(jax.random.key(1), (8, cfg.batch, cfg.n_in))
+    labels = jnp.array([i % 2 for i in range(cfg.batch)])
+    spec = LearnerSpec(engine="scaled", cfg=cfg, col_compact=True,
+                       rewirable=True)
+    learner, mid, grads = _run_rewired(spec, params, masks, xs, labels, 4,
+                                       jax.random.key(42), method="set",
+                                       frac=0.5)
+    # overflow-free run => exact
+    fresh = make_learner(LearnerSpec(engine="scaled", cfg=cfg,
+                                     col_compact=True))
+    new_masks = mid["rw"]["masks"]
+    new_masks = list(new_masks) if stacked else new_masks
+    fc = fresh.init(mid["params"], new_masks, (xs[0], labels),
+                    t_total=float(xs.shape[0]))
+    fc["state"] = mid["state"]
+    c2 = mid
+    for t in range(4, 8):
+        c2, _ = learner.step(c2, xs[t], labels)
+        fc, _ = fresh.step(fc, xs[t], labels)
+    for a, b in zip(jax.tree.leaves(fresh.grads(fc)),
+                    jax.tree.leaves(grads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rewire_scaled_migration_correct_under_sharding():
+    """The migration gather produces identical values on a model-sharded
+    carry (the once-per-event remap is shard-safe)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import scaled_rtrl as SR
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    cfg = SR.ScaledRTRLConfig(n=32, n_in=8, batch=2, beta_capacity=0.5,
+                              sparsity=0.8, mask_block=8)
+    params, masks = SR.init_params(cfg, jax.random.key(0))
+    new_masks = DS.rewire_masks(masks, cells.rec_param_tree(params),
+                                frac=0.3, key=jax.random.key(4),
+                                method="set", block=cfg.mask_block)
+    cl_old, cl_new = cfg.col_layout(masks), cfg.col_layout(new_masks)
+    vals = jax.random.normal(jax.random.key(5),
+                             (cfg.batch, cfg.K, cl_old.Pc_pad)) * cl_old.live
+    ref = DS.migrate_influence(cl_old, cl_new, vals)
+    sh = NamedSharding(mesh, P("data", None, "model"))
+    vals_sh = jax.device_put(vals, sh)
+    plan = DS.migration_plan(cl_old, cl_new)
+    got = jax.jit(lambda v: DS.migrate_influence(cl_old, cl_new, v,
+                                                 plan=plan))(vals_sh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_rewire_requires_rewirable_and_is_error_elsewhere():
+    """Non-rewirable learners and non-sparse engines fail loudly, never
+    silently no-op."""
+    cfg, params, masks, xs, labels = _setup()
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact"))
+    carry = learner.init(params, masks, (xs[0], labels))
+    with pytest.raises(NotImplementedError, match="rewirable"):
+        learner.rewire(carry, jax.random.key(0))
+    for engine, ecfg in (("snap", cfg), ("bptt", cfg)):
+        lr = make_learner(LearnerSpec(engine=engine, cfg=ecfg))
+        with pytest.raises(NotImplementedError, match="sparse"):
+            lr.rewire({}, jax.random.key(0))
+    with pytest.raises(ValueError, match="masks"):
+        make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                 backend="compact", rewirable=True)) \
+            .init(params, None, (xs[0], labels))
+
+
+# ---------------------------------------------------------------------------
+# Online trainer integration: schedule, checkpointed masks, restart
+# ---------------------------------------------------------------------------
+
+def _rewire_trainer_factory(tmp_path, fail_at=-1, total_steps=30,
+                            update_every=3, method="rigl"):
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import masked_dynamic
+    from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
+    cfg = EGRUConfig(n_hidden=8, n_in=3, n_out=2, kind="gru")
+    masks = SP.make_masks(cfg, jax.random.key(7), 0.5)
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact", col_compact=True,
+                                       rewirable=True))
+    opt_mask = dict(masks)
+    opt = masked_dynamic(make_optimizer("adamw", lr=1e-2), opt_mask)
+    sched = RewireSchedule(method=method, every_k=3, frac=0.3, t_end=4)
+
+    def stream(step):
+        key = jax.random.key(1000 + step % 20)
+        x = np.asarray(jax.random.normal(key, (4, 3)))
+        y = np.asarray(jnp.arange(4) % 2, dtype=np.int32)
+        return x, y
+
+    def make_trainer(attempt=0):
+        params = SP.apply_masks(cells.init_params(cfg, jax.random.key(0)),
+                                masks)
+        ocfg = OnlineTrainerConfig(
+            total_steps=total_steps, update_every=update_every,
+            ckpt_every=2, ckpt_dir=str(tmp_path), log_every=1,
+            fail_at_update=fail_at if attempt == 0 else -1)
+        return OnlineTrainer(ocfg, learner, opt, params, masks, stream,
+                             rewire_schedule=sched)
+
+    return make_trainer
+
+
+def test_online_rewire_restart_resumes_identical_masks(tmp_path):
+    """Crash BETWEEN rewire events (update 7: events at 3 and 6 already
+    fired), restart, resume: final masks AND params identical to an
+    uninterrupted run — mask state checkpoints with the carry, the event
+    counter with the trainer, and per-event keys are deterministic."""
+    from repro.checkpoint import load_checkpoint
+    from repro.runtime.trainer import run_with_restart
+    out_a = run_with_restart(
+        _rewire_trainer_factory(tmp_path / "a", fail_at=7))
+    assert out_a["restarts"] == 1
+    out_b = run_with_restart(
+        _rewire_trainer_factory(tmp_path / "b", fail_at=-1))
+    assert out_a["rewire_events"] == out_b["rewire_events"] >= 2
+    mk = _rewire_trainer_factory(tmp_path / "like")
+    like = mk()._ckpt_tree()
+    ta, _ = load_checkpoint(tmp_path / "a", like)
+    tb, _ = load_checkpoint(tmp_path / "b", like)
+    for a, b in zip(jax.tree.leaves(ta["carry"]),
+                    jax.tree.leaves(tb["carry"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(ta["rewire_events"]) == int(tb["rewire_events"])
+
+
+def test_online_rewire_keeps_chunk_compiled_and_masks_move(tmp_path):
+    """Rewire events change the masks (density preserved) without ever
+    recompiling the update chunk, and the trainer reports the LIVE carry
+    footprint (consolidated costs accounting)."""
+    mk = _rewire_trainer_factory(tmp_path, total_steps=30)
+    t = mk()
+    m0 = jax.tree.map(np.asarray, t.carry["rw"]["masks"])
+    out = t.run()
+    assert out["rewire_events"] >= 2
+    m1 = t.carry["rw"]["masks"]
+    assert any(not np.array_equal(a, np.asarray(b))
+               for a, b in zip(jax.tree.leaves(m0), jax.tree.leaves(m1)))
+    np.testing.assert_allclose(float(SP.omega_tilde(m1)),
+                               float(SP.omega_tilde(m0)))
+    # one compiled chunk served the whole run, rewires included
+    assert t._chunk._cache_size() == 1
+    fp = t.carry_nbytes()
+    assert fp["live"] < fp["alloc"]
+    assert 0.0 < fp["col_density"] < 1.0
+    # live bytes price the vals buffer at Pc_live instead of Pc_pad
+    from repro.core.costs import carry_footprint
+    vals = t.carry["vals"]
+    n_cols = vals.shape[-1]
+    n_live = int(np.asarray(t.carry["rw"]["cl"]["live"]).sum())
+    delta = carry_footprint(1, vals.size // n_cols, n_cols, n_live)
+    assert fp["alloc"] - fp["live"] == (delta["alloc_bytes"]
+                                        - delta["live_bytes"])
+
+
+def test_online_rewire_requires_dynamic_masked_opt(tmp_path):
+    """A closure-masked optimizer cannot follow rewire events (stale
+    moments would un-pin pruned weights) — the trainer refuses it."""
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import masked
+    from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
+    cfg = EGRUConfig(n_hidden=8, n_in=3, n_out=2, kind="gru")
+    masks = SP.make_masks(cfg, jax.random.key(7), 0.5)
+    params = SP.apply_masks(cells.init_params(cfg, jax.random.key(0)), masks)
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact", rewirable=True))
+    opt = masked(make_optimizer("adamw", lr=1e-2), dict(masks))
+    stream = lambda t: (np.zeros((4, 3), np.float32),
+                        np.zeros((4,), np.int32))
+    with pytest.raises(ValueError, match="masked_dynamic"):
+        OnlineTrainer(OnlineTrainerConfig(ckpt_every=0), learner, opt,
+                      params, masks, stream,
+                      rewire_schedule=RewireSchedule(every_k=3))
+    # ... and a non-rewirable learner fails at CONSTRUCTION, not at the
+    # first event deep into a run
+    plain = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                     backend="compact"))
+    from repro.optim.optimizers import masked_dynamic
+    dopt = masked_dynamic(make_optimizer("adamw", lr=1e-2), dict(masks))
+    with pytest.raises(ValueError, match="rewirable"):
+        OnlineTrainer(OnlineTrainerConfig(ckpt_every=0), plain, dopt,
+                      params, masks, stream,
+                      rewire_schedule=RewireSchedule(every_k=3))
+
+
+def test_carry_nbytes_prices_stacked_layers_individually():
+    """Stacked live-footprint accounting: layer l's buffer is priced at the
+    <= l share of the shared compact axis (its j > l columns are
+    structurally zero), not at the total live count."""
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import masked_dynamic
+    from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
+    from repro.core.costs import carry_footprint
+    cfg = EGRUConfig(n_hidden=8, n_in=3, n_out=2, kind="gru")
+    scfg = cells.stacked_config(cfg, 2)
+    masks = ST.make_stacked_masks(scfg, jax.random.key(7), 0.5)
+    params = ST.apply_stacked_masks(
+        cells.init_stacked_params(scfg, jax.random.key(0)), masks)
+    learner = make_learner(LearnerSpec(engine="stacked", cfg=scfg,
+                                       backend="compact", col_compact=True,
+                                       rewirable=True))
+    opt = masked_dynamic(make_optimizer("adamw", lr=1e-2),
+                         {"layers": masks, "out": None})
+    stream = lambda t: (np.zeros((4, 3), np.float32),
+                        np.zeros((4,), np.int32))
+    t = OnlineTrainer(OnlineTrainerConfig(ckpt_every=0), learner, opt,
+                      params, masks, stream,
+                      rewire_schedule=RewireSchedule(every_k=3))
+    fp = t.carry_nbytes()
+    live_v = np.asarray(t.carry["rw"]["cl"]["live"])
+    layer_v = np.asarray(t.carry["rw"]["cl"]["layer"])
+    n_cols = live_v.shape[-1]
+    expect = fp["alloc"]
+    for l, b in enumerate(t.carry["vals"]):
+        nl = int((live_v * (layer_v <= l)).sum())
+        d = carry_footprint(1, b.size // n_cols, n_cols, nl)
+        expect += d["live_bytes"] - d["alloc_bytes"]
+    assert fp["live"] == expect
+    # strictly tighter than pricing every layer at the full live count
+    nl_all = int(live_v.sum())
+    loose = fp["alloc"] + sum(
+        carry_footprint(1, b.size // n_cols, n_cols, nl_all)["live_bytes"]
+        - carry_footprint(1, b.size // n_cols, n_cols, nl_all)["alloc_bytes"]
+        for b in t.carry["vals"])
+    assert fp["live"] < loose
+
+
+@pytest.mark.slow
+def test_rigl_rewire_beats_fixed_random_mask_on_spiral():
+    """End-to-end acceptance: an --online --rewire rigl spiral run reaches a
+    loss <= the fixed-random-mask run at equal density (omega~ = 0.1) in the
+    same step budget."""
+    import subprocess
+    import sys
+    import json
+    import os
+    import tempfile
+
+    def run(extra, tag):
+        with tempfile.TemporaryDirectory() as d:
+            mpath = os.path.join(d, "m.jsonl")
+            cmd = [sys.executable, "-m", "repro.launch.train",
+                   "--arch", "egru-spiral", "--online", "--steps", "60",
+                   "--update-every", "8", "--rtrl-backend", "compact",
+                   "--sparsity", "0.9", "--seed", "1",
+                   "--ckpt-dir", os.path.join(d, "ck"), "--ckpt-every", "0",
+                   "--metrics", mpath] + extra
+            env = dict(os.environ)
+            env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+            subprocess.run(cmd, check=True, env=env, cwd=os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))))
+            recs = [json.loads(line) for line in open(mpath)]
+            tail = [r["loss"] for r in recs[-3:]]
+            return float(np.mean(tail))
+
+    loss_fixed = run([], "fixed")
+    loss_rigl = run(["--rewire", "rigl", "--rewire-every", "5",
+                     "--rewire-frac", "0.3"], "rigl")
+    assert loss_rigl <= loss_fixed + 1e-6, (loss_rigl, loss_fixed)
