@@ -73,6 +73,8 @@ def run(rows: list):
     dual_compact_step_bench(rows, n=96, beta=0.8, omega=0.9, reps=2)
     rewire_bench(rows, n=96, beta=0.8, omega=0.9, reps=3, events=3,
                  budget=0.15)      # shared-runner smoke: loose budget
+    guard_overhead_bench(rows, n=96, beta=0.8, omega=0.9, reps=5,
+                         budget=0.25)   # shared-runner smoke: loose budget
     return rows
 
 
@@ -446,6 +448,93 @@ def rewire_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9, batch=1,
     return rec
 
 
+def guard_overhead_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9,
+                         batch=1, block=8, margin=1.25, k=8, reps=20,
+                         ring=4, budget=0.05) -> dict:
+    """Steady-state cost of the StreamGuard (repro.runtime.guard) on the
+    online update path: one guarded window (fused health bitmask + clip
+    factor in the jitted chunk, host-side detector readback, known-good
+    ring snapshot push) vs the unguarded `online_update_chunk` + loss
+    readback, at update_every=k on the dual-compact learner.
+
+    The healthy guarded path is bit-identical in results (clip=+inf is
+    exactly factor 1.0); this bench prices its latency and asserts the
+    overhead stays under `budget` (default 5% — the acceptance bar).
+    Min-of-samples timing, same noise posture as rewire_bench."""
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.optim import make_optimizer
+    from repro.runtime.guard import (GuardConfig, StreamGuard,
+                                     guarded_update_chunk)
+    from repro.runtime.online import online_update_chunk
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, n_in, omega, batch, block, margin)
+    y = jnp.zeros((batch,), jnp.int32)
+    learner = make_learner(LearnerSpec(
+        engine="sparse", cfg=cfg, backend="compact", capacity=K / n,
+        col_compact=True))
+    opt = make_optimizer("adamw", lr=1e-3)
+    carry = learner.init(params, masks, (x, y), t_total=float(k))
+    opt_state = jax.jit(opt.init)(params)
+    xs = x + 0.01 * jax.random.normal(jax.random.key(5), (k,) + x.shape)
+    ys = jnp.broadcast_to(y, (k,) + y.shape)
+    upd, clip = jnp.int32(0), jnp.float32(np.inf)
+    f_plain = jax.jit(lambda c, o: online_update_chunk(
+        learner, opt, c, o, xs, ys, upd))
+    f_guard = jax.jit(lambda c, o: guarded_update_chunk(
+        learner, opt, c, o, xs, ys, upd, clip))
+    guard = StreamGuard(GuardConfig(ring=ring))
+    key_data = jax.random.key_data(jax.random.key(0))
+    pos = [0]
+
+    def run_plain(c, o):
+        c, o, m = f_plain(c, o)
+        float(jax.device_get(m["loss"]))          # the trainer's readback
+        return c, o
+
+    def run_guard(c, o):
+        c, o, m = f_guard(c, o)
+        assert guard.check(m, pos[0]) is None
+        guard.push_tree({"carry": c, "opt": o, "pos": pos[0],
+                         "rewire_events": 0, "key": key_data},
+                        pos[0], pos[0])
+        pos[0] += 1
+        return c, o
+
+    def sample_ms(fn, c, o):                       # one 3-window sample
+        t0 = time.perf_counter()
+        for _ in range(3):
+            c, o = fn(c, o)
+        return (time.perf_counter() - t0) / 3 * 1e3, c, o
+
+    # Interleave plain/guarded samples so both sides see the same machine
+    # noise, and take min-of-samples per side: a sequential A-then-B layout
+    # lets a transient slowdown during one phase masquerade as overhead.
+    cp, op = run_plain(carry, opt_state)           # warm up both paths
+    cg, og = run_guard(carry, opt_state)
+    t_p = t_g = float("inf")
+    for _ in range(max(3, reps // 2)):
+        dt, cp, op = sample_ms(run_plain, cp, op)
+        t_p = min(t_p, dt)
+        dt, cg, og = sample_ms(run_guard, cg, og)
+        t_g = min(t_g, dt)
+    overhead = (t_g - t_p) / t_p
+    rec = {"n": n, "n_in": n_in, "batch": batch, "omega": omega,
+           "beta_target": beta, "beta_measured": round(beta_meas, 4),
+           "K": K, "update_every": k, "ring": ring, "snapshot_every": 1,
+           "unguarded_window_ms": round(t_p, 3),
+           "guarded_window_ms": round(t_g, 3),
+           "unguarded_step_ms": round(t_p / k, 4),
+           "guarded_step_ms": round(t_g / k, 4),
+           "overhead": round(overhead, 4)}
+    assert overhead < budget, (
+        f"guard steady-state overhead broke the {budget * 100:.0f}% budget: "
+        f"guarded {t_g:.2f}ms vs unguarded {t_p:.2f}ms per {k}-step window "
+        f"-> {overhead * 100:.1f}%")
+    rows.append((f"guard/n{n}_k{k}_w{omega}/window_ms", f"{t_g:.2f}",
+                 f"unguarded={t_p:.2f}ms_overhead={overhead * 100:.2f}%"))
+    return rec
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -469,6 +558,9 @@ if __name__ == "__main__":
     ap.add_argument("--rewire-only", action="store_true",
                     help="run only rewire_bench and merge its record into "
                          "the (existing) output JSON")
+    ap.add_argument("--guard-only", action="store_true",
+                    help="run only guard_overhead_bench and merge its "
+                         "record into the (existing) output JSON")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: repo-root BENCH_kernels.json"
                          ", or BENCH_kernels.ci.json with --smoke so the "
@@ -494,6 +586,13 @@ if __name__ == "__main__":
         if Path(args.out).exists():
             out = json.loads(Path(args.out).read_text())
         out["rewire"] = rewire
+    elif args.guard_only:
+        guard = guard_overhead_bench(rows, n=96, beta=args.beta, omega=0.9,
+                                     reps=max(args.reps, 10))
+        out = {}
+        if Path(args.out).exists():
+            out = json.loads(Path(args.out).read_text())
+        out["guard_overhead"] = guard
     elif args.smoke:
         sweep = [dual_compact_step_bench(rows, n=96, beta=args.beta,
                                          omega=0.9, batch=b, reps=2)
@@ -502,12 +601,16 @@ if __name__ == "__main__":
                                    reps=5)
         rewire = [rewire_bench(rows, n=96, beta=args.beta, omega=0.9,
                                reps=5, events=3, budget=0.15)]
+        guard = guard_overhead_bench(rows, n=96, beta=args.beta, omega=0.9,
+                                     reps=5, budget=0.25)
         out = {"compact_sweep": sweep,
                "online_step": online,
                "rewire": rewire,
+               "guard_overhead": guard,
                "note": "CI smoke: dual (row x column) compact vs row-only "
                        "compact + online per-step latency + per-event "
-                       "rewire migration cost, tiny n; CPU wall clock, f32"}
+                       "rewire migration cost + guard overhead, tiny n; "
+                       "CPU wall clock, f32"}
     else:
         recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
                 for n in args.n]
@@ -524,11 +627,14 @@ if __name__ == "__main__":
         rewire = [rewire_bench(rows, n=n, beta=args.beta, omega=om,
                                reps=max(args.reps, 10))
                   for n in (96, 256) for om in (0.5, 0.9)]
+        guard = guard_overhead_bench(rows, n=args.sweep_n[0], beta=args.beta,
+                                     omega=0.9, reps=max(args.reps, 10))
         out = {"egru_step": recs,
                "stacked_egru_step": stacked_recs,
                "compact_sweep": sweep,
                "online_step": online,
                "rewire": rewire,
+               "guard_overhead": guard,
                "note": "dense = masked-dense per-gate reference (stacked: "
                        "structural-width flat blocks); compact = "
                        "flat-influence row-compact engine (sparse_rtrl "

@@ -1,4 +1,6 @@
-from repro.checkpoint.ckpt import (CheckpointManager, load_checkpoint,
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import (CheckpointError, CheckpointManager,
+                                   load_checkpoint, save_checkpoint,
+                                   valid_steps, validate_checkpoint_dir)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = ["CheckpointError", "CheckpointManager", "save_checkpoint",
+           "load_checkpoint", "valid_steps", "validate_checkpoint_dir"]

@@ -33,6 +33,60 @@ import numpy as np
 Tree = Any
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written (async write failed after retries)
+    or restored (requested step missing/corrupt).  Retryable by
+    `run_with_restart`'s default policy."""
+
+
+def _npy_header(path: Path):
+    """(shape, dtype) from an .npy header without reading the payload."""
+    arr = np.load(path, mmap_mode="r")
+    return tuple(arr.shape), arr.dtype
+
+
+def validate_checkpoint_dir(ckpt_dir: str | Path) -> bool:
+    """True iff the directory is a complete, consistent checkpoint: the
+    manifest parses and EVERY shard file exists with the manifest's
+    dtype and extent (headers only — cheap even for large checkpoints).
+    Catches interrupted writes/gc, deleted shards, and truncated files."""
+    ckpt_dir = Path(ckpt_dir)
+    try:
+        manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+        for entry in manifest["leaves"]:
+            shape = tuple(entry["shape"])
+            for sh in entry["shards"]:
+                fshape, fdtype = _npy_header(ckpt_dir / sh["file"])
+                if str(fdtype) != entry["dtype"]:
+                    return False
+                if sh["index"] is None:
+                    want = shape
+                else:
+                    want = tuple(
+                        (b if b is not None else shape[d]) - (a or 0)
+                        for d, (a, b) in enumerate(sh["index"]))
+                if fshape != want:
+                    return False
+    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        return False
+    return True
+
+
+def valid_steps(root: str | Path) -> list:
+    """Steps under `root` whose checkpoint directories validate, ascending."""
+    out = []
+    for p in Path(root).glob("step_*"):
+        if p.name.endswith(".tmp"):
+            continue
+        try:
+            s = int(p.name.split("_")[1])
+        except ValueError:
+            continue
+        if validate_checkpoint_dir(p):
+            out.append(s)
+    return sorted(out)
+
+
 def _leaf_name(path) -> str:
     parts = []
     for p in path:
@@ -109,12 +163,18 @@ def load_checkpoint(root: str | Path, tree_like: Tree,
     corresponding (possibly re-meshed) sharding.  Returns (tree, step)."""
     root = Path(root)
     if step is None:
-        steps = sorted(int(p.name.split("_")[1]) for p in root.glob("step_*")
-                       if not p.name.endswith(".tmp"))
+        # newest VALID step: an interrupted write/gc leaves a directory
+        # missing its manifest or shards — fall back to the previous
+        # retained step rather than crash mid-restore
+        steps = valid_steps(root)
         if not steps:
             return None, -1
         step = steps[-1]
     ckpt_dir = root / f"step_{step:08d}"
+    if not validate_checkpoint_dir(ckpt_dir):
+        raise CheckpointError(
+            f"checkpoint step {step} at {root} is missing or corrupt "
+            "(manifest/shard validation failed)")
     manifest = json.loads((ckpt_dir / "manifest.json").read_text())
     by_name = {e["name"]: e for e in manifest["leaves"]}
 
@@ -137,35 +197,71 @@ class CheckpointManager:
 
     save() snapshots to host in the caller's thread (cheap device_get on the
     simulation; on a real pod this is per-shard D2H), then writes + renames
-    on a background thread so the train loop never blocks on disk."""
+    on a background thread so the train loop never blocks on disk.
 
-    def __init__(self, root: str | Path, keep: int = 3, async_write: bool = True):
+    Failure surfacing: a write failure on the background thread is captured
+    (never lost with the daemon thread) and re-raised as CheckpointError on
+    the NEXT save()/wait() — the train loop learns its checkpoint lineage
+    broke instead of discovering it at restore time.  `retries` write
+    attempts with exponential backoff absorb transient filesystem faults;
+    `write_fault(step)` is a fault-injection seam called before each
+    attempt (see guard.FaultPlan.ckpt_write_fault)."""
+
+    def __init__(self, root: str | Path, keep: int = 3,
+                 async_write: bool = True, retries: int = 0,
+                 retry_backoff_s: float = 0.05, write_fault=None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_write = async_write
+        self.retries = retries
+        self.retry_backoff_s = retry_backoff_s
+        self.write_fault = write_fault
         self._thread: threading.Thread | None = None
+        self._error: CheckpointError | None = None
         self.last_saved = -1
 
     def save(self, step: int, tree: Tree, extra: dict | None = None):
-        self.wait()
+        self.wait()                       # also surfaces a prior failure
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            save_checkpoint(self.root, step, host_tree, extra)
-            self._gc()
-            self.last_saved = step
+            err = None
+            for attempt in range(self.retries + 1):
+                try:
+                    if self.write_fault is not None:
+                        self.write_fault(step)
+                    save_checkpoint(self.root, step, host_tree, extra)
+                    self._gc()
+                    self.last_saved = step
+                    return
+                except Exception as e:      # noqa: BLE001 — surfaced below
+                    err = e
+                    if attempt < self.retries:
+                        time.sleep(self.retry_backoff_s * (2 ** attempt))
+            ce = CheckpointError(
+                f"checkpoint write for step {step} failed after "
+                f"{self.retries + 1} attempt(s): {err!r}")
+            ce.__cause__ = err
+            self._error = ce
 
         if self.async_write:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
         else:
             work()
+            self._raise_pending()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def restore(self, tree_like: Tree, shardings: Tree | None = None,
                 step: int | None = None):
@@ -179,6 +275,7 @@ class CheckpointManager:
             shutil.rmtree(p, ignore_errors=True)
 
     def latest_step(self) -> int:
-        steps = [int(p.name.split("_")[1]) for p in self.root.glob("step_*")
-                 if not p.name.endswith(".tmp")]
-        return max(steps, default=-1)
+        """Newest step whose directory validates (a half-written or
+        gc-truncated directory no longer shadows a good older one)."""
+        steps = valid_steps(self.root)
+        return steps[-1] if steps else -1

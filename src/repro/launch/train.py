@@ -153,9 +153,15 @@ def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
     from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
     from repro.sparsity import RewireSchedule
 
+    from repro.runtime.guard import FaultPlan, GuardConfig
+
     updates = min(args.steps, 12) if args.smoke else args.steps
     k = args.update_every
     rewiring = args.rewire != "off"
+    guard_cfg = None
+    if args.guard:
+        guard_cfg = GuardConfig(ring=args.guard_ring,
+                                policy=args.guard_policy)
     spec = LearnerSpec(engine="stacked", cfg=cfg, backend=backend,
                        capacity=args.capacity, col_compact=col_compact,
                        rewirable=rewiring)
@@ -185,19 +191,39 @@ def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
             ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
             fail_at_update=args.fail_at if attempt == 0 else -1,
             metrics_path=args.metrics, seed=args.seed)
+        plan = None
+        if args.inject_nan_at >= 0 or args.inject_corrupt_at >= 0:
+            # NaN inputs stay armed across restarts (a data fault lives in
+            # the stream); carry corruption is one-shot like --fail-at
+            plan = FaultPlan(
+                nan_input_at=args.inject_nan_at,
+                nan_input_len=args.inject_nan_len,
+                corrupt_carry_at_update=(args.inject_corrupt_at
+                                         if attempt == 0 else -1))
         return OnlineTrainer(ocfg, learner, opt, params, masks, stream,
-                             rewire_schedule=schedule)
+                             rewire_schedule=schedule, guard=guard_cfg,
+                             fault_plan=plan)
 
     out = run_with_restart(make_trainer)
     rew = (f" rewire={args.rewire}x{out['rewire_events']}"
            if rewiring else "")
+    grd = ""
+    if "guard" in out:
+        g = out["guard"]
+        grd = (f" guard[faults={g['faults']} rollbacks={g['rollbacks']} "
+               f"recovered={len(g['recoveries'])} "
+               f"quarantined={len(g['quarantined'])}]")
     print(f"done: arch=egru-spiral ONLINE layers={args.layers} "
           f"backend={backend} update_every={k} updates={out['updates']} "
           f"stream_steps={out['final_step']} restarts={out['restarts']}{rew} "
+          f"stragglers={out['stragglers']}{grd} "
           f"carry={out['carry_bytes']}B live={out['carry_live_bytes']}B "
           f"(O(1) in stream length)")
-    if out["metrics"]:
-        first, last = out["metrics"][0], out["metrics"][-1]
+    # quarantined windows log without a loss entry — summarize over records
+    # that have one
+    with_loss = [m for m in out["metrics"] if "loss" in m]
+    if with_loss:
+        first, last = with_loss[0], with_loss[-1]
         beta = f" (beta {last['beta']:.2f})" if "beta" in last else ""
         print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}{beta}")
     return out
@@ -247,6 +273,28 @@ def main():
     ap.add_argument("--rewire-frac", type=float, default=0.3,
                     help="initial rewired fraction of live weights per "
                          "tensor (cosine-decayed to 0 over the run)")
+    ap.add_argument("--guard", action="store_true",
+                    help="online mode: enable the StreamGuard — fused "
+                         "carry/grad/loss health checks every update, "
+                         "rollback-and-replay from a known-good snapshot "
+                         "ring under an escalating degradation policy "
+                         "(repro.runtime.guard)")
+    ap.add_argument("--guard-ring", type=int, default=4,
+                    help="known-good snapshots retained for rollback")
+    ap.add_argument("--guard-policy", default="full",
+                    help="escalation ladder: a preset (full | strict | "
+                         "replay-only) or a comma-separated list from "
+                         "{replay, clip, skip_update, quarantine}")
+    ap.add_argument("--inject-nan-at", type=int, default=-1,
+                    help="fault injection (online): stream steps "
+                         "[k, k+len) read NaN inputs — persists across "
+                         "replay, exercising quarantine")
+    ap.add_argument("--inject-nan-len", type=int, default=1,
+                    help="length of the injected NaN input window")
+    ap.add_argument("--inject-corrupt-at", type=int, default=-1,
+                    help="fault injection (online): poison one influence "
+                         "element in place after this update commits — "
+                         "transient, healed by rollback+replay")
     ap.add_argument("--seed", type=int, default=0,
                     help="base seed threaded through param init, mask "
                          "draws, the data stream, and rewire event keys — "

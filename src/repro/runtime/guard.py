@@ -1,0 +1,492 @@
+"""StreamGuard: fault-injected resilience for unbounded online RTRL.
+
+The RTRL influence carry is the engine's superpower and its unique
+fragility: unlike BPTT, which flushes state at every sequence boundary, the
+carry persists *forever* — a single non-finite step (NaN input, loss-scale
+overflow, compact-capacity overflow) silently poisons every future gradient
+on the stream.  StreamGuard makes unbounded online training survive such
+faults without giving up gradient exactness:
+
+1. **Detection**, fused into the jitted update chunk so steady state pays
+   one (batched) scalar readback per update: a finite-check bitmask over
+   (loss, grads, the full learner carry), plus two host-side detectors on
+   scalars the trainer already reads back — an overflow-streak counter on
+   the compact engines' ``stats["overflow"]`` trace and a loss-spike
+   EMA z-score.
+2. **Rollback-and-replay**: a ring of the last R known-good snapshots (the
+   same {carry, opt state, RNG key-data, stream position, rewire-event
+   counter} tree the trainer checkpoints).  On a fault the trainer rolls
+   back and deterministically replays the poisoned window — the step-keyed
+   stream makes replay exact, the same discipline the crash-restart tests
+   prove — under an escalating degradation policy:
+
+       replay       re-run as-is (heals transient faults, e.g. a corrupted
+                    carry: the snapshot restores good state)
+       clip         re-run with global-norm gradient clipping (heals
+                    gradient blow-ups / loss-scale overflow)
+       skip_update  advance the carry through the window WITHOUT applying
+                    the optimizer update
+       quarantine   skip the window's inputs entirely (heals persistent
+                    data faults — NaN inputs replay as NaN forever)
+
+   A window that exhausts the policy raises :class:`StreamFault` to the
+   supervisor.  Rollback composes with dynamic sparsity: snapshots carry
+   the mask state (it lives in the carry) and the rewire-event counter, so
+   a rollback across a rewire boundary replays the *identical* mask
+   sequence (deterministic per-event keys).
+3. **Fault injection** (:class:`FaultPlan`): NaN input windows, in-place
+   carry corruption, checkpoint-write failures, and process crashes — the
+   harness behind ``tests/test_guard.py`` and the CI fault-injection smoke.
+
+`repro.runtime.online.OnlineTrainer` weaves this in via
+``OnlineTrainer(..., guard=GuardConfig(...), fault_plan=FaultPlan(...))``;
+``launch/train.py`` exposes ``--guard / --guard-ring / --guard-policy``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.online import stream_grads
+from repro.runtime.trainer import InjectedFailure
+
+Tree = Any
+
+# health bitmask (computed inside the jitted chunk, read back as one scalar)
+HEALTH_LOSS = 1        # window loss is non-finite
+HEALTH_GRADS = 2       # some gradient leaf is non-finite
+HEALTH_CARRY = 4       # some carry leaf (influence/activity/params) is non-finite
+
+ACTIONS = ("replay", "clip", "skip_update", "quarantine")
+
+POLICIES = {
+    "full": ("replay", "clip", "skip_update", "quarantine"),
+    "strict": ("replay", "clip"),          # never drop data; escalate instead
+    "replay-only": ("replay",),
+}
+
+
+class StreamFault(RuntimeError):
+    """A fault the guard's degradation policy could not absorb — surfaced
+    to the supervisor (NOT retryable by default: restarting replays the
+    same stream, so a data fault that exhausted the policy once will again)."""
+
+
+def resolve_policy(spec) -> tuple:
+    """A policy preset name ('full' | 'strict' | 'replay-only') or a
+    comma-separated action list -> validated action tuple."""
+    if isinstance(spec, (tuple, list)):
+        actions = tuple(spec)
+    elif spec in POLICIES:
+        actions = POLICIES[spec]
+    else:
+        actions = tuple(a.strip() for a in str(spec).split(",") if a.strip())
+    bad = [a for a in actions if a not in ACTIONS]
+    if bad or not actions:
+        raise ValueError(f"unknown guard action(s) {bad}; choose from "
+                         f"{ACTIONS} or a preset {tuple(POLICIES)}")
+    return actions
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """StreamGuard knobs.
+
+    ring            known-good snapshots retained for rollback
+    snapshot_every  updates between ring pushes (1 = every update; larger
+                    values trade rollback distance for less host copying)
+    policy          escalation ladder, tried in order on repeated faults at
+                    the same window (see module docstring / POLICIES)
+    clip_norm       global gradient-norm ceiling for the 'clip' action
+    spike_z         loss-spike threshold in EMA z-score units
+    spike_warmup    healthy updates before the spike detector arms
+    spike_ema       EMA decay for the loss mean/variance trackers
+    overflow_streak consecutive overflowing updates that count as a fault
+                    (0 disables; overflow means compact-capacity gradients
+                    are no longer exact)
+    host_offload    copy ring snapshots to host numpy on a background
+                    thread (for HBM-constrained pods) instead of the
+                    default zero-copy retention of device references —
+                    JAX arrays are immutable and the guarded chunk does
+                    not donate buffers, so references are a valid
+                    snapshot at no per-window cost
+    ckpt_retries    write retries the trainer's CheckpointManager gets
+    """
+    ring: int = 4
+    snapshot_every: int = 1
+    policy: tuple = POLICIES["full"]
+    clip_norm: float = 1.0
+    spike_z: float = 10.0
+    spike_warmup: int = 20
+    spike_ema: float = 0.9
+    overflow_streak: int = 3
+    host_offload: bool = False
+    ckpt_retries: int = 2
+
+    def __post_init__(self):
+        object.__setattr__(self, "policy", resolve_policy(self.policy))
+        if self.ring < 1:
+            raise ValueError("ring must be >= 1")
+
+
+# ---------------------------------------------------------------------------
+# Fused health check + guarded update chunks (jitted by the trainer)
+# ---------------------------------------------------------------------------
+
+def _nonfinite(tree) -> jax.Array:
+    """True iff any inexact leaf of `tree` holds a non-finite value."""
+    flags = [jnp.any(~jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+             if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact)]
+    if not flags:
+        return jnp.bool_(False)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out | f
+    return out
+
+
+def health_bits(loss, grads, carry) -> jax.Array:
+    """The int32 fault bitmask (0 = healthy), fused into the update chunk so
+    detection costs no extra dispatch and one scalar readback."""
+    bits = jnp.where(~jnp.isfinite(loss), HEALTH_LOSS, 0)
+    bits = bits + jnp.where(_nonfinite(grads), HEALTH_GRADS, 0)
+    bits = bits + jnp.where(_nonfinite(carry), HEALTH_CARRY, 0)
+    return bits.astype(jnp.int32)
+
+
+def describe_health(bits: int) -> str:
+    names = [n for b, n in ((HEALTH_LOSS, "loss"), (HEALTH_GRADS, "grads"),
+                            (HEALTH_CARRY, "carry")) if bits & b]
+    return "+".join(names) or "ok"
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def guarded_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
+                         xs: jax.Array, ys: jax.Array, upd: jax.Array,
+                         clip: jax.Array):
+    """`online_update_chunk` with the guard woven in: dynamic global-norm
+    gradient clipping (clip = +inf disables it EXACTLY — the factor is 1.0,
+    so an unfaulted guarded run is bit-identical to the unguarded chunk)
+    and the fused health bitmask in ``metrics["health"]``.  Pure; jit once
+    per window shape."""
+    carry, loss, grads, stats = stream_grads(learner, carry, xs, ys)
+    gn = global_norm(grads)
+    factor = jnp.minimum(jnp.float32(1.0), clip / (gn + 1e-12))
+    grads = jax.tree.map(lambda g: g * factor, grads)
+    params, opt_state = opt.update(grads, opt_state,
+                                   learner.params_of(carry), upd)
+    carry = learner.reset_grads(carry, params)
+    metrics = {"loss": loss, "grad_norm": gn,
+               "health": health_bits(loss, grads, carry)}
+    for k in ("alpha", "beta"):
+        if k in stats:
+            metrics[k] = jnp.asarray(stats[k]).mean()
+    if "overflow" in stats:
+        metrics["overflow"] = jnp.asarray(stats["overflow"]).max()
+    metrics["verdict"] = _pack_verdict(metrics)
+    return carry, opt_state, metrics
+
+
+def _pack_verdict(metrics: dict) -> jax.Array:
+    """[health_bits, loss, overflow] packed into one float32 buffer so the
+    host-side detector pays a single one-buffer readback per window (the
+    bitmask is a small int — exact in float32)."""
+    return jnp.stack([metrics["health"].astype(jnp.float32),
+                      metrics["loss"].astype(jnp.float32),
+                      jnp.asarray(metrics.get("overflow", 0),
+                                  jnp.float32)])
+
+
+def advance_chunk(learner, carry: Tree, xs: jax.Array, ys: jax.Array):
+    """The 'skip_update' degradation: drive the learner through the window
+    and drop the accumulated gradient WITHOUT touching params or the
+    optimizer — the stream advances, influence stays exact, no update."""
+    def body(c, xy):
+        c, out = learner.step(c, xy[0], xy[1])
+        return c, out.stats
+
+    carry, stats = jax.lax.scan(body, carry, (xs, ys))
+    loss = carry["loss"]
+    carry = learner.reset_grads(carry, None)
+    metrics = {"loss": loss, "health": health_bits(loss, (), carry)}
+    if "overflow" in stats:
+        metrics["overflow"] = jnp.asarray(stats["overflow"]).max()
+    metrics["verdict"] = _pack_verdict(metrics)
+    return carry, metrics
+
+
+# ---------------------------------------------------------------------------
+# The guard
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Snapshot:
+    """One known-good restore point (host or device tree).  With host
+    offload the D2H copy runs on a background thread (device arrays are
+    immutable, so holding references is safe); `_thread` is joined before
+    the snapshot is read for rollback."""
+    tree: Tree
+    step: int
+    update: int
+    rewire_events: int
+    _thread: threading.Thread | None = None
+
+
+class StreamGuard:
+    """Detector state + snapshot ring + escalation bookkeeping.  One
+    instance per OnlineTrainer run; all methods are host-side."""
+
+    def __init__(self, cfg: GuardConfig):
+        self.cfg = cfg
+        self.ring: collections.deque = collections.deque(maxlen=cfg.ring)
+        self._mu: float | None = None      # loss EMA mean
+        self._var = 0.0                    # loss EMA variance
+        self._n_healthy = 0
+        self._ov_streak = 0
+        self._fault_step: int | None = None   # window start being recovered
+        self._attempts = 0
+        self.faults: list[dict] = []
+        self.recoveries: list[dict] = []
+        self.quarantined: list[dict] = []
+        self.rollbacks = 0
+
+    # -- detection ----------------------------------------------------------
+
+    def check(self, metrics: dict, update: int) -> str | None:
+        """Host-side verdict on one window's metrics: a fault reason, or
+        None (healthy — detector EMAs update only then).  Device scalars
+        are fetched in ONE device_get — a single packed buffer when the
+        chunk provided one."""
+        if "verdict" in metrics:
+            packed = np.asarray(jax.device_get(metrics["verdict"]))
+            vals = {"health": packed[0], "loss": packed[1],
+                    "overflow": packed[2]}
+        else:
+            vals = jax.device_get({k: metrics[k]
+                                   for k in ("health", "loss", "overflow")
+                                   if k in metrics})
+        bits = int(vals.get("health", 0))
+        if bits:
+            return f"nonfinite:{describe_health(bits)}"
+        ov = float(vals.get("overflow", 0.0))
+        if ov > 0:
+            self._ov_streak += 1
+            if (self.cfg.overflow_streak > 0
+                    and self._ov_streak >= self.cfg.overflow_streak):
+                self._ov_streak = 0
+                return (f"overflow_streak:{self.cfg.overflow_streak}"
+                        f"@update{update}")
+        else:
+            self._ov_streak = 0
+        loss = vals.get("loss")
+        if loss is not None:
+            spike = self._spike(float(loss))
+            if spike is not None:
+                return spike
+            self._ema_update(float(loss))
+        return None
+
+    def _spike(self, loss: float) -> str | None:
+        if self._mu is None or self._n_healthy < self.cfg.spike_warmup:
+            return None
+        sigma = max(math.sqrt(max(self._var, 0.0)),
+                    1e-3 * abs(self._mu) + 1e-8)
+        z = (loss - self._mu) / sigma
+        if z > self.cfg.spike_z:
+            return f"loss_spike:z={z:.1f}"
+        return None
+
+    def _ema_update(self, loss: float):
+        a = self.cfg.spike_ema
+        if self._mu is None:
+            self._mu, self._var = loss, 0.0
+        else:
+            d = loss - self._mu
+            self._mu += (1.0 - a) * d
+            self._var = a * (self._var + (1.0 - a) * d * d)
+        self._n_healthy += 1
+
+    # -- escalation ---------------------------------------------------------
+
+    def pending_action(self, window_start: int) -> str | None:
+        """The degradation to apply when (re)executing this window: None
+        until the window has faulted; then the policy ladder, one rung per
+        fault ('replay' is a plain re-execution)."""
+        if self._fault_step != window_start or self._attempts == 0:
+            return None
+        return self.cfg.policy[self._attempts - 1]
+
+    def on_fault(self, trainer, reason: str):
+        """Record the fault, escalate, and roll the trainer back to the
+        newest known-good snapshot.  Raises StreamFault once the policy
+        ladder is exhausted for this window."""
+        if self._fault_step != trainer.step:
+            self._fault_step, self._attempts = trainer.step, 0
+        self._attempts += 1
+        self.faults.append({"reason": reason, "step": trainer.step,
+                            "update": trainer.update,
+                            "attempt": self._attempts})
+        if self._attempts > len(self.cfg.policy):
+            raise StreamFault(
+                f"guard policy {self.cfg.policy} exhausted at stream step "
+                f"{trainer.step} (update {trainer.update}): {reason}")
+        self.rollback(trainer)
+
+    def rollback(self, trainer):
+        if not self.ring:
+            raise StreamFault("fault before any known-good snapshot "
+                              f"existed: {self.faults[-1]['reason']}")
+        trainer._restore_snapshot(self._ready(self.ring[-1]))
+        self.rollbacks += 1
+
+    def commit(self, trainer, window_start: int):
+        """A window executed healthily: close any recovery in flight for it
+        and push a ring snapshot on the cadence (the push happens AFTER
+        rewire events fire, so snapshots carry post-event mask state and
+        the matching event counter)."""
+        if self._fault_step == window_start:
+            self.recoveries.append(
+                {"step": window_start,
+                 "action": self.cfg.policy[self._attempts - 1],
+                 "attempts": self._attempts})
+            self._fault_step, self._attempts = None, 0
+        if (not self.ring
+                or trainer.update % max(1, self.cfg.snapshot_every) == 0):
+            self.push(trainer)
+
+    # -- snapshot ring ------------------------------------------------------
+
+    def push(self, trainer):
+        self.push_tree(trainer._ckpt_tree(), trainer.step, trainer.update,
+                       trainer.rewire_events)
+
+    def push_tree(self, tree: Tree, step: int, update: int,
+                  rewire_events: int = 0):
+        snap = Snapshot(tree, step, update, rewire_events)
+        if self.cfg.host_offload:
+            # D2H off the hot path: the train loop only pays a thread
+            # handoff per snapshot; the copy lands before any rollback
+            # reads it (_ready joins)
+            def offload():
+                snap.tree = jax.tree.map(
+                    lambda x: np.asarray(jax.device_get(x)), tree)
+
+            snap._thread = threading.Thread(target=offload, daemon=True)
+            snap._thread.start()
+        self.ring.append(snap)
+
+    @staticmethod
+    def _ready(snap: Snapshot) -> Snapshot:
+        if snap._thread is not None:
+            snap._thread.join()
+            snap._thread = None
+        return snap
+
+    def note_quarantine(self, start: int, length: int, update: int):
+        self.quarantined.append({"start": start, "len": length,
+                                 "update": update})
+
+    def report(self) -> dict:
+        return {"faults": len(self.faults), "rollbacks": self.rollbacks,
+                "recoveries": self.recoveries,
+                "quarantined": self.quarantined,
+                "fault_log": self.faults}
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault injection for resilience tests and CI smokes.
+
+    nan_input_at / nan_input_len   stream steps [at, at+len) read NaN inputs
+                                   (PERSISTENT: replay re-reads NaN — the
+                                   data fault quarantine exists for)
+    corrupt_carry_at_update        after this update commits, one influence
+                                   element is set to NaN in place (ONE-shot:
+                                   the transient fault rollback+replay heals)
+    crash_at_update                raise InjectedFailure before this update
+                                   executes (one-shot; supervisor territory)
+    fail_ckpt_writes               the first N checkpoint write attempts
+                                   raise OSError (CheckpointManager retry /
+                                   error-surfacing territory)
+    """
+    nan_input_at: int = -1
+    nan_input_len: int = 1
+    corrupt_carry_at_update: int = -1
+    crash_at_update: int = -1
+    fail_ckpt_writes: int = 0
+
+    def __post_init__(self):
+        self._corrupted = False
+        self._crashed = False
+        self._ckpt_attempts = 0
+
+    def wrap_stream(self, stream: Callable[[int], tuple]):
+        if self.nan_input_at < 0:
+            return stream
+        lo, hi = self.nan_input_at, self.nan_input_at + self.nan_input_len
+
+        def wrapped(t: int):
+            x, y = stream(t)
+            if lo <= t < hi:
+                x = np.full_like(np.asarray(x, np.float32), np.nan)
+            return x, y
+
+        return wrapped
+
+    def maybe_crash(self, update: int):
+        if update == self.crash_at_update and not self._crashed:
+            self._crashed = True
+            raise InjectedFailure(
+                f"fault-plan crash before update {update}")
+
+    def maybe_corrupt(self, trainer):
+        if (trainer.update != self.corrupt_carry_at_update
+                or self._corrupted):
+            return
+        self._corrupted = True
+        trainer.carry = corrupt_carry(trainer.carry)
+
+    def ckpt_write_fault(self, step: int):
+        """CheckpointManager `write_fault` hook: raise for the first N
+        write attempts (across steps), then write normally."""
+        self._ckpt_attempts += 1
+        if self._ckpt_attempts <= self.fail_ckpt_writes:
+            raise OSError(
+                f"fault-plan checkpoint write failure "
+                f"{self._ckpt_attempts}/{self.fail_ckpt_writes} "
+                f"(step {step})")
+
+
+def corrupt_carry(carry: Tree, value: float = np.nan) -> Tree:
+    """Poison one element of the carried influence in place (the cosmic-ray
+    / bad-DMA fault): NaN·0 = NaN in IEEE, so the poison spreads through
+    every subsequent influence contraction and can never wash out."""
+    new = dict(carry)
+    for k in ("vals", "M", "state"):
+        if k not in new:
+            continue
+        leaves, treedef = jax.tree.flatten(new[k])
+        for i, leaf in enumerate(leaves):
+            if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+                idx = (0,) * jnp.ndim(leaf)
+                leaves[i] = jnp.asarray(leaf).at[idx].set(value)
+                new[k] = jax.tree.unflatten(treedef, leaves)
+                return new
+    raise ValueError("carry holds no influence buffer to corrupt "
+                     f"(keys: {list(carry)})")

@@ -84,6 +84,7 @@ class OnlineTrainerConfig:
     metrics_path: str | None = None
     seed: int = 0
     t_total: float | None = None    # per-step loss scale (None: update_every)
+    straggler_factor: float = 3.0   # window counts as straggler past EMA * f
 
 
 class OnlineTrainer:
@@ -101,15 +102,27 @@ class OnlineTrainer:
     ``LearnerSpec(rewirable=True)``.  Count-preserving rewire keeps every
     carry shape static, so the jitted update chunk never recompiles; the
     mask state lives in the carry and the event counter in the checkpoint,
-    so a restarted worker replays the identical mask sequence."""
+    so a restarted worker replays the identical mask sequence.
+
+    guard (`repro.runtime.guard.GuardConfig`): StreamGuard fault
+    resilience — fused health checks on every window, a known-good
+    snapshot ring, rollback-and-replay under an escalating degradation
+    policy.  fault_plan (`guard.FaultPlan`): deterministic fault
+    injection for tests/CI.  shardings: optional leaf-complete tree of
+    target shardings over `_ckpt_tree()` for elastic re-mesh resume."""
 
     def __init__(self, cfg: OnlineTrainerConfig, learner, opt, params: Tree,
                  masks: Tree | None, stream: Callable[[int], tuple],
-                 rewire_schedule=None):
+                 rewire_schedule=None, guard=None, fault_plan=None,
+                 shardings: Tree | None = None):
         self.cfg = cfg
         self.learner = learner
         self.opt = opt
+        self._fault_plan = fault_plan
+        if fault_plan is not None:
+            stream = fault_plan.wrap_stream(stream)
         self.stream = stream
+        self.shardings = shardings      # leaf-complete over _ckpt_tree()
         x0, y0 = stream(0)
         tt = cfg.t_total if cfg.t_total is not None else float(cfg.update_every)
         self.carry = learner.init(params, masks,
@@ -138,13 +151,33 @@ class OnlineTrainer:
         self.rewire_schedule = rewire_schedule
         self.rewire_events = 0            # events fired (checkpointed)
         self._rewire_base = jax.random.key(cfg.seed)
-        self.ckpt = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
-                     if cfg.ckpt_every > 0 else None)
+        write_fault = (fault_plan.ckpt_write_fault
+                       if fault_plan is not None
+                       and fault_plan.fail_ckpt_writes > 0 else None)
+        self.ckpt = (CheckpointManager(
+            cfg.ckpt_dir, keep=cfg.keep,
+            retries=(guard.ckpt_retries if guard is not None else 0),
+            write_fault=write_fault)
+            if cfg.ckpt_every > 0 else None)
         self.metrics: list[dict] = []
         self._failed_once = False
+        self.stragglers = 0
+        self._dt_ema: float | None = None
         self._chunk = jax.jit(
             lambda carry, opt_state, xs, ys, upd: online_update_chunk(
                 learner, opt, carry, opt_state, xs, ys, upd))
+        self.guard = None
+        if guard is not None:
+            # lazy import: guard.py imports this module at its top level
+            from repro.runtime.guard import (StreamGuard, advance_chunk,
+                                             guarded_update_chunk)
+            self.guard = StreamGuard(guard)
+            self._gchunk = jax.jit(
+                lambda carry, opt_state, xs, ys, upd, clip:
+                guarded_update_chunk(learner, opt, carry, opt_state,
+                                     xs, ys, upd, clip))
+            self._advance = jax.jit(
+                lambda carry, xs, ys: advance_chunk(learner, carry, xs, ys))
 
     # -- checkpoint/restore: carry + opt + RNG + stream position ------------
 
@@ -162,13 +195,30 @@ class OnlineTrainer:
     def try_resume(self) -> bool:
         if self.ckpt is None or self.ckpt.latest_step() < 0:
             return False
-        tree, upd = self.ckpt.restore(self._ckpt_tree())
+        # elastic re-mesh: target shardings (possibly for a different mesh
+        # than the checkpoint's writer ran on) are recomputed here, never
+        # read from disk — same contract as Trainer.try_resume.  The
+        # shardings tree must be leaf-complete over _ckpt_tree() (None
+        # entries would be dropped by tree flattening and misalign leaves).
+        tree, upd = self.ckpt.restore(self._ckpt_tree(), self.shardings)
+        if tree is None:
+            return False
         self.carry, self.opt_state = tree["carry"], tree["opt"]
         self.step = int(tree["pos"])
         self.update = upd
         self.rewire_events = int(tree["rewire_events"])
-        self.key = jax.random.wrap_key_data(tree["key"])
+        self.key = jax.random.wrap_key_data(
+            jnp.asarray(jax.device_get(tree["key"])))
         return True
+
+    def _restore_snapshot(self, snap):
+        """Roll back to a StreamGuard ring snapshot (host or device tree)."""
+        tree = jax.tree.map(jnp.asarray, snap.tree)
+        self.carry, self.opt_state = tree["carry"], tree["opt"]
+        self.step = snap.step
+        self.update = snap.update
+        self.rewire_events = snap.rewire_events
+        self.key = jax.random.wrap_key_data(tree["key"])
 
     # -- dynamic sparsity ---------------------------------------------------
 
@@ -249,31 +299,96 @@ class OnlineTrainer:
         xs, ys = zip(*(self.stream(start + i) for i in range(k)))
         return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)))
 
+    def _watch_straggler(self, dt: float):
+        """EMA watchdog over window wall time (same scheme as Trainer): a
+        window slower than straggler_factor x the EMA counts as a straggler."""
+        if self._dt_ema is None:
+            self._dt_ema = dt
+            return
+        if dt > self.cfg.straggler_factor * self._dt_ema:
+            self.stragglers += 1
+        self._dt_ema = 0.9 * self._dt_ema + 0.1 * dt
+
+    def _execute_window(self, start: int, k: int):
+        """Execute one update window under the guard's pending degradation
+        (if any).  Returns (ok, metrics, guard_rec); ok=False means the
+        window faulted and the trainer was rolled back — re-enter the loop
+        and this window re-executes (deterministic replay) one rung up the
+        escalation ladder."""
+        g = self.guard
+        action = None if g is None else g.pending_action(start)
+        if action == "quarantine":
+            # persistent data fault: drop the window's inputs entirely;
+            # carry/params/opt are untouched, the stream skips past it
+            g.note_quarantine(start, k, self.update)
+            return True, {}, {"guard_action": action}
+        xs, ys = self._gather(start, k)
+        if g is None:
+            self.carry, self.opt_state, m = self._chunk(
+                self.carry, self.opt_state, xs, ys, jnp.int32(self.update))
+            jax.block_until_ready(m["loss"])
+            return True, m, {}
+        if action == "skip_update":
+            carry, m = self._advance(self.carry, xs, ys)
+            fault = g.check(m, self.update)
+            if fault is not None:
+                g.on_fault(self, fault)
+                return False, None, None
+            self.carry = carry
+        else:
+            # 'clip' degrades; clip=+inf is EXACTLY factor 1.0, so the
+            # healthy path stays bit-identical to the unguarded chunk
+            clip = jnp.float32(g.cfg.clip_norm if action == "clip"
+                               else np.inf)
+            carry, opt_state, m = self._gchunk(
+                self.carry, self.opt_state, xs, ys,
+                jnp.int32(self.update), clip)
+            fault = g.check(m, self.update)
+            if fault is not None:
+                g.on_fault(self, fault)
+                return False, None, None
+            self.carry, self.opt_state = carry, opt_state
+        m = dict(m)
+        m.pop("health", None)
+        m.pop("verdict", None)
+        return True, m, ({"guard_action": action} if action else {})
+
     def run(self) -> dict:
         cfg = self.cfg
+        if self.guard is not None and not self.guard.ring:
+            self.guard.push(self)         # initial known-good restore point
         while self.step < cfg.total_steps:
             if self.update == cfg.fail_at_update and not self._failed_once:
                 self._failed_once = True
                 raise InjectedFailure(
                     f"injected failure at update {self.update} "
                     f"(stream step {self.step})")
+            if self._fault_plan is not None:
+                self._fault_plan.maybe_crash(self.update)
             k = min(cfg.update_every, cfg.total_steps - self.step)
-            xs, ys = self._gather(self.step, k)
+            start = self.step
             t0 = time.perf_counter()
-            self.carry, self.opt_state, m = self._chunk(
-                self.carry, self.opt_state, xs, ys, jnp.int32(self.update))
-            jax.block_until_ready(m["loss"])
+            ok, m, guard_rec = self._execute_window(start, k)
+            if not ok:
+                continue                  # rolled back; window re-executes
             dt = time.perf_counter() - t0
-            self.step += k
+            self._watch_straggler(dt)
+            self.step = start + k
             self.update += 1
             self.key = jax.random.fold_in(self.key, self.update)
             rewire_rec = self._maybe_rewire()
+            if self.guard is not None:
+                # commit AFTER rewire so snapshots carry post-event masks
+                # and the matching event counter
+                self.guard.commit(self, start)
+            if self._fault_plan is not None:
+                self._fault_plan.maybe_corrupt(self)
             if self.ckpt is not None and self.update % cfg.ckpt_every == 0:
                 self.save()
-            if (rewire_rec or self.update % cfg.log_every == 0
+            if (rewire_rec or guard_rec or self.update % cfg.log_every == 0
                     or self.step >= cfg.total_steps):
                 rec = {"update": self.update, "step": self.step,
-                       "dt_s": round(dt, 4), **rewire_rec,
+                       "dt_s": round(dt, 4), **rewire_rec, **guard_rec,
                        **{k_: float(np.asarray(v)) for k_, v in m.items()}}
                 self.metrics.append(rec)
                 if cfg.metrics_path:
@@ -283,9 +398,13 @@ class OnlineTrainer:
         if self.ckpt is not None:
             self.ckpt.wait()
         fp = self.carry_nbytes()
-        return {"final_step": self.step, "updates": self.update,
-                "metrics": self.metrics, "rewire_events": self.rewire_events,
-                "carry_bytes": fp["alloc"], "carry_live_bytes": fp["live"]}
+        out = {"final_step": self.step, "updates": self.update,
+               "metrics": self.metrics, "rewire_events": self.rewire_events,
+               "carry_bytes": fp["alloc"], "carry_live_bytes": fp["live"],
+               "stragglers": self.stragglers}
+        if self.guard is not None:
+            out["guard"] = self.guard.report()
+        return out
 
 
 def carry_nbytes(carry: Tree) -> int:

@@ -27,6 +27,11 @@ class ServeConfig:
     temperature: float = 0.0       # 0 = greedy
     eos_token: int = -1            # -1: never stops early
     seed: int = 0
+    # per-request engine-step budget; 0 = auto (prompt length + max_new,
+    # exactly what a healthy request needs).  A request that exceeds its
+    # budget is failed ALONE — its partial output is returned and its slot
+    # freed; other in-flight requests are unaffected.
+    max_request_steps: int = 0
 
 
 class Engine:
@@ -55,6 +60,8 @@ class Engine:
         self.pos = np.zeros((B,), np.int32)
         self.live = np.zeros((B,), bool)
         self.tokens: list[list[int]] = [[] for _ in range(B)]
+        self.slot_steps = np.zeros((B,), np.int64)   # engine steps while live
+        self.failed_requests: set[int] = set()
 
     # -- slot management ------------------------------------------------------
 
@@ -67,6 +74,7 @@ class Engine:
         slot = int(free[0])
         self.live[slot] = True
         self.pos[slot] = 0
+        self.slot_steps[slot] = 0
         self.tokens[slot] = list(prompt_tokens)
         return slot
 
@@ -94,6 +102,7 @@ class Engine:
             if not self.live[b]:
                 continue
             self.pos[b] += 1
+            self.slot_steps[b] += 1
             if self.pos[b] >= len(self.tokens[b]):       # past the prompt
                 tok = int(nxt[b])
                 self.tokens[b].append(tok)
@@ -104,13 +113,23 @@ class Engine:
         return emitted
 
     def generate(self, prompts: list[list[int]], max_new: int = 16):
-        """Serve a list of prompts to completion; returns generated suffixes."""
+        """Serve a list of prompts to completion; returns generated suffixes.
+
+        Graceful degradation: each request carries its own step budget
+        (scfg.max_request_steps, or prompt+max_new steps by default).  A
+        request that exceeds it — a stuck stream, a pathological prompt —
+        is failed ALONE: its rid lands in `self.failed_requests`, its
+        partial output is returned, its slot is freed for pending work.
+        Every other request completes normally; nothing global raises."""
         outputs = {i: [] for i in range(len(prompts))}
         slot_of = {}
         pending = list(enumerate(prompts))
         key = jax.random.key(self.scfg.seed)
-        steps = 0
         budget = {i: max_new for i in range(len(prompts))}
+        step_budget = {i: (self.scfg.max_request_steps
+                           or len(p) + max_new)
+                       for i, p in enumerate(prompts)}
+        self.failed_requests = set()
         while pending or self.live.any():
             while pending:
                 rid, pr = pending[0]
@@ -127,7 +146,12 @@ class Engine:
                 budget[rid] -= 1
                 if budget[rid] <= 0:
                     self.live[slot] = False
-            steps += 1
-            if steps > 10_000:
-                raise RuntimeError("serve loop did not terminate")
+            # per-request budget enforcement: every live slot consumed one
+            # engine step above, so each request fails (alone) after at
+            # most its budget — the loop provably terminates
+            for slot in np.where(self.live)[0]:
+                rid = slot_of[int(slot)]
+                if self.slot_steps[slot] >= step_budget[rid]:
+                    self.live[slot] = False
+                    self.failed_requests.add(rid)
         return [outputs[i] for i in range(len(prompts))]

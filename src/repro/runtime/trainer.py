@@ -22,11 +22,18 @@ from typing import Any, Callable, Iterator
 import jax
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+# restart-from-checkpoint is the right response to a crash or a broken
+# checkpoint write; it is NOT the right response to e.g. guard.StreamFault
+# (the stream replays deterministically, so a data fault that exhausted the
+# degradation policy once will exhaust it again)
+RETRYABLE = (InjectedFailure, CheckpointError)
 
 
 @dataclasses.dataclass
@@ -125,11 +132,20 @@ class Trainer:
 
 
 def run_with_restart(make_trainer: Callable[..., Trainer],
-                     max_restarts: int = 3) -> dict:
+                     max_restarts: int = 3, retryable: tuple | None = None,
+                     backoff_s: float = 0.0,
+                     max_backoff_s: float = 30.0) -> dict:
     """Supervisor: restart-from-checkpoint on failure (the pod controller).
 
     `make_trainer(attempt)` lets callers disarm one-shot failure injection
-    on restarted attempts (a real crash happens once, not on every retry)."""
+    on restarted attempts (a real crash happens once, not on every retry).
+
+    `retryable` is the exception set worth a restart (default
+    :data:`RETRYABLE`: crashes and broken checkpoint writes); anything else
+    propagates immediately.  `backoff_s` > 0 sleeps exponentially
+    (backoff_s * 2^(attempt-1), capped at max_backoff_s) between restarts
+    so a flapping worker does not hammer shared storage."""
+    retryable = RETRYABLE if retryable is None else tuple(retryable)
     restarts = 0
     while True:
         try:
@@ -141,7 +157,10 @@ def run_with_restart(make_trainer: Callable[..., Trainer],
             out = trainer.run()
             out["restarts"] = restarts
             return out
-        except InjectedFailure:
+        except retryable:
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if backoff_s > 0:
+                time.sleep(min(backoff_s * (2 ** (restarts - 1)),
+                               max_backoff_s))

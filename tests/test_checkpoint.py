@@ -1,10 +1,16 @@
-"""Checkpoint roundtrip, retention, async writes, elastic re-mesh restore."""
+"""Checkpoint roundtrip, retention, async writes, elastic re-mesh restore,
+write-failure surfacing, and corrupt-directory fallback."""
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import (CheckpointError, CheckpointManager,
+                              load_checkpoint, valid_steps,
+                              validate_checkpoint_dir)
 from repro.launch.mesh import make_host_mesh
 
 
@@ -60,3 +66,112 @@ def test_atomicity_no_tmp_left(tmp_path):
     cm = CheckpointManager(tmp_path, async_write=False)
     cm.save(5, _tree(jax.random.key(3)))
     assert not list(tmp_path.glob("*.tmp"))
+
+
+# ---------------------------------------------------------------------------
+# Write-failure surfacing + retries (the silent-daemon-thread fix)
+# ---------------------------------------------------------------------------
+
+def _failing_writer(n_failures):
+    calls = {"n": 0}
+
+    def write_fault(step):
+        calls["n"] += 1
+        if calls["n"] <= n_failures:
+            raise OSError(f"injected write failure #{calls['n']}")
+
+    return write_fault, calls
+
+
+def test_async_write_failure_surfaces_on_wait(tmp_path):
+    """An async write failure used to die silently in the daemon thread;
+    now it is captured and re-raised as CheckpointError on wait()."""
+    wf, _ = _failing_writer(n_failures=10)
+    cm = CheckpointManager(tmp_path, async_write=True, write_fault=wf)
+    cm.save(1, _tree(jax.random.key(0)))
+    with pytest.raises(CheckpointError, match="step 1 failed"):
+        cm.wait()
+    # the error is consumed: the manager is usable again afterwards
+    cm.write_fault = None
+    cm.save(2, _tree(jax.random.key(0)))
+    cm.wait()
+    assert cm.latest_step() == 2
+
+
+def test_async_write_failure_surfaces_on_next_save(tmp_path):
+    wf, _ = _failing_writer(n_failures=10)
+    cm = CheckpointManager(tmp_path, async_write=True, write_fault=wf)
+    cm.save(1, _tree(jax.random.key(0)))
+    with pytest.raises(CheckpointError, match="step 1"):
+        cm.save(2, _tree(jax.random.key(0)))
+
+
+def test_sync_write_failure_raises_immediately(tmp_path):
+    wf, _ = _failing_writer(n_failures=10)
+    cm = CheckpointManager(tmp_path, async_write=False, write_fault=wf)
+    with pytest.raises(CheckpointError):
+        cm.save(1, _tree(jax.random.key(0)))
+
+
+def test_write_retries_absorb_transient_fault(tmp_path):
+    wf, calls = _failing_writer(n_failures=2)
+    cm = CheckpointManager(tmp_path, async_write=True, retries=2,
+                           retry_backoff_s=0.0, write_fault=wf)
+    cm.save(3, _tree(jax.random.key(0)))
+    cm.wait()                              # no raise: third attempt succeeded
+    assert calls["n"] == 3
+    assert cm.latest_step() == 3
+
+
+# ---------------------------------------------------------------------------
+# Corrupt/truncated directory detection + fallback (trust no step_* dir)
+# ---------------------------------------------------------------------------
+
+def test_truncated_checkpoint_falls_back_to_previous_valid(tmp_path):
+    """A step dir missing its manifest (interrupted write/gc) must not
+    shadow the previous good step — latest_step/restore skip it."""
+    cm = CheckpointManager(tmp_path, async_write=False)
+    tree = _tree(jax.random.key(1))
+    cm.save(1, tree)
+    cm.save(2, tree)
+    (tmp_path / "step_00000002" / "manifest.json").unlink()
+    assert valid_steps(tmp_path) == [1]
+    assert cm.latest_step() == 1
+    out, step = cm.restore(tree)
+    assert step == 1 and out is not None
+
+
+def test_missing_shard_detected(tmp_path):
+    cm = CheckpointManager(tmp_path, async_write=False)
+    tree = _tree(jax.random.key(2))
+    cm.save(1, tree)
+    cm.save(2, tree)
+    d = tmp_path / "step_00000002"
+    next(iter(d.glob("*.npy"))).unlink()
+    assert not validate_checkpoint_dir(d)
+    assert cm.latest_step() == 1
+
+
+def test_shard_shape_dtype_mismatch_detected(tmp_path):
+    cm = CheckpointManager(tmp_path, async_write=False)
+    tree = _tree(jax.random.key(3))
+    cm.save(1, tree)
+    d = tmp_path / "step_00000001"
+    mf = json.loads((d / "manifest.json").read_text())
+    victim = mf["leaves"][0]["shards"][0]["file"]
+    np.save(d / victim, np.zeros((2, 2), np.float16))   # wrong shape+dtype
+    assert not validate_checkpoint_dir(d)
+    assert cm.latest_step() == -1
+    out, step = cm.restore(tree)
+    assert out is None and step == -1
+
+
+def test_explicit_corrupt_step_raises_checkpoint_error(tmp_path):
+    """Asking for a specific step that is corrupt is an ERROR (the caller
+    named it), not a silent fallback."""
+    cm = CheckpointManager(tmp_path, async_write=False)
+    tree = _tree(jax.random.key(4))
+    cm.save(1, tree)
+    (tmp_path / "step_00000001" / "manifest.json").unlink()
+    with pytest.raises(CheckpointError, match="missing or corrupt"):
+        load_checkpoint(tmp_path, tree, step=1)

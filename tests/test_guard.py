@@ -1,0 +1,395 @@
+"""StreamGuard: fault-injected resilience for online RTRL.
+
+The contract under test (repro.runtime.guard + OnlineTrainer integration):
+
+  * the guarded update chunk is BIT-IDENTICAL to the unguarded one on a
+    healthy stream (clip=+inf is exactly factor 1.0) — resilience costs no
+    exactness;
+  * detection — the fused health bitmask flags non-finite loss/grads/carry;
+    host-side detectors catch overflow streaks and loss spikes, and their
+    EMAs only learn from healthy windows;
+  * recovery — a transient carry corruption is healed by rollback+replay to
+    BITWISE equality with a clean run; a persistent NaN input window is
+    escalated to quarantine and the run finishes all-finite with loss close
+    to the clean run, while the unguarded trainer is poisoned forever;
+  * composition — rollback across a rewire boundary re-fires the event and
+    replays the identical mask sequence; guard + crash + restart supervisor
+    compose; checkpoint-write faults retry/surface (CheckpointError is
+    retryable);
+  * exhaustion — a fault the policy cannot absorb raises StreamFault;
+  * satellites — OnlineTrainer straggler watchdog and elastic re-mesh
+    resume via target shardings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import cells, sparse_rtrl as SP
+from repro.core.cells import EGRUConfig
+from repro.core.learner import LearnerSpec, make_learner
+from repro.optim import make_optimizer
+from repro.optim.optimizers import masked
+from repro.runtime.guard import (FaultPlan, GuardConfig, StreamFault,
+                                 StreamGuard, corrupt_carry,
+                                 guarded_update_chunk, health_bits,
+                                 resolve_policy)
+from repro.runtime.online import (OnlineTrainer, OnlineTrainerConfig,
+                                  online_update_chunk)
+
+
+def _problem(seed=0, n=8, n_in=3, sparsity=0.5):
+    cfg = EGRUConfig(n_hidden=n, n_in=n_in, n_out=2, kind="gru")
+    params = cells.init_params(cfg, jax.random.key(seed))
+    masks = SP.make_masks(cfg, jax.random.key(seed + 7), sparsity)
+    params = SP.apply_masks(params, masks)
+    opt = masked(make_optimizer("adamw", lr=1e-2), dict(masks))
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact", col_compact=True))
+    return cfg, params, masks, opt, learner
+
+
+def _stream(cfg, T=20, n_seq=40):
+    xs_all = np.random.default_rng(0).normal(
+        size=(n_seq, T, cfg.n_in)).astype(np.float32)
+    ys_all = np.random.default_rng(1).integers(0, cfg.n_out, size=(n_seq,))
+
+    def stream(step):                    # step-keyed: replay-exact
+        s, t = divmod(step, T)
+        rng = np.random.default_rng(100 + s)
+        sel = rng.integers(0, n_seq, size=4)
+        return xs_all[sel][:, t], ys_all[sel]
+
+    return stream
+
+
+def _trainer(tmp_path, guard=None, plan=None, total=30, k=3, ckpt_every=0,
+             fail_at=-1, seed=0, shardings=None):
+    cfg, params, masks, opt, learner = _problem(seed=seed)
+    ocfg = OnlineTrainerConfig(total_steps=total, update_every=k,
+                               ckpt_every=ckpt_every, ckpt_dir=str(tmp_path),
+                               log_every=1, fail_at_update=fail_at, seed=seed)
+    return OnlineTrainer(ocfg, learner, opt, params, masks, _stream(cfg),
+                         guard=guard, fault_plan=plan, shardings=shardings)
+
+
+def _final_params(t):
+    return [np.asarray(x)
+            for x in jax.tree.leaves(t.learner.params_of(t.carry))]
+
+
+def _all_finite(t):
+    return all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(t.carry)
+               if np.issubdtype(np.asarray(x).dtype, np.floating))
+
+
+# ---------------------------------------------------------------------------
+# Exactness + detection units
+# ---------------------------------------------------------------------------
+
+def test_guarded_chunk_bitwise_equals_unguarded():
+    """clip=+inf makes the clip factor exactly 1.0: the guarded chunk is
+    the unguarded chunk bit-for-bit, plus the health scalar (== 0)."""
+    cfg, params, masks, opt, learner = _problem()
+    stream = _stream(cfg)
+    xs, ys = zip(*(stream(i) for i in range(6)))
+    xs, ys = jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+    carry = learner.init(params, masks, (xs[0], ys[0]), t_total=6.0)
+    opt_state = jax.jit(opt.init)(params)
+    c_a, o_a, m_a = online_update_chunk(learner, opt, carry, opt_state,
+                                        xs, ys, jnp.int32(0))
+    c_b, o_b, m_b = guarded_update_chunk(learner, opt, carry, opt_state,
+                                         xs, ys, jnp.int32(0),
+                                         jnp.float32(np.inf))
+    assert int(m_b["health"]) == 0
+    np.testing.assert_array_equal(np.asarray(m_a["loss"]),
+                                  np.asarray(m_b["loss"]))
+    for a, b in zip(jax.tree.leaves((c_a, o_a)), jax.tree.leaves((c_b, o_b))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_health_bits_flag_each_source():
+    bits = lambda l, g, c: int(health_bits(jnp.float32(l), g, c))
+    g_ok = {"w": jnp.ones(3)}
+    c_ok = {"a": jnp.zeros(4), "idx": jnp.zeros(4, jnp.int32)}
+    assert bits(1.0, g_ok, c_ok) == 0
+    assert bits(np.nan, g_ok, c_ok) == 1
+    assert bits(1.0, {"w": jnp.array([1.0, np.inf, 0.0])}, c_ok) == 2
+    assert bits(1.0, g_ok, {"a": jnp.array([np.nan]),
+                            "idx": jnp.zeros(2, jnp.int32)}) == 4
+    assert bits(np.nan, {"w": jnp.array([np.nan])},
+                {"a": jnp.array([np.nan])}) == 7
+    # integer leaves (compact idx, RNG key-data) never count as faults
+    assert bits(1.0, {}, {"idx": jnp.full((3,), 2**31 - 1, jnp.int32)}) == 0
+
+
+def test_nan_window_sets_health_bits():
+    cfg, params, masks, opt, learner = _problem()
+    stream = _stream(cfg)
+    xs, ys = zip(*(stream(i) for i in range(6)))
+    xs = jnp.asarray(np.stack(xs)).at[2].set(np.nan)
+    ys = jnp.asarray(np.stack(ys))
+    carry = learner.init(params, masks,
+                         (xs[0], ys[0]), t_total=6.0)
+    opt_state = jax.jit(opt.init)(params)
+    _, _, m = guarded_update_chunk(learner, opt, carry, opt_state, xs, ys,
+                                   jnp.int32(0), jnp.float32(np.inf))
+    # grads + carry poisoned.  The LOSS bit stays clear: the EGRU's
+    # Heaviside activity gate zeroes the NaN state's output, so the loss
+    # path looks perfectly healthy while the influence carry rots — the
+    # reason detection must inspect the carry, not just the loss.
+    assert int(m["health"]) == 6
+
+
+def test_overflow_streak_detector():
+    g = StreamGuard(GuardConfig(overflow_streak=3, spike_warmup=10**9))
+    m = lambda ov: {"loss": jnp.float32(0.5), "overflow": jnp.float32(ov)}
+    assert g.check(m(1.0), 0) is None
+    assert g.check(m(1.0), 1) is None
+    fault = g.check(m(1.0), 2)
+    assert fault is not None and fault.startswith("overflow_streak")
+    # streak resets after firing, and a healthy window also resets it
+    assert g.check(m(1.0), 3) is None
+    assert g.check(m(0.0), 4) is None
+    assert g.check(m(1.0), 5) is None
+
+
+def test_loss_spike_detector_and_healthy_only_ema():
+    g = StreamGuard(GuardConfig(spike_z=6.0, spike_warmup=20))
+    rng = np.random.default_rng(0)
+    for i in range(30):
+        assert g.check({"loss": jnp.float32(0.5 + 0.01 * rng.normal())},
+                       i) is None
+    n_healthy = g._n_healthy
+    fault = g.check({"loss": jnp.float32(50.0)}, 30)
+    assert fault is not None and fault.startswith("loss_spike")
+    # the spike did NOT contaminate the EMA...
+    assert g._n_healthy == n_healthy
+    # ...and neither does a nonfinite fault
+    assert g.check({"health": jnp.int32(1), "loss": jnp.float32(np.nan)},
+                   31) == "nonfinite:loss"
+    assert g._n_healthy == n_healthy
+
+
+def test_resolve_policy():
+    assert resolve_policy("strict") == ("replay", "clip")
+    assert resolve_policy("clip,quarantine") == ("clip", "quarantine")
+    with pytest.raises(ValueError, match="unknown guard action"):
+        resolve_policy("replay,exorcism")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end recovery
+# ---------------------------------------------------------------------------
+
+def test_unguarded_nan_poisons_stream_forever(tmp_path):
+    """The failure mode the guard exists for: one NaN input window and the
+    unguarded trainer's carry, params, and every later update are
+    non-finite for the REST of the run — RTRL has no sequence boundary to
+    flush it.  Worse, the logged LOSS stays finite throughout (the activity
+    gate silences the poisoned state's output), so nothing in the metrics
+    stream even hints the model is dead."""
+    t = _trainer(tmp_path, plan=FaultPlan(nan_input_at=9, nan_input_len=3))
+    out = t.run()
+    assert out["final_step"] == 30        # it "finishes"... poisoned
+    assert not _all_finite(t)
+    assert not np.isfinite(np.concatenate(
+        [p.ravel() for p in _final_params(t)])).all()
+    assert np.isfinite(out["metrics"][-1]["loss"])   # the silent part
+
+
+def test_guarded_nan_escalates_to_quarantine_and_recovers(tmp_path):
+    """E2E acceptance: same NaN window, guarded run escalates
+    replay -> clip -> skip_update -> quarantine (the input fault survives
+    every replay), finishes ALL-finite, and lands within tolerance of the
+    clean-stream run's loss."""
+    clean = _trainer(tmp_path / "clean")
+    out_c = clean.run()
+    t = _trainer(tmp_path / "g", guard=GuardConfig(),
+                 plan=FaultPlan(nan_input_at=9, nan_input_len=3))
+    out = t.run()
+    assert _all_finite(t)
+    g = out["guard"]
+    assert g["quarantined"] == [{"start": 9, "len": 3, "update": 3}]
+    assert g["faults"] == 4 and g["rollbacks"] == 4
+    assert g["recoveries"] == [{"step": 9, "action": "quarantine",
+                                "attempts": 4}]
+    # one dropped window costs a little data, not the run: loss tracks the
+    # clean stream's closely
+    assert abs(out["metrics"][-1]["loss"]
+               - out_c["metrics"][-1]["loss"]) < 0.05
+    # quarantined window logged without loss (nothing executed)
+    quar = [m for m in out["metrics"] if m.get("guard_action") == "quarantine"]
+    assert len(quar) == 1 and "loss" not in quar[0]
+
+
+def test_corrupt_carry_rollback_replay_is_bitwise_clean(tmp_path):
+    """A transient in-place carry corruption (cosmic ray / bad DMA) is
+    healed by one rollback+replay to BITWISE equality with the clean run —
+    the snapshot ring restores known-good state and the step-keyed stream
+    replays exactly."""
+    clean = _trainer(tmp_path / "clean")
+    clean.run()
+    t = _trainer(tmp_path / "g", guard=GuardConfig(),
+                 plan=FaultPlan(corrupt_carry_at_update=4))
+    out = t.run()
+    g = out["guard"]
+    assert g["faults"] == 1 and g["rollbacks"] == 1
+    assert g["recoveries"] == [{"step": 12, "action": "replay",
+                                "attempts": 1}]
+    for a, b in zip(jax.tree.leaves(clean.carry), jax.tree.leaves(t.carry)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(clean.opt_state),
+                    jax.tree.leaves(t.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_policy_exhaustion_raises_stream_fault(tmp_path):
+    """'replay' cannot absorb a persistent input fault: the guard tries the
+    whole (single-rung) ladder, then surfaces StreamFault — NOT retryable,
+    because a deterministic replay-from-checkpoint would fault identically."""
+    from repro.runtime.trainer import RETRYABLE
+    t = _trainer(tmp_path, guard=GuardConfig(policy="replay-only"),
+                 plan=FaultPlan(nan_input_at=9, nan_input_len=3))
+    with pytest.raises(StreamFault, match="exhausted"):
+        t.run()
+    assert not issubclass(StreamFault, RETRYABLE)
+
+
+def test_corrupt_carry_helper_requires_influence():
+    with pytest.raises(ValueError, match="influence"):
+        corrupt_carry({"params": {"w": jnp.ones(3)}})
+
+
+# ---------------------------------------------------------------------------
+# Composition: rewire boundaries, crash supervisor, checkpoint faults
+# ---------------------------------------------------------------------------
+
+def _rewire_trainer(tmp_path, guard=None, plan=None, total=30, k=3):
+    from repro.optim.optimizers import masked_dynamic
+    from repro.sparsity import RewireSchedule
+    cfg = EGRUConfig(n_hidden=8, n_in=3, n_out=2, kind="gru")
+    masks = SP.make_masks(cfg, jax.random.key(7), 0.5)
+    params = SP.apply_masks(cells.init_params(cfg, jax.random.key(0)), masks)
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact", col_compact=True,
+                                       rewirable=True))
+    opt = masked_dynamic(make_optimizer("adamw", lr=1e-2), dict(masks))
+    sched = RewireSchedule(method="set", every_k=2, frac=0.3, t_end=4)
+    ocfg = OnlineTrainerConfig(total_steps=total, update_every=k,
+                               ckpt_every=0, ckpt_dir=str(tmp_path),
+                               log_every=1, seed=0)
+    return OnlineTrainer(ocfg, learner, opt, params, masks, _stream(cfg),
+                         rewire_schedule=sched, guard=guard, fault_plan=plan)
+
+
+def test_rollback_across_rewire_boundary_replays_identical_masks(tmp_path):
+    """Snapshots every 3 updates, rewire events every 2, carry corrupted
+    right after the event at update 4 fired: the rollback lands on the
+    update-3 snapshot (BEFORE the event), so the replay re-fires event #1 —
+    and because snapshots carry the mask state + event counter and event
+    keys are deterministic, the final masks, carry, and event count are
+    bitwise identical to the clean run."""
+    clean = _rewire_trainer(tmp_path / "clean")
+    out_c = clean.run()
+    assert out_c["rewire_events"] >= 4
+    t = _rewire_trainer(tmp_path / "g",
+                        guard=GuardConfig(snapshot_every=3),
+                        plan=FaultPlan(corrupt_carry_at_update=4))
+    out = t.run()
+    g = out["guard"]
+    assert g["rollbacks"] == 1
+    assert g["recoveries"] == [{"step": 12, "action": "replay",
+                                "attempts": 1}]
+    assert out["rewire_events"] == out_c["rewire_events"]
+    for a, b in zip(jax.tree.leaves(clean.carry), jax.tree.leaves(t.carry)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_guard_composes_with_crash_restart(tmp_path):
+    """NaN quarantine in attempt 0, injected crash later, supervisor
+    restarts from the checkpoint: the run completes all-finite — guard,
+    checkpointing, and the restart supervisor are one fabric."""
+    from repro.runtime.trainer import run_with_restart
+
+    trainers = []
+
+    def make_trainer(attempt=0):
+        t = _trainer(tmp_path, guard=GuardConfig(), ckpt_every=2,
+                     fail_at=8 if attempt == 0 else -1,
+                     plan=FaultPlan(nan_input_at=9, nan_input_len=3))
+        trainers.append(t)
+        return t
+
+    out = run_with_restart(make_trainer)
+    assert out["restarts"] == 1
+    assert out["final_step"] == 30
+    assert _all_finite(trainers[-1])
+    # the fault was absorbed in attempt 0, before the crash
+    assert trainers[0].guard.quarantined == [{"start": 9, "len": 3,
+                                              "update": 3}]
+
+
+def test_ckpt_write_fault_retries_under_guard(tmp_path):
+    """The guard arms CheckpointManager retries (ckpt_retries): a transient
+    write fault is absorbed inside the manager and the run never notices."""
+    t = _trainer(tmp_path, guard=GuardConfig(ckpt_retries=2), ckpt_every=2,
+                 plan=FaultPlan(fail_ckpt_writes=1))
+    out = t.run()
+    assert out["final_step"] == 30
+    assert t.ckpt.latest_step() == out["updates"]
+
+
+def test_ckpt_write_failure_is_retryable_by_supervisor(tmp_path):
+    """Without retries, a persistent write fault surfaces as CheckpointError
+    on a later save() — which the restart supervisor treats as retryable,
+    so the run still completes (restarting with a healthy filesystem)."""
+    from repro.runtime.trainer import run_with_restart
+
+    def make_trainer(attempt=0):
+        plan = (FaultPlan(fail_ckpt_writes=2) if attempt == 0 else None)
+        return _trainer(tmp_path, ckpt_every=2, plan=plan)
+
+    out = run_with_restart(make_trainer)
+    assert out["restarts"] == 1
+    assert out["final_step"] == 30
+
+
+# ---------------------------------------------------------------------------
+# Satellites: straggler watchdog, elastic re-mesh resume
+# ---------------------------------------------------------------------------
+
+def test_online_straggler_counter(tmp_path):
+    t = _trainer(tmp_path)
+    t.cfg.straggler_factor = 0.0          # every window counts (after EMA init)
+    out = t.run()
+    assert out["stragglers"] >= out["updates"] - 2
+    t2 = _trainer(tmp_path)               # sane factor: no stragglers flagged
+    assert t2.run()["stragglers"] <= 2
+
+
+def test_online_resume_onto_different_mesh(tmp_path):
+    """Elastic re-mesh: OnlineTrainer.try_resume places every restored leaf
+    (carry, opt, RNG key-data, counters) with the TARGET shardings, and the
+    resumed run matches an uninterrupted one bitwise."""
+    from repro.launch.mesh import make_host_mesh
+    a = _trainer(tmp_path / "run", ckpt_every=2, total=30)
+    a.run()
+
+    clean = _trainer(tmp_path / "clean", total=48)
+    clean.run()
+
+    mesh = make_host_mesh()
+    b = _trainer(tmp_path / "run", ckpt_every=2, total=48)
+    b.shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               b._ckpt_tree())
+    assert b.try_resume()
+    assert b.step == 30 and b.update == 10
+    for leaf in jax.tree.leaves(b.carry):
+        assert leaf.sharding.is_equivalent_to(NamedSharding(mesh, P()),
+                                              leaf.ndim)
+    b.run()
+    for x, y in zip(jax.tree.leaves(clean.carry), jax.tree.leaves(b.carry)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -96,7 +96,31 @@ def test_serving_engine_generates():
     eng = Engine(cfg, ServeConfig(batch_slots=2, max_seq=32))
     outs = eng.generate([[1, 2, 3], [4, 5]], max_new=6)
     assert all(len(o) == 6 for o in outs)
+    assert eng.failed_requests == set()
     # greedy decoding is deterministic
     eng2 = Engine(cfg, ServeConfig(batch_slots=2, max_seq=32))
     outs2 = eng2.generate([[1, 2, 3], [4, 5]], max_new=6)
     assert outs == outs2
+
+
+def test_serving_per_request_budget_fails_only_stuck_request():
+    """Graceful degradation: a request exceeding its step budget is failed
+    ALONE — partial output returned, slot freed — while every other
+    request completes normally (no global serve-loop RuntimeError)."""
+    from repro.configs import get_config, smoke_config
+    from repro.runtime.serving import Engine, ServeConfig
+    cfg = smoke_config(get_config("rwkv6-3b"))
+    # budget 6: [4, 5] needs 2 prefill + 3 emit = 5 steps and completes;
+    # the 8-token prompt exhausts its budget mid-prefill and is cut off
+    eng = Engine(cfg, ServeConfig(batch_slots=2, max_seq=32,
+                                  max_request_steps=6))
+    outs = eng.generate([[1, 2, 3, 4, 5, 6, 7, 8], [4, 5]], max_new=3)
+    assert eng.failed_requests == {0}
+    assert len(outs[0]) < 3               # partial (here: still prefilling)
+    assert len(outs[1]) == 3              # unaffected
+    # the failed request matches the healthy engine's output prefix
+    eng2 = Engine(cfg, ServeConfig(batch_slots=2, max_seq=32))
+    outs2 = eng2.generate([[1, 2, 3, 4, 5, 6, 7, 8], [4, 5]], max_new=3)
+    assert eng2.failed_requests == set()
+    assert outs2[0][: len(outs[0])] == outs[0]
+    assert outs2[1] == outs[1]
