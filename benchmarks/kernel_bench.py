@@ -25,12 +25,13 @@ import numpy as np
 
 from repro.core import cells, sparse_rtrl as SP, stacked_rtrl as ST
 from repro.core.cells import EGRUConfig
-from repro.core.costs import (influence_carry_bytes, influence_update_flops,
-                              savings_factor,
+from repro.core.costs import (influence_carry_bytes, influence_update_bytes,
+                              influence_update_flops,
+                              ragged_influence_update_flops, savings_factor,
                               stacked_influence_update_flops,
                               tpu_block_factor)
 from repro.core.sparse_rtrl import make_masks
-from repro.kernels import ops
+from repro.kernels import compact_fused as CF, ops
 from repro.kernels.compact import (compact_grads, compact_influence_step,
                                    compact_init)
 
@@ -71,6 +72,8 @@ def run(rows: list):
     egru_step_bench(rows, n=96, beta=0.8, reps=2)   # smoke-sized wall clock
     stacked_egru_step_bench(rows, n=96, L=2, beta=0.8, reps=1)
     dual_compact_step_bench(rows, n=96, beta=0.8, omega=0.9, reps=2)
+    fused_compact_step_bench(rows, n=96, beta=0.8, omega=0.9, batch=4,
+                             samples=3)
     rewire_bench(rows, n=96, beta=0.8, omega=0.9, reps=3, events=3,
                  budget=0.15)      # shared-runner smoke: loose budget
     guard_overhead_bench(rows, n=96, beta=0.8, omega=0.9, reps=5,
@@ -332,6 +335,106 @@ def dual_compact_step_bench(rows: list, n=256, n_in=8, beta=0.8, omega=0.9,
     return rec
 
 
+def _time_ms_interleaved(fn_args, samples=5, reps=1) -> list:
+    """Min-of-samples wall clock for several AOT-compiled callables,
+    INTERLEAVED (A B A B ...) so shared-runner noise hits every candidate
+    equally — on a noisy single-core box the mean is dominated by scheduler
+    stalls; the interleaved min is the reproducible statistic."""
+    for fn, fargs in fn_args:                       # warm every candidate
+        jax.block_until_ready(fn(*fargs))
+    best = [float("inf")] * len(fn_args)
+    for _ in range(samples):
+        for i, (fn, fargs) in enumerate(fn_args):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = fn(*fargs)
+            jax.block_until_ready(out)
+            best[i] = min(best[i], (time.perf_counter() - t0) / reps * 1e3)
+    return best
+
+
+def fused_compact_step_bench(rows: list, n=256, n_in=8, beta=0.8, omega=0.9,
+                             batch=4, block=8, margin=1.25,
+                             samples=5, reps=1) -> dict:
+    """Fused (kernels/compact_fused.py) vs unfused dual-compact wall clock
+    for one EGRU RTRL step (partials + influence update; the gradient
+    extraction is identical code either way and is excluded).
+
+    Both paths carry the SAME dual-compact state [B, K, Pc_pad]; the fused
+    path runs the gather + [K x K'] x [K' x Pc] contraction + M-bar + hp
+    scale as one ragged invocation, so at batch > 1 it additionally drops
+    the batch tax (per-example K_b instead of the batch-wide K).  Also
+    times the opt-in bf16 carry and reports the per-example row stats and
+    the ragged/batch-max FLOP ratio the raggedness skips.  Timing is the
+    interleaved min-of-samples (see `_time_ms_interleaved`) — NOT
+    comparable to the mean-of-reps numbers of `dual_compact_step_bench`."""
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, n_in, omega, batch, block, margin)
+    layout = SP.flat_layout(cfg)
+    cl = SP.col_layout(layout, masks)
+    segs = CF.fused_segments(layout, cl)
+
+    def dual_step(a, vals, idx, x):
+        a_new, hp, vals, idx, count, ov = SP.flat_compact_step(
+            cfg, w, layout, a, vals, idx, x, cl=cl)
+        return a_new, vals, idx, count, ov
+
+    def fused_step(a, vals, idx, x):
+        a_new, hp, vals, idx, count, ov = SP.flat_compact_fused_step(
+            cfg, w, layout, a, vals, idx, x, cl=cl, segments=segs)
+        return a_new, vals, idx, count, ov
+
+    idx0 = jnp.full((batch, K), -1, jnp.int32)
+    vals0 = jnp.zeros((batch, K, cl.Pc_pad), jnp.float32)
+    vals0_h = vals0.astype(jnp.bfloat16)
+    f_dual = jax.jit(dual_step).lower(a, vals0, idx0, x).compile()
+    f_fused = jax.jit(fused_step).lower(a, vals0, idx0, x).compile()
+    f_fused_h = jax.jit(fused_step).lower(a, vals0_h, idx0, x).compile()
+
+    # one warm step -> a realistic ragged carry as the timed operand
+    a1, vals1, idx1, count1, ov1 = f_dual(a, vals0, idx0, x)
+    kb = np.asarray((idx1 >= 0).sum(axis=1))        # per-example K_b
+    t_dual, t_fused, t_fused_h = _time_ms_interleaved(
+        [(f_dual, (a1, vals1, idx1, x)),
+         (f_fused, (a1, vals1, idx1, x)),
+         (f_fused_h, (a1, vals1.astype(jnp.bfloat16), idx1, x))],
+        samples=samples, reps=reps)
+
+    flops_max = batch * influence_update_flops(n, layout.P_pad, K=K,
+                                               K_prev=K, Pc=cl.Pc_pad)
+    flops_ragged = ragged_influence_update_flops(kb, kb, cl.Pc_pad)
+    bytes_f32 = influence_update_bytes(batch, K, K, cl.Pc_pad, n, 4)
+    bytes_bf16 = influence_update_bytes(batch, K, K, cl.Pc_pad, n, 2)
+    carry_f32 = influence_carry_bytes(batch, K, cl.Pc_pad, 4)
+    carry_bf16 = influence_carry_bytes(batch, K, cl.Pc_pad, 2)
+    rec = {"n": n, "n_in": n_in, "batch": batch, "beta_target": beta,
+           "beta_measured": round(beta_meas, 4), "omega": omega,
+           "block": block, "K": K, "Pc": cl.Pc, "Pc_pad": cl.Pc_pad,
+           "k_b": kb.tolist(), "k_min": int(kb.min()),
+           "k_mean": round(float(kb.mean()), 2), "k_max": int(kb.max()),
+           "ragged_utilization": round(float(kb.sum()) / (batch * K), 4),
+           "overflow": int(np.max(np.asarray(ov1))),
+           "dual_ms": round(t_dual, 3), "fused_ms": round(t_fused, 3),
+           "fused_bf16_ms": round(t_fused_h, 3),
+           "speedup_fused_over_dual": round(t_dual / t_fused, 2),
+           "flops_batch_max": flops_max, "flops_ragged": flops_ragged,
+           "ragged_flop_ratio": round(flops_ragged / flops_max, 4),
+           "update_bytes_f32": bytes_f32, "update_bytes_bf16": bytes_bf16,
+           "bf16_bytes_ratio": round(bytes_bf16 / bytes_f32, 4),
+           "carry_bytes_f32": carry_f32, "carry_bytes_bf16": carry_bf16,
+           "bf16_carry_ratio": round(carry_bf16 / carry_f32, 4),
+           "timing": "interleaved min of %d samples" % samples}
+    tag = f"kernel/fused_step/n{n}_b{batch}_w{omega}"
+    rows.append((f"{tag}/dual_ms", f"{t_dual:.1f}",
+                 f"K={K}_kb={kb.tolist()}"))
+    rows.append((f"{tag}/fused_ms", f"{t_fused:.1f}",
+                 f"x{t_dual / t_fused:.2f}_vs_dual_ragged_util="
+                 f"{rec['ragged_utilization']:.2f}"))
+    rows.append((f"{tag}/fused_bf16_ms", f"{t_fused_h:.1f}",
+                 f"carry_ratio={rec['bf16_carry_ratio']:.2f}"))
+    return rec
+
+
 def online_step_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9,
                       batch=1, block=8, margin=1.25, reps=20) -> list:
     """STEADY-STATE per-step latency of the streaming Learner API — the
@@ -561,6 +664,14 @@ if __name__ == "__main__":
     ap.add_argument("--guard-only", action="store_true",
                     help="run only guard_overhead_bench and merge its "
                          "record into the (existing) output JSON")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="run only fused_compact_step_bench and merge its "
+                         "record into the (existing) output JSON")
+    ap.add_argument("--fused-omega", type=float, nargs="+",
+                    default=[0.5, 0.9])
+    ap.add_argument("--samples", type=int, default=5,
+                    help="interleaved min-of-samples count for the fused "
+                         "bench")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: repo-root BENCH_kernels.json"
                          ", or BENCH_kernels.ci.json with --smoke so the "
@@ -593,10 +704,22 @@ if __name__ == "__main__":
         if Path(args.out).exists():
             out = json.loads(Path(args.out).read_text())
         out["guard_overhead"] = guard
+    elif args.fused_only:
+        fused = [fused_compact_step_bench(rows, n=n, beta=args.beta,
+                                          omega=om, batch=b,
+                                          samples=args.samples)
+                 for n in args.sweep_n for om in args.fused_omega
+                 for b in args.sweep_batch]
+        out = {}
+        if Path(args.out).exists():
+            out = json.loads(Path(args.out).read_text())
+        out["fused_sweep"] = fused
     elif args.smoke:
         sweep = [dual_compact_step_bench(rows, n=96, beta=args.beta,
                                          omega=0.9, batch=b, reps=2)
                  for b in (1, 4)]
+        fused = [fused_compact_step_bench(rows, n=96, beta=args.beta,
+                                          omega=0.9, batch=4, samples=3)]
         online = online_step_bench(rows, n=96, beta=args.beta, omega=0.9,
                                    reps=5)
         rewire = [rewire_bench(rows, n=96, beta=args.beta, omega=0.9,
@@ -604,13 +727,14 @@ if __name__ == "__main__":
         guard = guard_overhead_bench(rows, n=96, beta=args.beta, omega=0.9,
                                      reps=5, budget=0.25)
         out = {"compact_sweep": sweep,
+               "fused_sweep": fused,
                "online_step": online,
                "rewire": rewire,
                "guard_overhead": guard,
                "note": "CI smoke: dual (row x column) compact vs row-only "
-                       "compact + online per-step latency + per-event "
-                       "rewire migration cost + guard overhead, tiny n; "
-                       "CPU wall clock, f32"}
+                       "compact + fused-vs-unfused dual step + online "
+                       "per-step latency + per-event rewire migration cost "
+                       "+ guard overhead, tiny n; CPU wall clock, f32"}
     else:
         recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
                 for n in args.n]
@@ -622,6 +746,11 @@ if __name__ == "__main__":
                                          omega=om, batch=b, reps=args.reps)
                  for n in args.sweep_n for om in args.sweep_omega
                  for b in args.sweep_batch]
+        fused = [fused_compact_step_bench(rows, n=n, beta=args.beta,
+                                          omega=om, batch=b,
+                                          samples=args.samples)
+                 for n in args.sweep_n for om in args.fused_omega
+                 for b in args.sweep_batch]
         online = online_step_bench(rows, n=args.sweep_n[0], beta=args.beta,
                                    omega=0.9, reps=max(args.reps, 10))
         rewire = [rewire_bench(rows, n=n, beta=args.beta, omega=om,
@@ -632,6 +761,7 @@ if __name__ == "__main__":
         out = {"egru_step": recs,
                "stacked_egru_step": stacked_recs,
                "compact_sweep": sweep,
+               "fused_sweep": fused,
                "online_step": online,
                "rewire": rewire,
                "guard_overhead": guard,

@@ -1,15 +1,166 @@
-"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+"""MEASURED compute-vs-bandwidth roofline for the fused dual-compact
+influence kernel (kernels/compact_fused.py), plus the model-predicted
+roofline table from the dry-run artifacts (experiments/dryrun/*.json).
 
-Per (arch x shape x mesh): the three terms (compute / memory / collective,
-seconds per step), dominant bottleneck, MODEL_FLOPS/HLO ratio, and per-device
-HBM residency.  Also emits the markdown table EXPERIMENTS.md embeds."""
+The measured section is the real thing: this host's attainable GEMM
+FLOP/s and copy bandwidth are measured first (min-of-samples — on a noisy
+shared runner the mean is scheduler stalls), then each (n, omega, batch,
+influence dtype) operating point runs the fused RTRL step and is placed on
+the roofline with
+
+  compute_s = executed FLOPs / peak FLOP/s     (FLOPs from
+              costs.ragged_influence_update_flops — the Sigma_b K_b K'_b Pc
+              work the ragged kernel actually performs)
+  memory_s  = minimum HBM traffic / peak bandwidth    (bytes from
+              costs.influence_update_bytes — one carry read + one write at
+              the carry dtype + the J-hat / M-bar / index side arrays)
+
+whichever is larger is the bound; attained/bound is the efficiency column.
+A point near its bound says the lowering is running as fast as this machine
+allows for that operating point; bf16 rows halve memory_s but not
+compute_s, so they show whether the point is bandwidth-limited in practice.
+
+``python benchmarks/roofline.py`` writes BENCH_roofline.json at the repo
+root and prints the markdown table (--smoke: tiny grid, BENCH_roofline.ci
+.json — the CI artifact).  `run(rows)` (benchmarks/run.py) appends one
+measured point plus the dry-run summary.
+"""
 from __future__ import annotations
 
 import json
+import os
+import sys
+import time
 from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 DRYRUN_DIR = Path("experiments/dryrun")
 
+
+# ---------------------------------------------------------------------------
+# Measured machine peaks
+# ---------------------------------------------------------------------------
+
+def measure_peaks(samples: int = 5) -> dict:
+    """Attainable f32 GEMM FLOP/s and copy bandwidth on THIS host."""
+    import jax
+    import jax.numpy as jnp
+
+    m = 512
+    a = jax.random.normal(jax.random.key(0), (m, m), jnp.float32)
+    b = jax.random.normal(jax.random.key(1), (m, m), jnp.float32)
+    mm = jax.jit(lambda a, b: a @ b)
+    jax.block_until_ready(mm(a, b))
+    t_mm = min(_once(mm, (a, b)) for _ in range(samples))
+    flops = 2.0 * m ** 3 / t_mm
+
+    big = jax.random.normal(jax.random.key(2), (16 * 1024 * 1024,),
+                            jnp.float32)                       # 64 MB
+    cp = jax.jit(lambda x: x + 1.0)                            # read + write
+    jax.block_until_ready(cp(big))
+    t_cp = min(_once(cp, (big,)) for _ in range(samples))
+    bw = 2.0 * big.nbytes / t_cp
+    return {"peak_flops": flops, "peak_bw_bytes": bw,
+            "gemm_gflops": round(flops / 1e9, 2),
+            "copy_gbps": round(bw / 1e9, 2)}
+
+
+def _once(fn, args) -> float:
+    import jax
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Measured kernel roofline
+# ---------------------------------------------------------------------------
+
+def kernel_roofline_point(peaks: dict, n: int, omega: float, batch: int,
+                          dtype: str = "float32", samples: int = 5) -> dict:
+    """Place ONE fused-step operating point on the measured roofline."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from kernel_bench import _egru_operating_point, _time_ms_interleaved
+    from repro.core import sparse_rtrl as SP
+    from repro.core.costs import (influence_update_bytes,
+                                  ragged_influence_update_flops)
+    from repro.kernels import compact_fused as CF
+
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, 8, omega, batch, 8, 1.25)
+    layout = SP.flat_layout(cfg, dtype)
+    cl = SP.col_layout(layout, masks)
+    segs = CF.fused_segments(layout, cl)
+
+    def fused_step(a, vals, idx, x):
+        a_new, hp, vals, idx, count, ov = SP.flat_compact_fused_step(
+            cfg, w, layout, a, vals, idx, x, cl=cl, segments=segs)
+        return a_new, vals, idx, count, ov
+
+    idx0 = jnp.full((batch, K), -1, jnp.int32)
+    vals0 = jnp.zeros((batch, K, cl.Pc_pad), layout.carry_dtype)
+    f = jax.jit(fused_step).lower(a, vals0, idx0, x).compile()
+    a1, vals1, idx1, count1, ov1 = f(a, vals0, idx0, x)
+    kb = np.asarray((idx1 >= 0).sum(axis=1))
+    (t_ms,) = _time_ms_interleaved([(f, (a1, vals1, idx1, x))],
+                                   samples=samples)
+    t = t_ms / 1e3
+
+    dtype_bytes = 2 if layout.carry_dtype == jnp.bfloat16 else 4
+    flops = ragged_influence_update_flops(kb, kb, cl.Pc_pad)
+    nbytes = influence_update_bytes(batch, K, K, cl.Pc_pad, n, dtype_bytes)
+    compute_s = flops / peaks["peak_flops"]
+    memory_s = nbytes / peaks["peak_bw_bytes"]
+    bound_s = max(compute_s, memory_s)
+    return {"n": n, "omega": omega, "batch": batch, "dtype": dtype,
+            "beta_measured": round(beta_meas, 4), "K": K, "Pc_pad": cl.Pc_pad,
+            "k_b": kb.tolist(), "overflow": int(np.max(np.asarray(ov1))),
+            "flops": flops, "bytes": nbytes,
+            "arithmetic_intensity": round(flops / nbytes, 3),
+            "measured_ms": round(t_ms, 3),
+            "compute_ms": round(compute_s * 1e3, 3),
+            "memory_ms": round(memory_s * 1e3, 3),
+            "bound": "compute" if compute_s >= memory_s else "bandwidth",
+            "attained_gflops": round(flops / t / 1e9, 2),
+            "attained_gbps": round(nbytes / t / 1e9, 2),
+            "efficiency": round(bound_s / t, 3)}
+
+
+KERNEL_HEADER = (
+    "| n | ω | B | dtype | K_b | FLOPs | bytes | AI | measured ms "
+    "| compute ms | memory ms | bound | attained GF/s | eff |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def kernel_row(r: dict) -> str:
+    return (f"| {r['n']} | {r['omega']} | {r['batch']} | {r['dtype']} "
+            f"| {r['k_b']} | {r['flops']:.3g} | {r['bytes']:.3g} "
+            f"| {r['arithmetic_intensity']} | {r['measured_ms']} "
+            f"| {r['compute_ms']} | {r['memory_ms']} | {r['bound']} "
+            f"| {r['attained_gflops']} | {r['efficiency']} |")
+
+
+def measured_roofline(ns=(96, 256), omegas=(0.5, 0.9), batches=(1, 4),
+                      dtypes=("float32", "bfloat16"),
+                      samples: int = 5) -> dict:
+    peaks = measure_peaks(samples)
+    points = [kernel_roofline_point(peaks, n, om, b, dt, samples)
+              for n in ns for om in omegas for b in batches
+              for dt in dtypes]
+    return {"peaks": peaks, "points": points,
+            "note": "fused dual-compact step (kernels/compact_fused.py); "
+                    "FLOPs/bytes from core/costs.py; interleaved "
+                    "min-of-samples wall clock"}
+
+
+# ---------------------------------------------------------------------------
+# Dry-run model summary (experiments/dryrun/*.json), kept as-is
+# ---------------------------------------------------------------------------
 
 def load_cells(mesh="single", tag=""):
     cells = []
@@ -40,6 +191,15 @@ HEADER = ("| arch | shape | compute_s | mem_s (unfused) | mem_s (fused) "
 
 
 def run(rows: list):
+    # measured fused-kernel roofline, one smoke-sized point
+    peaks = measure_peaks(samples=3)
+    rows.append(("roofline/peak_gemm_gflops", f"{peaks['gemm_gflops']:.1f}",
+                 f"copy_gbps={peaks['copy_gbps']:.1f}"))
+    pt = kernel_roofline_point(peaks, 96, 0.9, 4, "float32", samples=3)
+    rows.append((f"roofline/fused/n{pt['n']}_b{pt['batch']}_w{pt['omega']}",
+                 f"{pt['measured_ms']:.2f}ms",
+                 f"bound={pt['bound']}_eff={pt['efficiency']:.2f}"))
+    # dry-run model summary
     cells = load_cells("single")
     ok = [c for c in cells if c.get("status") == "ok"]
     rows.append(("roofline/cells_ok", len(ok), f"of_{len(cells)}_single_pod"))
@@ -68,4 +228,28 @@ def markdown_table(mesh="single", tag="") -> str:
 
 
 if __name__ == "__main__":
-    print(markdown_table())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid (n=96 only) -> BENCH_roofline.ci.json")
+    ap.add_argument("--samples", type=int, default=5)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    root = Path(__file__).resolve().parents[1]
+    if args.out is None:
+        args.out = str(root / ("BENCH_roofline.ci.json" if args.smoke
+                               else "BENCH_roofline.json"))
+    if args.smoke:
+        rec = measured_roofline(ns=(96,), omegas=(0.9,), batches=(1, 4),
+                                samples=min(args.samples, 3))
+    else:
+        rec = measured_roofline(samples=args.samples)
+    pk = rec["peaks"]
+    print(f"machine peaks: GEMM {pk['gemm_gflops']} GF/s, "
+          f"copy {pk['copy_gbps']} GB/s\n")
+    print(KERNEL_HEADER)
+    for r in rec["points"]:
+        print(kernel_row(r))
+    Path(args.out).write_text(json.dumps(rec, indent=1))
+    print(f"\nwrote {args.out}")

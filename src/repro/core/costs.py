@@ -126,6 +126,33 @@ def influence_carry_bytes(B: int, K: int, P: int,
     return B * K * P * dtype_bytes + B * K * 4
 
 
+def ragged_influence_update_flops(Kbs, Kbs_prev, Pc: int) -> float:
+    """MXU FLOPs of one RAGGED fused influence update: Sigma_b 2 K_b K'_b Pc
+    (madd = 2 ops).  This is what the fused kernel EXECUTES — per-example
+    capacities instead of the batch-wide max of `influence_update_flops`;
+    the ratio of the two is the batch tax the ragged grid skips."""
+    Kbs = np.asarray(Kbs, float)
+    Kbs_prev = np.asarray(Kbs_prev, float)
+    return float(2.0 * Pc * np.sum(Kbs * Kbs_prev))
+
+
+def influence_update_bytes(B: int, K: int, K_prev: int, Pc: int, n: int,
+                           dtype_bytes: int = 4) -> int:
+    """Minimum HBM traffic of one fused influence update: the carry read
+    [B, K_prev, Pc] + write [B, K, Pc] at the carry dtype (bf16 halves
+    both), plus the f32 J-hat pass [B, n, n], the gathered M-bar rows
+    [B, K, Pc] (f32), and the int32 index/count side arrays.  With the fused
+    kernel this is ALSO the total traffic — gather, contraction, M-bar add
+    and hp scale share one read and one write of the carry; the unfused
+    chain re-streams the [B, K, Pc] intermediate at least twice more.
+    Pairs with `influence_update_flops` to place a config on a roofline."""
+    carry = (B * K_prev * Pc + B * K * Pc) * dtype_bytes
+    jhat = B * n * n * 4
+    mbar = B * K * Pc * 4
+    side = 2 * B * K * 4 + B * K * 4 + 2 * B * 4     # idx pair, hp rows, counts
+    return carry + jhat + mbar + side
+
+
 def live_col_fraction(live_cols: int, total_cols: int) -> float:
     """Live fraction of a parameter-column axis — the w~ factor.  The ONE
     definition shared by `sparse_rtrl.flat_col_density` (layout-level) and

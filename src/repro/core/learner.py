@@ -81,9 +81,14 @@ class LearnerSpec:
                  stacked           StackedEGRUConfig (or EGRUConfig + layers)
                  scaled            scaled_rtrl.ScaledRTRLConfig
                  diag              diag_rtrl.DiagCellConfig
-    backend    sparse/stacked influence execution: dense | pallas | compact
+    backend    sparse/stacked influence execution:
+               dense | pallas | compact | compact_fused
     col_compact carry the influence parameter axis column-compact
-               (None = auto: masks given and backend != dense)
+               (None = auto: masks given and backend != dense;
+               compact_fused always carries column-compact)
+    influence_dtype  carry dtype of the influence state: 'float32' |
+               'bfloat16' (bf16 halves the per-stream carry bytes; every
+               contraction still accumulates f32)
     layers     stacked depth when cfg is a plain EGRUConfig
     capacity   compact-backend static row-capacity fraction
     interpret  force Pallas interpret mode (None = auto)
@@ -102,6 +107,7 @@ class LearnerSpec:
     cfg: Any = None
     backend: str = "dense"
     col_compact: bool | None = None
+    influence_dtype: str = "float32"
     layers: int = 1
     capacity: float = 1.0
     interpret: bool | None = None
@@ -229,6 +235,15 @@ class SparseLearner(_LearnerBase):
         if spec.backend not in SP.BACKENDS:
             raise ValueError(
                 f"backend must be one of {SP.BACKENDS}, got {spec.backend!r}")
+        if spec.backend == "compact_fused" and spec.rewirable:
+            raise ValueError(
+                "backend='compact_fused' compiles a static gate-segment "
+                "table from the ColLayout, so runtime mask rewiring is not "
+                "supported — use backend='compact' with rewirable=True")
+        if (SP.influence_carry_dtype(spec.influence_dtype) != jnp.float32
+                and spec.backend in ("dense", "pallas")):
+            raise ValueError("influence_dtype='bfloat16' needs a compact "
+                             "carry (backend 'compact' or 'compact_fused')")
         self.spec = spec
         self.cfg: EGRUConfig = spec.cfg
         self.backend = spec.backend
@@ -240,7 +255,12 @@ class SparseLearner(_LearnerBase):
         x0, y0 = batch
         B = x0.shape[0]
         col_compact = self.spec.col_compact
-        if col_compact is None:
+        if self.backend == "compact_fused":
+            if col_compact is False:
+                raise ValueError("compact_fused always carries the "
+                                 "parameter axis column-compact")
+            col_compact = True
+        elif col_compact is None:
             col_compact = masks is not None and self.backend != "dense"
         if self.spec.rewirable and masks is None:
             raise ValueError("rewirable=True requires parameter masks")
@@ -259,11 +279,15 @@ class SparseLearner(_LearnerBase):
                 lambda x: jnp.zeros_like(x, jnp.float32),
                 cells.rec_param_tree(params))
             return self._attach_rw(carry, rw, x0, y0)
-        layout = SP.flat_layout(cfg)
+        layout = SP.flat_layout(cfg, self.spec.influence_dtype)
         self.layout = layout
         self._colm = SP.flat_col_mask(layout, masks)
         if col_compact:
             self._cl = SP.col_layout(layout, masks)
+        self._segs = None
+        if self.backend == "compact_fused":
+            from repro.kernels import compact_fused as CF
+            self._segs = CF.fused_segments(layout, self._cl)
         if rw is not None:
             if self._cl is not None:
                 rw["cl"] = _cl_arrays(self._cl)
@@ -278,7 +302,7 @@ class SparseLearner(_LearnerBase):
             carry["M"] = jnp.zeros((B, layout.n, P_carry), jnp.float32)
         else:
             K = SP.capacity_K(cfg.n_hidden, self.spec.capacity)
-            carry["vals"] = jnp.zeros((B, K, P_carry), jnp.float32)
+            carry["vals"] = jnp.zeros((B, K, P_carry), layout.carry_dtype)
             carry["idx"] = jnp.full((B, K), -1, jnp.int32)
         return self._attach_rw(carry, rw, x0, y0)
 
@@ -337,13 +361,21 @@ class SparseLearner(_LearnerBase):
             new["gw"] = carry["gw"] + gw_t
             new["M"] = M_new
             row_density = jnp.mean(jnp.any(M_new != 0.0, axis=2))
-        else:                                   # compact
+        else:                                   # compact / compact_fused
             from repro.kernels import compact as CK
             colm = rw.get("colm", self._colm) if rw is not None else self._colm
-            a_new, hp, vals_new, idx_new, count, overflow = \
-                SP.flat_compact_step(cfg, w, self.layout, carry["a"],
-                                     carry["vals"], carry["idx"], x_t,
-                                     colm, cl=cl)
+            if self.backend == "compact_fused":
+                a_new, hp, vals_new, idx_new, count, overflow = \
+                    SP.flat_compact_fused_step(
+                        cfg, w, self.layout, carry["a"], carry["vals"],
+                        carry["idx"], x_t, cl=cl, segments=self._segs,
+                        use_kernel=True if self.spec.interpret else None,
+                        interpret=self.spec.interpret)
+            else:
+                a_new, hp, vals_new, idx_new, count, overflow = \
+                    SP.flat_compact_step(cfg, w, self.layout, carry["a"],
+                                         carry["vals"], carry["idx"], x_t,
+                                         colm, cl=cl)
             lt, (gout_t, cbar) = jax.value_and_grad(
                 self._inst_loss, argnums=(0, 1))(params["out"], a_new, y_t, tt)
             gw_t = CK.compact_grads(vals_new, idx_new, cbar)
@@ -568,6 +600,15 @@ class StackedLearner(_LearnerBase):
         if spec.backend not in SP.BACKENDS:
             raise ValueError(
                 f"backend must be one of {SP.BACKENDS}, got {spec.backend!r}")
+        if spec.backend == "compact_fused" and spec.rewirable:
+            raise ValueError(
+                "backend='compact_fused' compiles a static gate-segment "
+                "table from the ColLayout, so runtime mask rewiring is not "
+                "supported — use backend='compact' with rewirable=True")
+        if (SP.influence_carry_dtype(spec.influence_dtype) != jnp.float32
+                and spec.backend in ("dense", "pallas")):
+            raise ValueError("influence_dtype='bfloat16' needs a compact "
+                             "carry (backend 'compact' or 'compact_fused')")
         self.spec = spec
         self.cfg = self._stacked_cfg(spec)
         self.backend = spec.backend
@@ -579,7 +620,12 @@ class StackedLearner(_LearnerBase):
         B = x0.shape[0]
         L = cfg.n_layers
         col_compact = self.spec.col_compact
-        if col_compact is None:
+        if self.backend == "compact_fused":
+            if col_compact is False:
+                raise ValueError("compact_fused always carries the "
+                                 "parameter axis column-compact")
+            col_compact = True
+        elif col_compact is None:
             col_compact = masks is not None and self.backend != "dense"
         if self.spec.rewirable and masks is None:
             raise ValueError("rewirable=True requires parameter masks")
@@ -593,6 +639,12 @@ class StackedLearner(_LearnerBase):
             else None
         self._klives = None if self._cl is None \
             else ST.layer_col_lives(slayout, self._cl)
+        self._segs = None
+        if self.backend == "compact_fused":
+            from repro.kernels import compact_fused as CF
+            self._segs = tuple(
+                CF.fused_segments(slayout.layers[l], self._cl, layer=l)
+                for l in range(L))
         if self.backend == "pallas":
             self._jms = tuple(
                 SP.flat_jmask(self.lcfgs[l],
@@ -620,7 +672,8 @@ class StackedLearner(_LearnerBase):
         else:
             Ks = tuple(SP.capacity_K(n, self.spec.capacity)
                        for n in cfg.layer_sizes)
-            carry["vals"] = tuple(jnp.zeros((B, K, P_carry), jnp.float32)
+            cdtype = SP.influence_carry_dtype(self.spec.influence_dtype)
+            carry["vals"] = tuple(jnp.zeros((B, K, P_carry), cdtype)
                                   for K in Ks)
             carry["idx"] = tuple(jnp.full((B, K), -1, jnp.int32) for K in Ks)
         return SparseLearner._attach_rw(carry, rw, x0, y0)
@@ -694,7 +747,9 @@ class StackedLearner(_LearnerBase):
             from repro.kernels.compact import compact_grads
             a_news, hps, vals_new, idx_new, ovs = ST.stacked_compact_step(
                 cfg, ws, slayout, carry["a"], carry["vals"], carry["idx"],
-                x_t, colms, cl=cl)
+                x_t, colms, cl=cl, backend=self.backend, segments=self._segs,
+                use_kernel=True if self.spec.interpret else None,
+                interpret=self.spec.interpret)
             lt, (gout_t, cbar) = jax.value_and_grad(
                 self._inst_loss, argnums=(0, 1))(params["out"], a_news[-1],
                                                  y_t, tt)
@@ -815,6 +870,17 @@ class ScaledLearner(_LearnerBase):
     Exact up to row-capacity overflow (reported per step)."""
 
     def __init__(self, spec: LearnerSpec):
+        # historical scaled specs carry the LearnerSpec default
+        # backend="dense"; the scaled engine is compact by construction, so
+        # only "compact_fused" changes the step — everything else is the
+        # legacy compact path
+        self.fused = spec.backend == "compact_fused"
+        if self.fused and spec.rewirable:
+            raise ValueError(
+                "backend='compact_fused' compiles a static gate-segment "
+                "table from the ColLayout, so runtime mask rewiring is not "
+                "supported — use backend='compact' with rewirable=True")
+        SP.influence_carry_dtype(spec.influence_dtype)   # validate early
         self.spec = spec
         self.cfg = spec.cfg                 # ScaledRTRLConfig
         self.stacked = self.cfg.n_layers > 1
@@ -825,7 +891,12 @@ class ScaledLearner(_LearnerBase):
         cfg = self.cfg
         x0, y0 = batch
         col_compact = self.spec.col_compact
-        if col_compact is None:
+        if self.fused:
+            if col_compact is False:
+                raise ValueError("compact_fused always carries the "
+                                 "parameter axis column-compact")
+            col_compact = True
+        elif col_compact is None:
             col_compact = masks is not None
         if self.spec.rewirable and not (masks is not None and col_compact):
             raise ValueError(
@@ -834,13 +905,24 @@ class ScaledLearner(_LearnerBase):
                 "grow-at-zero exactness only holds on the compact carry)")
         self._freeze_static(masks=masks, col_compact=col_compact)
         self._cl = cfg.col_layout(masks) if col_compact else None
+        self._segs = None
+        if self.fused:
+            from repro.kernels import compact_fused as CF
+            if self.stacked:
+                slayout = cfg.slayout()
+                self._segs = tuple(
+                    CF.fused_segments(slayout.layers[l], self._cl, layer=l)
+                    for l in range(cfg.n_layers))
+            else:
+                self._segs = CF.fused_segments(cfg.layout(), self._cl)
         if self._cl is not None:
             P_carry = self._cl.Pc_pad
         else:
             P_carry = (cfg.slayout().P_pad if self.stacked
                        else cfg.layout().P_pad)
         carry = self._base_carry(params, t_total)
-        carry["state"] = SC.init_state(cfg, self._cl)
+        carry["state"] = SC.init_state(cfg, self._cl,
+                                       self.spec.influence_dtype)
         carry["gw"] = jnp.zeros((P_carry,), jnp.float32)
         carry["gout"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
                                      params["out"])
@@ -863,8 +945,12 @@ class ScaledLearner(_LearnerBase):
         tt = carry["t_total"]
         rw = carry.get("rw")
         cl = self._cl_view(rw)
-        state, overflow = SC.compact_step(cfg, w, carry["state"], x_t,
-                                          cl=cl)
+        state, overflow = SC.compact_step(
+            cfg, w, carry["state"], x_t, cl=cl,
+            backend="compact_fused" if self.fused else "compact",
+            segments=self._segs,
+            use_kernel=True if self.spec.interpret else None,
+            interpret=self.spec.interpret)
         a_top = state["a"][-1] if self.stacked else state["a"]
         lt, (gout_t, cbar) = jax.value_and_grad(
             self._inst_loss, argnums=(0, 1))(params["out"], a_top, y_t, tt)

@@ -112,28 +112,34 @@ def init_params(cfg: ScaledRTRLConfig, key: jax.Array):
 # Compact influence state: flat [B, K, P] (P = n*m, lane-padded)
 # ---------------------------------------------------------------------------
 
-def init_state(cfg: ScaledRTRLConfig, cl=None):
+def init_state(cfg: ScaledRTRLConfig, cl=None,
+               influence_dtype: str = "float32"):
     """cl (a ColLayout from `cfg.col_layout(masks)`) carries the parameter
-    axis column-compact: vals width Pc_pad ~= w~ P_pad."""
+    axis column-compact: vals width Pc_pad ~= w~ P_pad.  influence_dtype
+    'bfloat16' stores the carry at half the bytes (f32 accumulation)."""
     B, K, n = cfg.batch, cfg.K, cfg.n
+    vdt = sparse_rtrl.influence_carry_dtype(influence_dtype)
     if cfg.n_layers > 1:
         P_carry = cl.Pc_pad if cl is not None else cfg.slayout().P_pad
         L = cfg.n_layers
         return {
             "a": tuple(jnp.zeros((B, n), jnp.float32) for _ in range(L)),
-            "vals": tuple(jnp.zeros((B, K, P_carry), jnp.float32)
+            "vals": tuple(jnp.zeros((B, K, P_carry), vdt)
                           for _ in range(L)),
             "idx": tuple(jnp.full((B, K), -1, jnp.int32) for _ in range(L)),
         }
     P_carry = cl.Pc_pad if cl is not None else cfg.layout().P_pad
     return {
         "a": jnp.zeros((B, n), jnp.float32),
-        "vals": jnp.zeros((B, K, P_carry), jnp.float32),
+        "vals": jnp.zeros((B, K, P_carry), vdt),
         "idx": jnp.full((B, K), -1, jnp.int32),
     }
 
 
-def compact_step(cfg: ScaledRTRLConfig, w, state, x_t, cl=None):
+def compact_step(cfg: ScaledRTRLConfig, w, state, x_t, cl=None, *,
+                 backend: str = "compact", segments=None,
+                 interpret: bool | None = None,
+                 use_kernel: bool | None = None):
     """One RTRL step with row-compact flat influence.  FLOPs ~ K*K*n*m.
 
     Thin wrapper over `sparse_rtrl.flat_compact_step` (the shared engine);
@@ -143,16 +149,29 @@ def compact_step(cfg: ScaledRTRLConfig, w, state, x_t, cl=None):
     B-hat = W^T tiles are looked up from each layer's input matrix at the
     active rows of the layer below — depth adds K*K*P per extra layer pair,
     never n^2.  With `cl` the carry is additionally column-compact:
-    FLOPs ~ K*K*Pc, the combined w~ beta~^2 factor."""
+    FLOPs ~ K*K*Pc, the combined w~ beta~^2 factor.
+
+    backend='compact_fused' (requires cl) routes every update through the
+    fused ragged engine (`sparse_rtrl.flat_compact_fused_step`): one
+    invocation per step, executed compute Sigma_b K_b K'_b Pc."""
+    fused = backend == "compact_fused"
     if cfg.n_layers > 1:
         from repro.core import stacked_rtrl as ST
         a_new, _, vals, idx, overflow = ST.stacked_compact_step(
             cfg.stacked_cfg(), w, cfg.slayout(), state["a"], state["vals"],
-            state["idx"], x_t, cl=cl)
+            state["idx"], x_t, cl=cl, backend=backend, segments=segments,
+            interpret=interpret, use_kernel=use_kernel)
         return {"a": a_new, "vals": vals, "idx": idx}, overflow
-    a_new, _, vals, idx, _, overflow = sparse_rtrl.flat_compact_step(
-        cfg.cell_cfg(), w, cfg.layout(), state["a"], state["vals"],
-        state["idx"], x_t, cl=cl)
+    if fused:
+        a_new, _, vals, idx, _, overflow = \
+            sparse_rtrl.flat_compact_fused_step(
+                cfg.cell_cfg(), w, cfg.layout(), state["a"], state["vals"],
+                state["idx"], x_t, cl=cl, segments=segments,
+                interpret=interpret, use_kernel=use_kernel)
+    else:
+        a_new, _, vals, idx, _, overflow = sparse_rtrl.flat_compact_step(
+            cfg.cell_cfg(), w, cfg.layout(), state["a"], state["vals"],
+            state["idx"], x_t, cl=cl)
     return {"a": a_new, "vals": vals, "idx": idx}, overflow
 
 
@@ -185,7 +204,8 @@ def compact_to_dense_M(cfg: ScaledRTRLConfig, state, cl=None) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels, masks=None, *,
-               col_compact: bool | None = None):
+               col_compact: bool | None = None, backend: str = "compact",
+               influence_dtype: str = "float32"):
     """xs: [T, B, n_in]. Exact RTRL with compact influence; O(B K n m) memory.
     Returns (loss, grads, stats); stats["overflow"] is the per-step
     row-compaction overflow trace ([T] or [T, L]) — callers assert it is 0
@@ -204,7 +224,8 @@ def rtrl_grads(cfg: ScaledRTRLConfig, params, xs, labels, masks=None, *,
     the learner's `step`, shared bit-for-bit with online training."""
     from repro.core.learner import LearnerSpec, make_learner, scan_learner
     learner = make_learner(LearnerSpec(
-        engine="scaled", cfg=cfg, col_compact=col_compact))
+        engine="scaled", cfg=cfg, col_compact=col_compact, backend=backend,
+        influence_dtype=influence_dtype))
     return scan_learner(learner, params, masks, xs, labels)
 
 

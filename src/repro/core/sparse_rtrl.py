@@ -341,6 +341,7 @@ class FlatLayout:
     m: int                 # per-gate per-unit parameter-group width
     P: int                 # logical column count (== cfg.n_rec_params)
     P_pad: int             # P rounded up to a LANE multiple
+    influence_dtype: str = "float32"   # carry dtype ("float32" | "bfloat16")
 
     def gate_offset(self, g: str) -> int:
         return self.gates.index(g) * self.n * self.m
@@ -349,8 +350,28 @@ class FlatLayout:
     def theta_offset(self) -> int:          # gru only: trailing theta block
         return len(self.gates) * self.n * self.m
 
+    @property
+    def carry_dtype(self) -> jnp.dtype:
+        return influence_carry_dtype(self.influence_dtype)
 
-def flat_layout(cfg: EGRUConfig) -> FlatLayout:
+
+INFLUENCE_DTYPES = ("float32", "bfloat16")
+
+
+def influence_carry_dtype(name: str) -> jnp.dtype:
+    """Resolve the influence-carry dtype string.  The carry may be stored
+    bf16 (half the per-stream bytes and bandwidth); every contraction still
+    accumulates in f32 (`preferred_element_type`) so only the per-step
+    round-off of the stored values is bf16-bounded."""
+    if name in ("float32", "f32"):
+        return jnp.float32
+    if name in ("bfloat16", "bf16"):
+        return jnp.bfloat16
+    raise ValueError(f"influence_dtype {name!r} not in {INFLUENCE_DTYPES}")
+
+
+def flat_layout(cfg: EGRUConfig,
+                influence_dtype: str = "float32") -> FlatLayout:
     n, n_in = cfg.n_hidden, cfg.n_in
     if cfg.kind == "rnn":
         gates, m = ("v",), n_in + n + 2              # W, R, b, theta
@@ -360,11 +381,11 @@ def flat_layout(cfg: EGRUConfig) -> FlatLayout:
         P = 3 * n * m + n                            # + theta block
     assert P == cfg.n_rec_params, (P, cfg.n_rec_params)
     P_pad = -(-P // LANE) * LANE
-    return FlatLayout(cfg.kind, n, n_in, gates, m, P, P_pad)
+    return FlatLayout(cfg.kind, n, n_in, gates, m, P, P_pad, influence_dtype)
 
 
 def init_influence_flat(layout: FlatLayout, batch: int) -> jax.Array:
-    return jnp.zeros((batch, layout.n, layout.P_pad), jnp.float32)
+    return jnp.zeros((batch, layout.n, layout.P_pad), layout.carry_dtype)
 
 
 def _flat_col_mask_np(layout: FlatLayout, masks: Tree | None) -> np.ndarray:
@@ -445,6 +466,11 @@ class ColLayout:
     q: jax.Array           # [Pc_pad] int32 unit index within layer
     j: jax.Array           # [Pc_pad] int32 within-group param index
     live: jax.Array        # [Pc_pad] float32 1/0 (pad columns 0)
+    influence_dtype: str = "float32"   # carry dtype of [B, K, Pc_pad] vals
+
+    @property
+    def carry_dtype(self) -> jnp.dtype:
+        return influence_carry_dtype(self.influence_dtype)
 
 
 def _decompose_columns(layout: FlatLayout):
@@ -460,7 +486,8 @@ def _decompose_columns(layout: FlatLayout):
     return gate, q, j
 
 
-def build_col_layout(parts, P_pad: int) -> ColLayout:
+def build_col_layout(parts, P_pad: int,
+                     influence_dtype: str = "float32") -> ColLayout:
     """ColLayout over concatenated per-layer column blocks.
 
     parts: [(FlatLayout, masks-or-None, column offset, layer id)] — one
@@ -489,12 +516,16 @@ def build_col_layout(parts, P_pad: int) -> ColLayout:
         src=col(src, P_pad), layer=col(np.concatenate(layers), -1),
         gate=col(np.concatenate(gates), -1), q=col(np.concatenate(qs), 0),
         j=col(np.concatenate(js), 0),
-        live=jnp.asarray((np.arange(Pc_pad) < Pc).astype(np.float32)))
+        live=jnp.asarray((np.arange(Pc_pad) < Pc).astype(np.float32)),
+        influence_dtype=influence_dtype)
 
 
-def col_layout(layout: FlatLayout, masks: Tree | None) -> ColLayout:
+def col_layout(layout: FlatLayout, masks: Tree | None,
+               influence_dtype: str | None = None) -> ColLayout:
     """Single-layer live-column map (masks=None -> all P columns live)."""
-    return build_col_layout([(layout, masks, 0, 0)], layout.P_pad)
+    return build_col_layout(
+        [(layout, masks, 0, 0)], layout.P_pad,
+        layout.influence_dtype if influence_dtype is None else influence_dtype)
 
 
 def flat_col_density(layout: FlatLayout, masks: Tree | None) -> float:
@@ -702,8 +733,8 @@ def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
     else:
         a_new, hp, Jhat, Bhat, mbar = cell_partials_full(cfg, w, a_prev, x_t)
     idx_new, count = CK.compact_rows(hp != 0.0, K)
-    safe_new = jnp.minimum(idx_new, n - 1)
-    live_new = idx_new < n
+    safe_new = jnp.clip(idx_new, 0, n - 1)
+    live_new = idx_new >= 0
     # rnn J-hat = R^T: lookup tiles straight from R, never building [B, n, n]
     R = w["v"]["R"] if cfg.kind == "rnn" else None
     Jgg = CK.gather_j_tiles(None if R is not None else Jhat,
@@ -721,13 +752,95 @@ def flat_compact_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
             Bgg = CK.gather_tiles(None, idx_new, idx_b, AT=w["v"]["W"])
         else:
             Bgg = CK.gather_tiles(Bhat, idx_new, idx_b)
-        mbar_rows = mbar_rows + jnp.einsum("bkj,bjp->bkp", Bgg, vals_b)
+        mbar_rows = mbar_rows + jnp.einsum("bkj,bjp->bkp", Bgg, vals_b,
+                                           preferred_element_type=jnp.float32)
     bidx = jnp.arange(B)[:, None]
     hp_rows = hp[bidx, safe_new] * live_new
     Mc, overflow = CK.compact_update(Jgg, vals, mbar_rows, hp_rows,
                                      idx_new, count, K)
-    return (a_new, hp, Mc.vals, jnp.where(live_new, idx_new, -1),
-            Mc.count, overflow)
+    return a_new, hp, Mc.vals, Mc.idx, Mc.count, overflow
+
+
+def flat_compact_fused_step(cfg: EGRUConfig, w: Tree, layout: FlatLayout,
+                            a_prev: jax.Array, vals: jax.Array,
+                            idx_prev: jax.Array, x_t: jax.Array, *,
+                            below: tuple | None = None, cl: ColLayout,
+                            layer: int = 0, segments: tuple | None = None,
+                            use_kernel: bool | None = None,
+                            interpret: bool | None = None):
+    """`flat_compact_step`, fused: one invocation per influence update.
+
+    Same contract as the dual-compact mode of `flat_compact_step` (cl is
+    REQUIRED; returns (a_new, hp, vals', idx', count, overflow)), but the
+    J-tile gather, the [K x K'] x [K' x Pc] contraction, the M-bar add and
+    the hp diagonal scale run as ONE fused kernel with capacity ragged PER
+    EXAMPLE — executed compute is Sigma_b K_b K'_b Pc, not B K^2 Pc (see
+    `repro.kernels.compact_fused`).  The carry dtype follows vals (opt-in
+    bf16 with f32 accumulation).
+
+    `segments` is the static gate-segment table from
+    `compact_fused.fused_segments(layout, cl, layer)` — pass the one built
+    at learner init; built on the fly otherwise (requires a concrete cl,
+    so this backend rejects runtime-rewired ColLayouts).  use_kernel: None
+    = auto (the Pallas grid on TPU, the blocked-switch XLA lowering
+    elsewhere); True forces the Pallas kernel (interpret-mode off-TPU —
+    how the parity tests drive it)."""
+    from repro.kernels import compact as CK
+    from repro.kernels import compact_fused as CF
+    n = layout.n
+    B, K = idx_prev.shape
+    if segments is None:
+        segments = CF.fused_segments(layout, cl, layer=layer)
+    if use_kernel is None:
+        use_kernel = CF._on_tpu() and K % 8 == 0
+    if below is None:
+        a_new, hp, Jhat, mbar = cell_partials(cfg, w, a_prev, x_t)
+        Bhat = None
+    else:
+        a_new, hp, Jhat, Bhat, mbar = cell_partials_full(cfg, w, a_prev, x_t)
+    idx_new, count = CK.compact_rows(hp != 0.0, K)
+    safe_new = jnp.clip(idx_new, 0, n - 1)
+    live_new = idx_new >= 0
+    bidx = jnp.arange(B)[:, None]
+    hp_rows = hp[bidx, safe_new] * live_new
+    count_prev = jnp.sum(idx_prev >= 0, axis=1)
+    overflow = jnp.maximum(count - K, 0)
+    count_new = jnp.minimum(count, K)
+    if use_kernel:
+        # TPU grid: in-kernel gather from the dense J-hat (rnn: R^T tiles
+        # broadcast — the kernel path trades that buffer for one HBM pass)
+        if cfg.kind == "rnn":
+            Jhat = jnp.broadcast_to(w["v"]["R"].T[None], (B, n, n))
+        mbar_rows = flat_mbar_rows_cols(cfg, layout, cl, mbar, safe_new,
+                                        layer=layer)
+        if below is not None:
+            vals_b, idx_b = below
+            AT = w["v"]["W"] if cfg.kind == "rnn" else None
+            Bgg = CK.gather_tiles(None if AT is not None else Bhat,
+                                  idx_new, idx_b, AT=AT)
+            mbar_rows = mbar_rows + jnp.einsum(
+                "bkj,bjp->bkp", Bgg, vals_b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+        new_vals = CF.fused_update_pallas(
+            Jhat.astype(jnp.float32), vals, mbar_rows, hp_rows,
+            idx_new, idx_prev, count_new, count_prev, interpret=interpret)
+        return a_new, hp, new_vals, idx_new, count_new, overflow
+    # XLA lowering: per-example blocked dots over a static capacity ladder,
+    # M-bar generated inline at each gate's compact column segment
+    R = w["v"]["R"] if cfg.kind == "rnn" else None
+    Jgg = CK.gather_j_tiles(None if R is not None else Jhat,
+                            idx_new, idx_prev, R=R)
+    below_t = None
+    if below is not None:
+        vals_b, idx_b = below
+        AT = w["v"]["W"] if cfg.kind == "rnn" else None
+        Bgg = CK.gather_tiles(None if AT is not None else Bhat,
+                              idx_new, idx_b, AT=AT)
+        below_t = (Bgg, vals_b)
+    new_vals = CF.fused_update_blocks(
+        mbar, safe_new, hp_rows, Jgg, vals, count_new, count_prev,
+        segments, hp_full=hp, n=n, below=below_t)
+    return a_new, hp, new_vals, idx_new, count_new, overflow
 
 
 def capacity_K(n: int, capacity: float) -> int:
@@ -739,7 +852,7 @@ def capacity_K(n: int, capacity: float) -> int:
 # Full sequence: loss + grads + sparsity stats (exact, memory O(B n p))
 # ---------------------------------------------------------------------------
 
-BACKENDS = ("dense", "pallas", "compact")
+BACKENDS = ("dense", "pallas", "compact", "compact_fused")
 
 
 def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
@@ -747,7 +860,8 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
                                *, backend: str = "dense",
                                capacity: float = 1.0,
                                interpret: bool | None = None,
-                               col_compact: bool | None = None):
+                               col_compact: bool | None = None,
+                               influence_dtype: str = "float32"):
     """Structured exact RTRL. Returns (loss, grads, stats).
 
     backend selects the influence-update execution strategy (see module
@@ -772,7 +886,8 @@ def sparse_rtrl_loss_and_grads(cfg: EGRUConfig, params: Tree, xs: jax.Array,
     from repro.core.learner import LearnerSpec, make_learner, scan_learner
     learner = make_learner(LearnerSpec(
         engine="sparse", cfg=cfg, backend=backend, capacity=capacity,
-        interpret=interpret, col_compact=col_compact))
+        interpret=interpret, col_compact=col_compact,
+        influence_dtype=influence_dtype))
     return scan_learner(learner, params, masks, xs, labels)
 
 

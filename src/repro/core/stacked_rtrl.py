@@ -183,7 +183,11 @@ def stacked_compact_step(cfg: StackedEGRUConfig, ws: tuple,
                          slayout: StackedFlatLayout, a_prevs: tuple,
                          vals: tuple, idx: tuple, x_t: jax.Array,
                          colms: tuple | None = None,
-                         cl: "SP.ColLayout | None" = None):
+                         cl: "SP.ColLayout | None" = None, *,
+                         backend: str = "compact",
+                         segments: tuple | None = None,
+                         interpret: bool | None = None,
+                         use_kernel: bool | None = None):
     """One bottom-up stacked RTRL step, every layer row-compact.
 
     Layer l runs `sparse_rtrl.flat_compact_step` with its column offset and
@@ -194,17 +198,29 @@ def stacked_compact_step(cfg: StackedEGRUConfig, ws: tuple,
     With `cl` (from `stacked_col_layout`) every layer's buffer is
     additionally COLUMN-compact on the shared stacked axis ([B, K_l,
     Pc_pad]); the cross-layer contraction runs at compact width too, so each
-    (l, j) block costs its w~ beta~^2 share and the carry shrinks by w~."""
+    (l, j) block costs its w~ beta~^2 share and the carry shrinks by w~.
+
+    backend='compact_fused' runs every layer's update through the fused
+    ragged engine instead (`sparse_rtrl.flat_compact_fused_step`; requires
+    `cl`); `segments` is the per-layer static gate-segment tuple from
+    `compact_fused.fused_segments(slayout.layers[l], cl, layer=l)`."""
     L = cfg.n_layers
     inp = x_t
     a_news, hps, vals_new, idx_new, ovs = [], [], [], [], []
     for l in range(L):
         below = None if l == 0 else (vals_new[l - 1], idx_new[l - 1])
         colm_l = None if colms is None else colms[l]
-        a_new, hp, v_new, i_new, _, ov = SP.flat_compact_step(
-            cfg.layer_cfg(l), ws[l], slayout.layers[l], a_prevs[l], vals[l],
-            idx[l], inp, colm_l, offset=slayout.offsets[l],
-            total_pad=slayout.P_pad, below=below, cl=cl, layer=l)
+        if backend == "compact_fused":
+            a_new, hp, v_new, i_new, _, ov = SP.flat_compact_fused_step(
+                cfg.layer_cfg(l), ws[l], slayout.layers[l], a_prevs[l],
+                vals[l], idx[l], inp, below=below, cl=cl, layer=l,
+                segments=None if segments is None else segments[l],
+                use_kernel=use_kernel, interpret=interpret)
+        else:
+            a_new, hp, v_new, i_new, _, ov = SP.flat_compact_step(
+                cfg.layer_cfg(l), ws[l], slayout.layers[l], a_prevs[l],
+                vals[l], idx[l], inp, colm_l, offset=slayout.offsets[l],
+                total_pad=slayout.P_pad, below=below, cl=cl, layer=l)
         a_news.append(a_new)
         hps.append(hp)
         vals_new.append(v_new)
@@ -226,7 +242,8 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
                                 capacity: float = 1.0,
                                 interpret: bool | None = None,
                                 delegate_single_layer: bool = True,
-                                col_compact: bool | None = None):
+                                col_compact: bool | None = None,
+                                influence_dtype: str = "float32"):
     """Exact stacked RTRL.  Returns (loss, grads, stats).
 
     grads: {"layers": [per-layer trees], "out": ...}.  stats carries
@@ -252,5 +269,6 @@ def stacked_rtrl_loss_and_grads(cfg: StackedEGRUConfig, params: Tree,
     learner = make_learner(LearnerSpec(
         engine="stacked", cfg=cfg, backend=backend, capacity=capacity,
         interpret=interpret, col_compact=col_compact,
-        delegate_single_layer=delegate_single_layer))
+        delegate_single_layer=delegate_single_layer,
+        influence_dtype=influence_dtype))
     return scan_learner(learner, params, masks, xs, labels)

@@ -12,6 +12,10 @@ these are the execution backends of
   compact.py      capacity-based row compaction (backend="compact"):
                   gather_j_tiles + compact_update carry M as [B, K, P] +
                   indices; compact_grads fuses  c-bar^T M  extraction
+  compact_fused.py one-invocation dual-compact update (backend=
+                  "compact_fused"): row gather + [K x K'] x [K' x Pc]
+                  contraction + M-bar add + hp scale fused, ragged
+                  per-example capacity, opt-in bf16 carry
   event_matmul.py activity-sparse forward matmul (EvNN event propagation)
   wkv.py          chunked RWKV6 WKV with VMEM-resident state
   ops.py          jit'd wrappers: padding, block masks, interpret dispatch
@@ -21,13 +25,18 @@ All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
 (8,128)-aligned) and validated on CPU with interpret=True.
 """
 from repro.kernels.ops import event_matmul, influence_update, realized_block_savings
-from repro.kernels.compact import (CompactInfluence, compact_grads,
-                                   compact_influence_step, compact_init,
-                                   compact_to_dense, compact_update,
-                                   gather_j_tiles)
+from repro.kernels.compact import (DEAD, CompactInfluence, check_idx,
+                                   compact_grads, compact_influence_step,
+                                   compact_init, compact_to_dense,
+                                   compact_update, gather_j_tiles)
+from repro.kernels.compact_fused import (capacity_ladder, fused_reference,
+                                         fused_segments, fused_update_blocks,
+                                         fused_update_pallas)
 from repro.kernels.wkv import wkv_pallas
 
 __all__ = ["influence_update", "event_matmul", "realized_block_savings",
            "CompactInfluence", "compact_influence_step", "compact_init",
            "compact_to_dense", "compact_grads", "compact_update",
-           "gather_j_tiles", "wkv_pallas"]
+           "gather_j_tiles", "DEAD", "check_idx",
+           "capacity_ladder", "fused_segments", "fused_update_blocks",
+           "fused_update_pallas", "fused_reference", "wkv_pallas"]

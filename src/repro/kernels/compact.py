@@ -30,31 +30,50 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+DEAD = -1   # THE dead-slot sentinel: every idx array here is -1 or in [0, n)
 
 
 class CompactInfluence(NamedTuple):
     vals: jax.Array       # [B, K, P]   compacted rows of M
-    idx: jax.Array        # [B, K]      row index per slot (n = empty sentinel)
+    idx: jax.Array        # [B, K]      row index per slot (-1 = dead slot)
     count: jax.Array      # [B]         number of live rows
 
 
+def check_idx(idx: jax.Array, n: int) -> None:
+    """Assert the -1 dead-slot convention on CONCRETE index arrays: every
+    entry is DEAD or a valid row in [0, n).  A no-op under jit tracing —
+    Tracers carry no values — so the check costs nothing on the hot path
+    but catches convention drift in eager tests and interpret-mode runs."""
+    if isinstance(idx, jax.core.Tracer):
+        return
+    a = np.asarray(idx)
+    bad = (a != DEAD) & ((a < 0) | (a >= n))
+    if bad.any():
+        raise ValueError(
+            f"compact idx violates the -1 sentinel convention: entries "
+            f"{np.unique(a[bad])} outside {{-1}} u [0, {n})")
+
+
 def compact_rows(dense_rows_mask: jax.Array, K: int) -> tuple[jax.Array, jax.Array]:
-    """dense_rows_mask: [B, n] bool -> (idx [B,K] with sentinel n, count [B])."""
+    """dense_rows_mask: [B, n] bool -> (idx [B,K], -1 = dead slot; count [B])."""
     B, n = dense_rows_mask.shape
     # stable order: active rows first, by index
     key = jnp.where(dense_rows_mask, 0, 1) * (n + 1) + jnp.arange(n)[None]
     order = jnp.argsort(key, axis=1)[:, :K]                     # [B, K]
     if K > n:   # alignment can push capacity past n: pad with dead slots
-        order = jnp.pad(order, ((0, 0), (0, K - n)), constant_values=n)
+        order = jnp.pad(order, ((0, 0), (0, K - n)), constant_values=DEAD)
     count = dense_rows_mask.sum(axis=1)
     slot_live = jnp.arange(K)[None, :] < count[:, None]
-    idx = jnp.where(slot_live, order, n)
+    idx = jnp.where(slot_live, order, DEAD)
     return idx, count
 
 
-def compact_init(B: int, K: int, P: int) -> CompactInfluence:
-    return CompactInfluence(jnp.zeros((B, K, P), jnp.float32),
-                            jnp.full((B, K), -1, jnp.int32),
+def compact_init(B: int, K: int, P: int,
+                 dtype: jnp.dtype = jnp.float32) -> CompactInfluence:
+    return CompactInfluence(jnp.zeros((B, K, P), dtype),
+                            jnp.full((B, K), DEAD, jnp.int32),
                             jnp.zeros((B,), jnp.int32))
 
 
@@ -63,21 +82,24 @@ def gather_tiles(A: jax.Array | None, idx_row: jax.Array,
     """Gathered [B, K, K_col] tiles of a (possibly rectangular) Jacobian.
 
     Rows are taken at `idx_row`, columns at `idx_col` (dead column slots —
-    sentinel < 0 or >= n_col — contribute zero columns; dead rows are gated
-    by hp downstream).  Pass the dense per-example ``A`` [B, n_row, n_col]
-    (data-dependent Jacobians, e.g. EGRU J-hat or the cross-layer B-hat), or
-    ``AT`` [n_col, n_row] — a weight matrix whose TRANSPOSE is the Jacobian
-    (R for the vanilla RNN's J-hat, W for its B-hat) — so tiles are looked
-    up directly and [B, n_row, n_col] is never materialized."""
+    sentinel -1, asserted by `check_idx` — contribute zero columns; dead
+    rows are gated by hp downstream).  Pass the dense per-example ``A``
+    [B, n_row, n_col] (data-dependent Jacobians, e.g. EGRU J-hat or the
+    cross-layer B-hat), or ``AT`` [n_col, n_row] — a weight matrix whose
+    TRANSPOSE is the Jacobian (R for the vanilla RNN's J-hat, W for its
+    B-hat) — so tiles are looked up directly and [B, n_row, n_col] is
+    never materialized."""
     if AT is not None:
         n_col, n_row = AT.shape
     else:
         n_row, n_col = A.shape[-2], A.shape[-1]
+    check_idx(idx_row, n_row)
+    check_idx(idx_col, n_col)
     B, K = idx_row.shape
     Kc = idx_col.shape[1]
     safe_row = jnp.clip(idx_row, 0, n_row - 1)
     safe_col = jnp.clip(idx_col, 0, n_col - 1)
-    live_col = (idx_col >= 0) & (idx_col < n_col)
+    live_col = idx_col >= 0
     if AT is not None:
         # A[b, k, j] = AT[j, k]
         Agg = AT[safe_col[:, None, :], safe_row[:, :, None]]    # [B, K, Kc]
@@ -104,9 +126,13 @@ def compact_update(Jgg: jax.Array, vals_prev: jax.Array, mbar_rows: jax.Array,
 
     Jgg [B,K,Kprev] (dead prev columns already zeroed); mbar_rows [B,K,P]
     gathered at the new active rows; hp_rows [B,K] with dead slots zeroed;
-    idx_new [B,K] with sentinel >= n for dead slots.  K*K_prev*P MXU work."""
-    T = jnp.einsum("bkl,blp->bkp", Jgg, vals_prev)
-    vals = hp_rows[:, :, None] * (T + mbar_rows)
+    idx_new [B,K] with sentinel -1 for dead slots.  K*K_prev*P MXU work.
+    The contraction accumulates in f32 regardless of the carry dtype
+    (bf16 carries get f32 MXU accumulation, cast back on write)."""
+    T = jnp.einsum("bkl,blp->bkp", Jgg, vals_prev,
+                   preferred_element_type=jnp.float32)
+    vals = (hp_rows[:, :, None]
+            * (T + mbar_rows.astype(jnp.float32))).astype(vals_prev.dtype)
     overflow = jnp.maximum(count - K, 0)
     return CompactInfluence(vals, idx_new, jnp.minimum(count, K)), overflow
 
@@ -121,14 +147,12 @@ def compact_influence_step(hp: jax.Array, Jhat: jax.Array,
     B, n, P = Mbar.shape
     idx_new, count_new = compact_rows(hp != 0.0, K)             # rows of M_t
     bidx = jnp.arange(B)[:, None]
-    safe_new = jnp.minimum(idx_new, n - 1)
-    live = idx_new < n
+    safe_new = jnp.clip(idx_new, 0, n - 1)
+    live = idx_new >= 0
     Jgg = gather_j_tiles(Jhat, idx_new, Mc.idx)
     Mbar_g = Mbar[bidx, safe_new]                               # [B, K, P]
     hp_g = hp[bidx, safe_new] * live                            # [B, K]
-    Mc_new, overflow = compact_update(
-        Jgg, Mc.vals, Mbar_g, hp_g, idx_new, count_new, K)
-    return Mc_new._replace(idx=jnp.where(live, idx_new, -1)), overflow
+    return compact_update(Jgg, Mc.vals, Mbar_g, hp_g, idx_new, count_new, K)
 
 
 def compact_grads(vals: jax.Array, idx: jax.Array, cbar: jax.Array):
@@ -136,16 +160,21 @@ def compact_grads(vals: jax.Array, idx: jax.Array, cbar: jax.Array):
 
     c-bar [B, n] is gathered at the active row indices and contracted with
     vals [B, K, P] directly — the dense [B, n, P] influence tensor is never
-    scattered back.  Returns the flat gradient [P]."""
+    scattered back.  Returns the flat gradient [P] in f32 (bf16 carries are
+    upcast before the contraction)."""
     n = cbar.shape[1]
+    check_idx(idx, n)
     safe = jnp.clip(idx, 0, n - 1)
-    live = (idx >= 0) & (idx < n)
+    live = idx >= 0
     cb = jnp.take_along_axis(cbar, safe, axis=1) * live         # [B, K]
-    return jnp.einsum("bk,bkp->p", cb, vals)
+    return jnp.einsum("bk,bkp->p", cb, vals,
+                      preferred_element_type=jnp.float32)
 
 
 def compact_to_dense(Mc: CompactInfluence, n: int) -> jax.Array:
-    """Scatter back to [B, n, P] (for verification / credit assignment)."""
+    """Scatter back to [B, n, P] (for verification / credit assignment).
+    Dead slots (idx == -1, asserted) land in a scratch row that is cropped."""
+    check_idx(Mc.idx, n)
     B, K, P = Mc.vals.shape
     out = jnp.zeros((B, n + 1, P), Mc.vals.dtype)
     idx = jnp.where(Mc.idx < 0, n, Mc.idx)

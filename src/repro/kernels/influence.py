@@ -37,6 +37,13 @@ ColLayout pads Pc to a LANE (= bp) multiple.
 
 Validated in interpret mode on CPU against `repro.kernels.ref.influence_ref`
 over shape/dtype/sparsity sweeps (tests/test_kernels.py).
+
+This kernel skips dead blocks of a DENSE [B, n, P] carry.  Its successor,
+`repro.kernels.compact_fused`, instead carries the ROW-compact [B, K, Pc]
+buffer of compact.py and fuses the J-tile gather, the [K x K'] x [K' x Pc]
+contraction, the M-bar add and the hp scale into one invocation with ragged
+per-example capacity — see its module docstring for how each grid axis maps
+to a factor of the paper's  w~ b~(t) b~(t-1) n^2 p  cost term.
 """
 from __future__ import annotations
 

@@ -64,6 +64,10 @@ def train_egru(args) -> dict:
     if rewiring and args.sparsity <= 0.0:
         raise SystemExit("--rewire needs --sparsity > 0 (there is no mask "
                          "to evolve at density 1)")
+    if rewiring and backend == "compact_fused":
+        raise SystemExit("--rewire is not supported with the compact_fused "
+                         "backend (its gate-segment table is compiled from "
+                         "the init-time masks) — use --rtrl-backend compact")
     # --seed threads EVERYTHING: params, mask draws (via the documented
     # make_masks key convention), the stream shuffle base, and the per-event
     # rewire keys — one seed reproduces a run end-to-end, rewires included
@@ -75,8 +79,15 @@ def train_egru(args) -> dict:
     # resolve the auto rule ONCE and pass the explicit bool to the engine,
     # so the report below can never disagree with what the engine runs
     col_flag = {"auto": None, "on": True, "off": False}[args.col_compact]
-    col_compact = (masks is not None and backend != "dense"
-                   if col_flag is None else col_flag)
+    if backend == "compact_fused":
+        if col_flag is False:
+            raise SystemExit("--col-compact off conflicts with "
+                             "--rtrl-backend compact_fused (the fused "
+                             "engine always carries column-compact)")
+        col_compact = True
+    else:
+        col_compact = (masks is not None and backend != "dense"
+                       if col_flag is None else col_flag)
     if masks is not None and backend != "dense":
         slayout = ST.stacked_layout(cfg)
         live = int(np.asarray(ST.stacked_col_mask(slayout, masks)).sum())
@@ -100,7 +111,8 @@ def train_egru(args) -> dict:
         xs, ys = batch
         loss, grads, stats = ST.stacked_rtrl_loss_and_grads(
             cfg, params, xs, ys, masks, backend=backend,
-            capacity=args.capacity, col_compact=col_compact)
+            capacity=args.capacity, col_compact=col_compact,
+            influence_dtype=args.influence_dtype)
         params, opt_state = opt.update(grads, opt_state, params, step)
         metrics = {"loss": loss, "alpha": stats["alpha"].mean(),
                    "beta": stats["beta"].mean()}
@@ -164,7 +176,8 @@ def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
                                 policy=args.guard_policy)
     spec = LearnerSpec(engine="stacked", cfg=cfg, backend=backend,
                        capacity=args.capacity, col_compact=col_compact,
-                       rewirable=rewiring)
+                       rewirable=rewiring,
+                       influence_dtype=args.influence_dtype)
     learner = make_learner(spec)
     schedule = None
     if rewiring:
@@ -244,9 +257,14 @@ def main():
     ap.add_argument("--layers", type=int, default=1,
                     help="EGRU stack depth (egru-spiral only)")
     ap.add_argument("--rtrl-backend", default="dense",
-                    choices=["dense", "pallas", "compact"])
+                    choices=["dense", "pallas", "compact", "compact_fused"])
     ap.add_argument("--capacity", type=float, default=1.0,
                     help="compact-backend row capacity fraction")
+    ap.add_argument("--influence-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="influence-carry dtype (compact backends): "
+                         "bfloat16 halves the carry bytes, contractions "
+                         "still accumulate in f32")
     ap.add_argument("--sparsity", type=float, default=0.0,
                     help="fixed parameter sparsity (egru-spiral only)")
     ap.add_argument("--online", action="store_true",

@@ -293,6 +293,36 @@ class OnlineTrainer:
         out["col_density"] = n_live / n_cols
         return out
 
+    def row_stats(self) -> dict | None:
+        """Per-example active-row stats of a compact influence carry, or
+        None off the compact backends.  K_b = live rows of example b's
+        influence; 'ragged_utilization' = Sigma_b K_b / (B * K_max) — the
+        fraction of the batch-wide capacity rectangle that is actually
+        live.  The gap to 1.0 is the batch tax the fused ragged kernel
+        skips (it executes Sigma_b K_b K'_b Pc, not B K_max^2 Pc).  Also
+        reports the carry dtype (the opt-in bf16 carry halves bytes)."""
+        c = self.carry
+        bufs = []                               # (idx [B, K], vals dtype)
+        for holder in (c, c.get("state") or {}):
+            idx, vals = holder.get("idx"), holder.get("vals")
+            if idx is None:
+                continue
+            bufs += (list(zip(idx, vals)) if isinstance(idx, tuple)
+                     else [(idx, vals)])
+        if not bufs:
+            return None
+        kbs, cap = [], 0
+        for idx, _ in bufs:
+            a = np.asarray(jax.device_get(idx))
+            kbs.append((a >= 0).sum(axis=1))
+            cap += a.size                       # B * K of this buffer
+        kb = np.concatenate(kbs)
+        return {"k_min": int(kb.min()), "k_mean": round(float(kb.mean()), 2),
+                "k_max": int(kb.max()),
+                "ragged_utilization": round(float(kb.sum()) / cap, 4),
+                "influence_dtype": str(np.asarray(
+                    jax.device_get(bufs[0][1])).dtype)}
+
     # -- loop ---------------------------------------------------------------
 
     def _gather(self, start: int, k: int):
@@ -402,6 +432,9 @@ class OnlineTrainer:
                "metrics": self.metrics, "rewire_events": self.rewire_events,
                "carry_bytes": fp["alloc"], "carry_live_bytes": fp["live"],
                "stragglers": self.stragglers}
+        rs = self.row_stats()
+        if rs is not None:
+            out["row_stats"] = rs
         if self.guard is not None:
             out["guard"] = self.guard.report()
         return out
