@@ -1,0 +1,211 @@
+"""Multi-tenant fleet throughput: S concurrent online-RTRL sessions through
+ONE vmapped update chunk (runtime/fleet.py) vs stepping the same S sessions
+sequentially through the solo jitted chunk.
+
+Operating point: a small per-user adaptation cell (n=16, omega=0.9,
+dual-compact, B=1, k=8) — the regime the multi-tenant story is about.
+There the solo chunk is DISPATCH-bound (per-op framework overhead, not
+FLOPs), so S sequential dispatches cost ~S x solo while the fleet's one
+[S, ...] dispatch amortizes the overhead across every lane.  At large n
+the chunk is compute-bound and a 1-core host can only serialize the lanes
+— vmap is not parallel hardware; benchmark honesty requires picking the
+regime the optimization targets (on an accelerator the lanes ALSO
+parallelize).  The sequential baseline mirrors what per-session
+`OnlineTrainer` stepping actually does: one solo-chunk dispatch PLUS one
+host metrics readback per session per window; the fleet side likewise
+includes its single packed [S, 3] readback.  The bench measures, for
+S in {1, 8, 64, 256}:
+
+  - window wall clock, fleet vs sequential (interleaved min-of-samples —
+    `kernel_bench._time_ms_interleaved` — so shared-runner noise hits both
+    candidates equally);
+  - sessions/sec and per-session stream-steps/sec;
+  - p50/p99 per-session step latency (window dt / k over repeated windows);
+
+and asserts the headline: fleet-64 throughput >= --min-speedup (default 8x)
+over sequential stepping.  Full runs write the committed BENCH_fleet.json;
+--smoke runs S in {1, 8} with a loose bar and writes BENCH_fleet.ci.json so
+the committed record is never clobbered.
+
+Timing compiles the chunk WITHOUT buffer donation so one compiled callable
+can replay the same operands (the serving fleet donates; donation does not
+change the math — tests/test_fleet.py pins bit-identity through the donated
+path).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from kernel_bench import _egru_operating_point, _time_ms_interleaved
+from repro.core.learner import LearnerSpec, make_learner
+from repro.optim import make_optimizer
+from repro.runtime.fleet import fleet_update_chunk
+from repro.runtime.online import carry_nbytes, online_update_chunk
+
+
+def _fleet_setup(n=96, n_in=8, omega=0.9, batch=1, k=8, margin=1.25):
+    """One session template at the online operating point + its stream
+    window shapes.  Same definition as `online_step_bench` so the numbers
+    quote each other."""
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, n_in, omega, batch, 8, margin)
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact", capacity=K / n,
+                                       col_compact=True))
+    opt = make_optimizer("adamw", lr=1e-3)
+    y = jnp.zeros((batch,), jnp.int32)
+    carry0 = learner.init(params, masks, (x, y), t_total=float(k))
+    opt0 = jax.jit(opt.init)(params)
+    return learner, opt, carry0, opt0, cfg, beta_meas, K
+
+
+def _stack(tree, S):
+    return jax.tree.map(lambda t: jnp.repeat(t[None], S, 0), tree)
+
+
+def fleet_vs_sequential_bench(rows: list, S_list=(1, 8, 64, 256), n=16,
+                              n_in=8, omega=0.9, batch=1, k=8, samples=5,
+                              p_windows=30) -> list:
+    learner, opt, carry0, opt0, cfg, beta_meas, K = _fleet_setup(
+        n, n_in, omega, batch, k)
+    session_bytes = carry_nbytes(carry0)
+    key = jax.random.key(11)
+
+    solo = jax.jit(lambda c, o, x, y, u: online_update_chunk(
+        learner, opt, c, o, x, y, u))
+
+    recs = []
+    for S in S_list:
+        xs = jax.random.normal(jax.random.fold_in(key, S),
+                               (S, k, batch, n_in))
+        ys = jnp.zeros((S, k, batch), jnp.int32)
+        upd = jnp.zeros((S,), jnp.int32)
+        live = jnp.ones((S,), bool)
+        carry_S, opt_S = _stack(carry0, S), _stack(opt0, S)
+        fleet = jax.jit(lambda c, o, x, y, u, l: fleet_update_chunk(
+            learner, opt, c, o, x, y, u, l))
+
+        def fleet_fn():
+            pk = fleet(carry_S, opt_S, xs, ys, upd, live)[2]
+            np.asarray(jax.device_get(pk))      # the single packed readback
+            return pk
+
+        # sequential baseline: the SAME S sessions, one solo dispatch PLUS
+        # one host metrics readback each — what stepping S OnlineTrainers
+        # costs per window
+        seq_states = [(jax.tree.map(lambda t: t.copy(), carry0),
+                       jax.tree.map(lambda t: t.copy(), opt0))
+                      for _ in range(S)]
+
+        def seq_fn():
+            out = None
+            for (c, o), s in zip(seq_states, range(S)):
+                out = solo(c, o, xs[s], ys[s], jnp.int32(0))
+                float(out[2]["loss"])           # per-session readback
+            return out[2]["loss"]
+
+        t_fleet, t_seq = _time_ms_interleaved(
+            [(fleet_fn, ()), (seq_fn, ())], samples=samples)
+
+        # per-session step latency distribution over repeated fleet windows
+        dts = []
+        for _ in range(p_windows):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fleet_fn())
+            dts.append((time.perf_counter() - t0) * 1e3)
+        step_lat = np.asarray(dts) / k          # every session advances k
+        p50, p99 = float(np.percentile(step_lat, 50)), \
+            float(np.percentile(step_lat, 99))
+
+        rec = {"S": S, "k": k, "n": n, "omega": omega, "batch": batch,
+               "K": K, "beta_measured": round(beta_meas, 4),
+               "fleet_window_ms": round(t_fleet, 3),
+               "seq_window_ms": round(t_seq, 3),
+               "speedup_fleet_over_seq": round(t_seq / t_fleet, 2),
+               "sessions_per_s_fleet": round(S / (t_fleet / 1e3), 1),
+               "sessions_per_s_seq": round(S / (t_seq / 1e3), 1),
+               "step_latency_p50_ms": round(p50, 3),
+               "step_latency_p99_ms": round(p99, 3),
+               "session_carry_bytes": session_bytes}
+        recs.append(rec)
+        tag = f"fleet/window/S{S}_n{n}_w{omega}"
+        rows.append((f"{tag}/fleet_ms", f"{t_fleet:.2f}",
+                     f"{rec['sessions_per_s_fleet']:.0f}_sessions_per_s"))
+        rows.append((f"{tag}/seq_ms", f"{t_seq:.2f}",
+                     f"x{t_seq / t_fleet:.2f}_fleet_speedup"))
+        rows.append((f"{tag}/step_p99_ms", f"{p99:.3f}", f"p50={p50:.3f}"))
+    return recs
+
+
+def run(rows: list) -> None:
+    """benchmarks/run.py hook: smoke-sized fleet scaling rows."""
+    fleet_vs_sequential_bench(rows, S_list=(1, 8), samples=3, p_windows=10)
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--S", type=int, nargs="+", default=[1, 8, 64, 256])
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--omega", type=float, default=0.9)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=5)
+    ap.add_argument("--p-windows", type=int, default=30)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="assert fleet speedup over sequential at the "
+                         "largest S >= 64 run (default 8.0 full, 1.0 smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="S in {1, 8}, loose bar, BENCH_fleet.ci.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        args.S = [1, 8]
+        args.samples = min(args.samples, 3)
+        args.p_windows = min(args.p_windows, 10)
+    if args.min_speedup is None:
+        args.min_speedup = 1.0 if args.smoke else 8.0
+    if args.out is None:
+        args.out = str(Path(__file__).resolve().parents[1] /
+                       ("BENCH_fleet.ci.json" if args.smoke
+                        else "BENCH_fleet.json"))
+
+    rows: list = []
+    recs = fleet_vs_sequential_bench(rows, S_list=tuple(args.S), n=args.n,
+                                     omega=args.omega, k=args.k,
+                                     samples=args.samples,
+                                     p_windows=args.p_windows)
+    out = {"sweep": recs,
+           "note": "fleet (one vmapped chunk + one packed readback) vs "
+                   "sequential per-session stepping (one solo dispatch + "
+                   "one metrics readback per session, OnlineTrainer-style); "
+                   "n=%d dispatch-bound operating point, 1-core CPU f32; "
+                   "interleaved min-of-%d wall clock; step latency "
+                   "percentiles over %d windows"
+                   % (args.n, args.samples, args.p_windows)}
+    Path(args.out).write_text(json.dumps(out, indent=1))
+
+    print("name,value,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(f"wrote {args.out}")
+
+    # the headline bar: fleet-64 must beat sequential stepping by
+    # min-speedup (8x full; loose under --smoke where S stops at 8 and
+    # shared runners are noisy)
+    gate = 64 if 64 in args.S else max(args.S)
+    sp = next(r["speedup_fleet_over_seq"] for r in recs if r["S"] == gate)
+    assert sp >= args.min_speedup, (
+        f"fleet-{gate} speedup {sp:.2f}x < required {args.min_speedup}x")
+    print(f"fleet-{gate} speedup {sp:.2f}x >= {args.min_speedup}x: OK")

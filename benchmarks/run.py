@@ -6,6 +6,7 @@ Prints ``name,value,derived`` CSV:
   scaling/*    RTRL-variant wall-clock scaling vs hidden size
   scaled_rtrl/* row-compact influence update: measured wall-clock vs dense
   kernel/*     Pallas-kernel block-savings realization + compact-path ratios
+  fleet/*      multi-tenant fleet throughput vs sequential session stepping
   roofline/*   summary of the 40-cell dry-run roofline table
 """
 from __future__ import annotations
@@ -29,6 +30,8 @@ def main() -> None:
     table1.run(rows)
     import kernel_bench
     kernel_bench.run(rows)
+    import fleet_bench
+    fleet_bench.run(rows)
     import rtrl_scaling
     rtrl_scaling.run(rows)
     import scaled_rtrl

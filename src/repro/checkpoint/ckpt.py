@@ -279,3 +279,61 @@ class CheckpointManager:
         gc-truncated directory no longer shadows a good older one)."""
         steps = valid_steps(self.root)
         return steps[-1] if steps else -1
+
+
+# ---------------------------------------------------------------------------
+# Session-keyed store: per-session namespacing for the stream fleet
+# ---------------------------------------------------------------------------
+#
+# A StreamFleet (runtime/fleet.py) evicts idle sessions — full {carry, opt
+# state, stream position} trees — and resumes them bit-for-bit later,
+# possibly into a different slot or a different process.  Each session gets
+# its own checkpoint lineage under `<root>/session/<sid>/`, reusing the
+# atomic-write + corrupt-dir-validation machinery above verbatim: a
+# truncated eviction write falls back to the session's previous valid
+# state instead of poisoning the resume.
+
+_SID_OK = frozenset(
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789._-")
+
+
+def _session_dir(root: str | Path, sid: str) -> Path:
+    """`<root>/session/<sid>` with the sid validated as a single path
+    component — a sid like '../step_0' must not escape the namespace."""
+    if not sid or any(c not in _SID_OK for c in sid) or sid in (".", ".."):
+        raise ValueError(
+            f"invalid session id {sid!r}: use [A-Za-z0-9._-]+ (a single "
+            "path component)")
+    return Path(root) / "session" / sid
+
+
+def save_session(root: str | Path, sid: str, tree: Tree, step: int = 0,
+                 extra: dict | None = None) -> Path:
+    """Atomically persist one session's state under its own namespace.
+    `step` keys the lineage (the fleet uses the session's update count), so
+    repeated evictions of the same session retain history like any other
+    checkpoint root."""
+    return save_checkpoint(_session_dir(root, sid), step, tree, extra)
+
+
+def load_session(root: str | Path, sid: str, tree_like: Tree,
+                 shardings: Tree | None = None, step: int | None = None):
+    """Restore one session (newest VALID step by default — same corrupt-dir
+    fallback as `load_checkpoint`).  Returns (tree, step); raises
+    CheckpointError if the session has no valid checkpoint."""
+    sdir = _session_dir(root, sid)
+    tree, got = load_checkpoint(sdir, tree_like, shardings, step)
+    if tree is None:
+        raise CheckpointError(
+            f"session {sid!r} has no valid checkpoint under {sdir}")
+    return tree, got
+
+
+def list_sessions(root: str | Path) -> list:
+    """Session ids under `root` that have at least one VALID checkpoint,
+    sorted — the fleet's resumable population."""
+    base = Path(root) / "session"
+    if not base.is_dir():
+        return []
+    return sorted(p.name for p in base.iterdir()
+                  if p.is_dir() and valid_steps(p))

@@ -161,14 +161,21 @@ def compact_grads(vals: jax.Array, idx: jax.Array, cbar: jax.Array):
     c-bar [B, n] is gathered at the active row indices and contracted with
     vals [B, K, P] directly — the dense [B, n, P] influence tensor is never
     scattered back.  Returns the flat gradient [P] in f32 (bf16 carries are
-    upcast before the contraction)."""
+    upcast before the contraction).
+
+    The contraction runs per example ([B, K] x [B, K, P] -> [B, P]) with an
+    explicit batch sum rather than one merged (b, k) reduction: the merged
+    form lets XLA re-block the reduction when a leading axis is added, so
+    its rounding changes under `jax.vmap` — and the fleet's slot-batched
+    update chunk (runtime/fleet.py) must be bit-identical to the solo
+    trainer's."""
     n = cbar.shape[1]
     check_idx(idx, n)
     safe = jnp.clip(idx, 0, n - 1)
     live = idx >= 0
     cb = jnp.take_along_axis(cbar, safe, axis=1) * live         # [B, K]
-    return jnp.einsum("bk,bkp->p", cb, vals,
-                      preferred_element_type=jnp.float32)
+    return jnp.einsum("bk,bkp->bp", cb, vals,
+                      preferred_element_type=jnp.float32).sum(axis=0)
 
 
 def compact_to_dense(Mc: CompactInfluence, n: int) -> jax.Array:

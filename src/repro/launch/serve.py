@@ -2,6 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
         --requests 6 --max-new 12
+
+`--fleet` switches to the multi-tenant online-RTRL fleet instead: a
+session queue of independent EGRU streams drained through one
+`StreamFleet` (`repro.runtime.fleet`) — sessions join free slots
+mid-flight, train for a fixed number of update windows, and leave;
+admission is continuous, with zero recompilation.
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet --smoke
 """
 from __future__ import annotations
 
@@ -10,8 +18,64 @@ import time
 
 import numpy as np
 
-from repro.configs import get_config, smoke_config
-from repro.runtime.serving import Engine, ServeConfig
+
+def _fleet_main(args):
+    """Drain a queue of online-RTRL sessions through one StreamFleet."""
+    import jax
+
+    from repro.core import cells, sparse_rtrl as SP
+    from repro.core.cells import EGRUConfig
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.optim import make_optimizer
+    from repro.runtime.fleet import FleetConfig, StreamFleet
+
+    n = 16 if args.smoke else 96
+    B = 2 if args.smoke else 8
+    n_sessions = min(args.requests, 6) if args.smoke else args.requests
+    slots = min(args.slots, 4) if args.smoke else args.slots
+    windows = 3 if args.smoke else args.session_windows
+
+    cfg = EGRUConfig(n_hidden=n, n_in=3, n_out=2, kind="gru")
+    masks = SP.make_masks(cfg, jax.random.key(7), 0.9)
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact", col_compact=True))
+    opt = make_optimizer("adamw", lr=1e-3)
+    params0 = SP.apply_masks(cells.init_params(cfg, jax.random.key(0)), masks)
+
+    def make_stream(seed: int):
+        def stream(step: int):
+            rng = np.random.default_rng(seed * 100003 + step)
+            x = rng.standard_normal((B, cfg.n_in)).astype(np.float32)
+            y = (np.arange(B, dtype=np.int32) + seed) % cfg.n_out
+            return x, y
+        return stream
+
+    fleet = StreamFleet(FleetConfig(slots=slots,
+                                    update_every=args.update_every),
+                        learner, opt, params0, masks,
+                        example=make_stream(0)(0))
+    queue = [(f"s{i}", make_stream(i)) for i in range(n_sessions)]
+    need = {sid: windows for sid, _ in queue}
+    done, fleet_windows = 0, 0
+    t0 = time.time()
+    while done < n_sessions:
+        while queue and fleet.free_slots():        # continuous admission
+            sid, stream = queue.pop(0)
+            fleet.add_session(sid, stream)
+        stats = fleet.step_window()
+        fleet_windows += 1
+        for sid in list(stats):
+            need[sid] -= 1
+            if need[sid] <= 0:                      # session completes
+                fleet.remove(sid)
+                done += 1
+    dt = time.time() - t0
+    rep = fleet.report()
+    print(f"fleet served {n_sessions} sessions x {windows} windows "
+          f"({slots} slots, k={args.update_every}) in {dt:.2f}s: "
+          f"{n_sessions / max(dt, 1e-9):.1f} sessions/s, "
+          f"{fleet_windows} fleet windows, "
+          f"{rep['session_carry_bytes'] / 1e6:.2f} MB carry/session")
 
 
 def main():
@@ -23,7 +87,20 @@ def main():
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve a queue of online-RTRL training sessions "
+                         "through one StreamFleet instead of decoding")
+    ap.add_argument("--update-every", type=int, default=8,
+                    help="--fleet: stream steps per update window")
+    ap.add_argument("--session-windows", type=int, default=12,
+                    help="--fleet: update windows per session")
     args = ap.parse_args()
+
+    if args.fleet:
+        return _fleet_main(args)
+
+    from repro.configs import get_config, smoke_config
+    from repro.runtime.serving import Engine, ServeConfig
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -36,6 +36,32 @@ def _sched(lr) -> Callable:
     return lr if callable(lr) else (lambda step: jnp.float32(lr))
 
 
+def _ipow1(base: float, step: jax.Array) -> jax.Array:
+    """``base ** (step + 1)`` for an integer update count, by binary
+    exponentiation (31 multiply/selects — exact for any int32 count).
+
+    Not a micro-optimisation: libm ``pow`` is not batch-stable — XLA lowers
+    a scalar exponent and a vmapped [S] exponent through different code
+    paths whose results differ in the last ulp, which would break the
+    stream fleet's bit-identity with the solo trainer
+    (runtime/fleet.py; tests/test_fleet.py).  Multiplies and selects round
+    identically scalar or vectorised.
+
+    The 31 rounds are unrolled in Python rather than written as a
+    ``fori_loop``: the loop form made XLA:CPU's compiler segfault when this
+    op had already been compiled hundreds of times in one long-running
+    process (full tier-1 suite); the straight-line chain compiles cleanly
+    and produces bit-identical values."""
+    e = step.astype(jnp.int32) + 1
+    acc = jnp.float32(1.0)
+    b = jnp.float32(base)
+    for _ in range(31):
+        acc = jnp.where(e & 1 == 1, acc * b, acc)
+        b = b * b
+        e = e >> 1
+    return acc
+
+
 # ---------------------------------------------------------------------------
 # AdamW
 # ---------------------------------------------------------------------------
@@ -50,10 +76,9 @@ def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
                 "v": jax.tree.map(zeros, params)}
 
     def update(grads, state, params, step):
-        t = step.astype(jnp.float32) + 1.0
         lr_t = lr_fn(step)
-        c1 = 1.0 - b1 ** t
-        c2 = 1.0 - b2 ** t
+        c1 = 1.0 - _ipow1(b1, step)
+        c2 = 1.0 - _ipow1(b2, step)
 
         def leaf(g, m, v, p):
             g = g.astype(jnp.float32)

@@ -1,0 +1,325 @@
+"""Multi-tenant stream fleet: vmapped carry batching for concurrent
+online-RTRL sessions.
+
+The O(1)-in-T influence carry makes a *personally adapting* RNN per user
+affordable — but `OnlineTrainer` drives exactly one stream, so serving S
+users costs S dispatches of a small jitted chunk whose wall clock is
+dominated by per-op overhead, not FLOPs.  :class:`StreamFleet` stacks S
+independent sessions — (params, opt state, learner carry, stream position)
+each — along a leading *slot* axis and drives them all through ONE shared
+jitted update chunk: `jax.vmap` of `online_update_chunk` over the slot
+axis.  Per-session cost then approaches the marginal cost of one more
+batch row instead of one more dispatch (`benchmarks/fleet_bench.py`
+measures the sessions/sec scaling and asserts the fleet-64 >= 8x bar).
+
+Slot-based continuous batching, same discipline as `runtime/serving.py`:
+
+- the fleet shape (S, window k, per-session batch B) is STATIC — sessions
+  join and leave mid-flight at different stream positions with zero
+  recompilation;
+- dead slots are DON'T-CARE lanes: vmapped per-slot computation is
+  lane-independent (elementwise ops and per-lane reductions round
+  identically whatever the other lanes hold), so a dead lane grinding on
+  throwaway state cannot perturb a live lane's bits.  The `live` mask
+  gates stats and host bookkeeping only; a join overwrites the slot's
+  buffers wholesale and a leave resets them to the template, so dead-lane
+  contents are never observed and never drift unboundedly.  (The obvious
+  alternative — a `jnp.where` live-select restoring dead slots' pre-window
+  state — is NOT used: any large-tensor consumer added after the vmapped
+  chunk changes how XLA:CPU compiles the chunk's own reductions, ulp-
+  shifting e.g. the adamw bias updates even behind an
+  `optimization_barrier`, which would break fleet-of-1 bit-identity with
+  the solo trainer.  A mask-only consumer of the scalar metrics is
+  measured clean; tests/test_fleet.py pins this.);
+- idle sessions EVICT their full {carry, opt state, stream position,
+  update count} to the session-keyed checkpoint store
+  (`repro.checkpoint.save_session`) and later resume bit-for-bit — the
+  same carry-inclusive restart contract `OnlineTrainer` checkpoints prove
+  per-stream, namespaced per session id.
+
+Memory and sync posture: the stacked buffers are DONATED through the
+chunk (fleet memory stays 1x, not 2x), and the steady-state loop performs
+a single packed [S, 3] readback per window — live flag, window loss,
+compact-capacity overflow — the same fused-verdict trick as `guard.py`.
+
+Every session shares one learner (one engine, one set of parameter-
+sparsity masks: the compact column layout is compiled into the chunk) and
+one optimizer; sessions differ in parameter VALUES, carry, optimizer
+moments and stream position.  A fleet of 1 is bit-identical to the solo
+`OnlineTrainer` (tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_session, save_session
+from repro.runtime.online import carry_nbytes, online_update_chunk
+
+Tree = Any
+
+
+def fleet_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
+                       xs: jax.Array, ys: jax.Array, upd: jax.Array,
+                       live: jax.Array):
+    """One update window for every slot at once.
+
+    carry/opt_state: slot-stacked trees (leading axis S).  xs [S, k, B, ...],
+    ys [S, k, B], upd [S] int32 (per-slot optimizer update counts — slots
+    joined at different times), live [S] bool.
+
+    vmaps `online_update_chunk` over the slot axis.  Every lane — live or
+    dead — runs the chunk; dead lanes grind on don't-care state (the host
+    feeds them zero inputs) whose outputs are simply never observed.  The
+    `live` mask only gates the metrics: the packed [S, 3] float32 rows are
+    [live, loss * live, overflow * live] — the single per-window readback.
+
+    No per-leaf live-select restores dead slots' pre-window state on
+    purpose: consuming the chunk's large output tensors with ANY extra op
+    (a `jnp.where` select, even behind `jax.lax.optimization_barrier`)
+    changes how XLA:CPU blocks the chunk's internal reductions and ulp-
+    shifts its results, breaking the fleet's bit-identity with the solo
+    trainer.  Scalar-metrics consumers are measured clean.  Pure; jit
+    with donate_argnums=(0, 1) so fleet memory stays 1x.
+    """
+    carry, opt_state, m = jax.vmap(
+        lambda c, o, x, y, u: online_update_chunk(learner, opt, c, o, x, y, u)
+    )(carry, opt_state, xs, ys, upd)
+    lf = live.astype(jnp.float32)
+    loss = jnp.asarray(m["loss"], jnp.float32) * lf
+    ov = (jnp.asarray(m["overflow"], jnp.float32) * lf
+          if "overflow" in m else jnp.zeros_like(lf))
+    packed = jnp.stack([lf, loss, ov], axis=-1)
+    return carry, opt_state, packed
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    slots: int = 8                  # S: static fleet width
+    update_every: int = 8           # k: stream steps per window/update
+    store_dir: str | None = None    # session eviction store (None: no evict)
+    t_total: float | None = None    # per-step loss scale (None: update_every)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Session:
+    sid: str
+    stream: Callable[[int], tuple]
+    slot: int
+    pos: int = 0                    # stream position
+    upd: int = 0                    # optimizer updates applied
+    loss: float = float("nan")      # last window loss (from the packed row)
+    overflow: float = 0.0           # last window compact-capacity overflow
+
+
+class StreamFleet:
+    """S concurrent online-RTRL sessions behind one compiled update chunk.
+
+    learner/opt/masks are shared by every session (the masks' compact
+    column layout is baked into the compiled chunk — `_freeze_static`
+    requires one masks object identity); `params` seeds the slot template
+    and is the default init for joining sessions.  `example` is one
+    (x_0, y_0) batch fixing the per-session stream shapes.
+
+    API: `add_session(sid, stream, params=)` claims a free slot (traced
+    slot index — no recompile), `evict(sid)` writes the session's full
+    state to the store and frees its slot, `resume(sid, stream)` loads it
+    back bit-for-bit into any free slot, `step_window()` advances every
+    live session by one k-step window.
+    """
+
+    def __init__(self, cfg: FleetConfig, learner, opt, params: Tree,
+                 masks: Tree | None, example: tuple):
+        self.cfg = cfg
+        self.learner = learner
+        self.opt = opt
+        self.masks = masks
+        S = cfg.slots
+        x0, y0 = example
+        tt = (cfg.t_total if cfg.t_total is not None
+              else float(cfg.update_every))
+        self._t_total = tt
+        self._x0 = jnp.asarray(x0)
+        self._y0 = jnp.asarray(y0)
+        carry0 = learner.init(params, masks, (self._x0, self._y0), t_total=tt)
+        opt0 = jax.jit(opt.init)(params)
+        self._template = (carry0, opt0)
+        self.session_carry_bytes = carry_nbytes(carry0)
+
+        # slot-stacked state.  Stack under jit, then de-alias: XLA may give
+        # identical constants (two all-zero leaves) one buffer, which would
+        # break donation (same buffer donated twice) — .copy() forces each
+        # leaf to own its storage (same trick as runtime/serving.py).
+        stack = jax.jit(lambda t: jax.tree.map(
+            lambda x: jnp.repeat(x[None], S, 0), t))((carry0, opt0))
+        self.carry, self.opt_state = jax.tree.map(lambda x: x.copy(), stack)
+
+        self.sessions: dict[str, _Session] = {}
+        self._slot_sid: list[str | None] = [None] * S
+        self.windows = 0
+
+        self._chunk = jax.jit(
+            lambda carry, opt_state, xs, ys, upd, live: fleet_update_chunk(
+                learner, opt, carry, opt_state, xs, ys, upd, live),
+            donate_argnums=(0, 1))
+        # traced slot index: one compile serves every slot
+        self._write = jax.jit(
+            lambda stacked, tree, i: jax.tree.map(
+                lambda b, v: jax.lax.dynamic_update_index_in_dim(
+                    b, v.astype(b.dtype), i, 0), stacked, tree),
+            donate_argnums=(0,))
+        self._read = jax.jit(
+            lambda stacked, i: jax.tree.map(
+                lambda b: jax.lax.dynamic_index_in_dim(b, i, 0,
+                                                       keepdims=False),
+                stacked))
+
+    # -- slot management ----------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        return sum(s is not None for s in self._slot_sid)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slot_sid) if s is None]
+
+    def _claim(self, sid: str) -> int:
+        if sid in self.sessions:
+            raise ValueError(f"session {sid!r} already in the fleet")
+        free = self.free_slots()
+        if not free:
+            raise ValueError(f"fleet is full ({self.cfg.slots} slots); "
+                             "evict a session first")
+        return free[0]
+
+    def _install(self, sess: _Session, carry: Tree, opt_state: Tree):
+        i = jnp.int32(sess.slot)
+        self.carry = self._write(self.carry, carry, i)
+        self.opt_state = self._write(self.opt_state, opt_state, i)
+        self._slot_sid[sess.slot] = sess.sid
+        self.sessions[sess.sid] = sess
+
+    def add_session(self, sid: str, stream: Callable[[int], tuple],
+                    params: Tree | None = None) -> int:
+        """Join a fresh session mid-flight: new carry + opt state from
+        `params` (default: a copy of the fleet's template).  Returns the
+        claimed slot.  No recompilation — the slot index is traced and the
+        fleet shape is static."""
+        slot = self._claim(sid)
+        if params is None:
+            carry = jax.tree.map(lambda x: x.copy(), self._template[0])
+            opt_state = jax.tree.map(lambda x: x.copy(), self._template[1])
+        else:
+            carry = self.learner.init(params, self.masks,
+                                      (self._x0, self._y0),
+                                      t_total=self._t_total)
+            opt_state = jax.jit(self.opt.init)(params)
+        self._install(_Session(sid, stream, slot), carry, opt_state)
+        return slot
+
+    def remove(self, sid: str):
+        """Leave without persisting (abandoned session).  The freed slot is
+        reset to the template state so the now-dead lane keeps grinding on
+        bounded values (its results are don't-care, but NaN/Inf drift on
+        abandoned garbage is not worth carrying)."""
+        sess = self.sessions.pop(sid)
+        self._slot_sid[sess.slot] = None
+        i = jnp.int32(sess.slot)
+        self.carry = self._write(self.carry, self._template[0], i)
+        self.opt_state = self._write(self.opt_state, self._template[1], i)
+
+    def slot_state(self, sid: str) -> tuple[Tree, Tree]:
+        """(carry, opt_state) of one session, read out of the stack."""
+        sess = self.sessions[sid]
+        return (self._read(self.carry, jnp.int32(sess.slot)),
+                self._read(self.opt_state, jnp.int32(sess.slot)))
+
+    # -- evict / resume: the session-keyed checkpoint store -----------------
+
+    def _store(self) -> str:
+        if self.cfg.store_dir is None:
+            raise ValueError("FleetConfig.store_dir is unset — evict/resume "
+                             "needs a session store")
+        return self.cfg.store_dir
+
+    def evict(self, sid: str) -> int:
+        """Persist the session's FULL state — carry (params + influence +
+        accumulators), optimizer moments, stream position, update count —
+        under `store_dir/session/<sid>/` and free its slot.  Returns the
+        stream position it will resume from."""
+        store = self._store()
+        sess = self.sessions[sid]
+        carry, opt_state = self.slot_state(sid)
+        tree = {"carry": carry, "opt": opt_state,
+                "pos": jnp.int32(sess.pos), "upd": jnp.int32(sess.upd)}
+        save_session(store, sid, tree, step=sess.upd,
+                     extra={"pos": sess.pos})
+        self.remove(sid)
+        return sess.pos
+
+    def resume(self, sid: str, stream: Callable[[int], tuple]) -> int:
+        """Load an evicted session back into any free slot, bit-for-bit:
+        same carry, same moments, same stream position.  Returns the slot."""
+        store = self._store()
+        slot = self._claim(sid)
+        like = {"carry": self._template[0], "opt": self._template[1],
+                "pos": jnp.int32(0), "upd": jnp.int32(0)}
+        tree, _ = load_session(store, sid, like)
+        sess = _Session(sid, stream, slot,
+                        pos=int(tree["pos"]), upd=int(tree["upd"]))
+        self._install(sess, tree["carry"], tree["opt"])
+        return slot
+
+    # -- the steady-state loop ----------------------------------------------
+
+    def _gather(self, k: int):
+        """Host-side input assembly: every live session contributes its own
+        next k stream steps AT ITS OWN POSITION; dead slots get zeros
+        (their lanes' outputs are don't-care and never read)."""
+        S = self.cfg.slots
+        xs = np.zeros((S, k) + tuple(self._x0.shape), self._x0.dtype)
+        ys = np.zeros((S, k) + tuple(self._y0.shape), self._y0.dtype)
+        upd = np.zeros((S,), np.int32)
+        live = np.zeros((S,), bool)
+        for sess in self.sessions.values():
+            for i in range(k):
+                x, y = sess.stream(sess.pos + i)
+                xs[sess.slot, i] = x
+                ys[sess.slot, i] = y
+            upd[sess.slot] = sess.upd
+            live[sess.slot] = True
+        return xs, ys, upd, live
+
+    def step_window(self) -> dict[str, dict]:
+        """Advance every live session by one k-step window + one optimizer
+        update.  ONE dispatch, ONE packed [S, 3] readback — the loop stays
+        free of per-session host syncs.  Returns {sid: {loss, overflow,
+        pos, upd}} for the window."""
+        k = self.cfg.update_every
+        xs, ys, upd, live = self._gather(k)
+        self.carry, self.opt_state, packed = self._chunk(
+            self.carry, self.opt_state, jnp.asarray(xs), jnp.asarray(ys),
+            jnp.asarray(upd), jnp.asarray(live))
+        pk = np.asarray(jax.device_get(packed))     # the single readback
+        self.windows += 1
+        out = {}
+        for sess in self.sessions.values():
+            sess.pos += k
+            sess.upd += 1
+            sess.loss = float(pk[sess.slot, 1])
+            sess.overflow = float(pk[sess.slot, 2])
+            out[sess.sid] = {"loss": sess.loss, "overflow": sess.overflow,
+                             "pos": sess.pos, "upd": sess.upd}
+        return out
+
+    def report(self) -> dict:
+        return {"slots": self.cfg.slots, "live": self.n_live,
+                "windows": self.windows,
+                "session_carry_bytes": self.session_carry_bytes,
+                "fleet_carry_bytes": self.session_carry_bytes
+                * self.cfg.slots}

@@ -46,11 +46,22 @@ class Engine:
         self.params = params
         B, S = scfg.batch_slots, scfg.max_seq
 
-        def decode(params, token, cache, pos):
+        def decode(params, token, cache, pos, key):
             ctx = self.ctx
             if ctx is None:
-                return self.api.decode_step(self.cfg, params, token, cache, pos)
-            return self.api.decode_step(self.cfg, params, token, cache, pos, ctx)
+                logits, cache = self.api.decode_step(self.cfg, params, token,
+                                                     cache, pos)
+            else:
+                logits, cache = self.api.decode_step(self.cfg, params, token,
+                                                     cache, pos, ctx)
+            # sample INSIDE the jitted step: only the [B] token ids ever
+            # leave the device — shipping [B, V] logits to host argmax would
+            # force a full sync + transfer every generated token.
+            if scfg.temperature > 0.0:
+                g = jax.random.gumbel(key, logits.shape)
+                logits = logits / scfg.temperature + g
+            nxt = jnp.argmax(logits, axis=-1).reshape(-1)   # [B,1,V]|[B,V]->[B]
+            return nxt.astype(jnp.int32), cache
 
         self._decode = jax.jit(decode, donate_argnums=(2,))
         # de-alias: identical zeros constants can share buffers, which breaks
@@ -78,15 +89,12 @@ class Engine:
         self.tokens[slot] = list(prompt_tokens)
         return slot
 
-    def _sample(self, logits: np.ndarray, key) -> np.ndarray:
-        if self.scfg.temperature <= 0.0:
-            return np.argmax(logits, axis=-1)
-        g = jax.random.gumbel(key, logits.shape)
-        return np.asarray(jnp.argmax(logits / self.scfg.temperature + g, -1))
-
     def step(self, key) -> dict[int, int]:
         """One engine step: feeds each live slot its next token (prompt token
-        if still prefilling, else the model's own last sample)."""
+        if still prefilling, else the model's own last sample).  Sampling
+        runs inside the jitted decode — the only per-step device->host
+        traffic is the [B] sampled token ids (needed to extend the
+        histories), never the [B, V] logits."""
         B = self.scfg.batch_slots
         feed = np.zeros((B, 1), np.int32)
         for b in range(B):
@@ -94,9 +102,10 @@ class Engine:
                 continue
             hist = self.tokens[b]
             feed[b, 0] = hist[min(self.pos[b], len(hist) - 1)]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(feed), self.cache, jnp.asarray(self.pos))
-        nxt = self._sample(np.asarray(logits), key)
+        nxt_dev, self.cache = self._decode(
+            self.params, jnp.asarray(feed), self.cache, jnp.asarray(self.pos),
+            key)
+        nxt = np.asarray(jax.device_get(nxt_dev))
         emitted = {}
         for b in range(B):
             if not self.live[b]:
