@@ -78,6 +78,7 @@ def run(rows: list):
                  budget=0.15)      # shared-runner smoke: loose budget
     guard_overhead_bench(rows, n=96, beta=0.8, omega=0.9, reps=5,
                          budget=0.25)   # shared-runner smoke: loose budget
+    cell_zoo_bench(rows, n=96, beta=0.8, omega=0.9, reps=5)
     return rows
 
 
@@ -479,6 +480,78 @@ def online_step_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9,
     return recs
 
 
+def cell_zoo_bench(rows: list, n=96, n_in=16, beta=0.8, omega=0.9,
+                   batch=1, block=8, margin=1.25, reps=20) -> list:
+    """Per-step latency + carried gradient-state bytes of one engine per
+    zoo cell at MATCHED state width n: EGRU through the dual-compact
+    influence engine (dense Jacobian, [B, K, Pc] carry), RG-LRU through
+    exact diagonal traces (engine='diag_exact', O(p) carry, no n² work),
+    and the spiking ALIF cell through e-prop (engine='eprop', rank-1
+    membrane + full adaptation traces).  The carry-bytes column is the
+    structural story: the diagonal family needs no influence buffer at
+    all, which is why exact RTRL reaches LM scale there."""
+    from repro.cells.rglru import RGLRUCellConfig
+    from repro.cells.rglru import init_params as rglru_init
+    from repro.cells.snn import SNNConfig
+    from repro.cells.snn import init_params as snn_init
+    from repro.core.costs import diag_influence_flops, eprop_trace_bytes
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.runtime.online import carry_nbytes
+
+    y = jnp.zeros((batch,), jnp.int32)
+    recs = []
+
+    def time_learner(name, learner, params, masks, x, state_keys, extra):
+        carry = learner.init(params, masks, (x, y), t_total=1.0)
+        f = jax.jit(lambda c, xi, yi: learner.step(c, xi, yi)[0])
+        carry = f(carry, x, y)                   # warm up + steady state
+        jax.block_until_ready(carry["loss"])
+        best = float("inf")
+        for _ in range(max(3, reps // 3)):
+            t0 = time.perf_counter()
+            for _ in range(3):
+                carry = f(carry, x, y)
+            jax.block_until_ready(carry["loss"])
+            best = min(best, (time.perf_counter() - t0) / 3 * 1e3)
+        state_bytes = carry_nbytes(
+            {k: carry[k] for k in state_keys if k in carry})
+        recs.append({"cell": name, "n": n, "n_in": n_in, "batch": batch,
+                     "per_step_ms": round(best, 3),
+                     "grad_state_bytes": state_bytes, **extra})
+        rows.append((f"cell_zoo/step/n{n}_b{batch}/{name}",
+                     f"{best:.2f}ms", f"state={state_bytes}B"))
+
+    # EGRU: dense-Jacobian influence, dual (row x column) compact
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, n_in, omega, batch, block, margin)
+    learner = make_learner(LearnerSpec(engine="sparse", cfg=cfg,
+                                       backend="compact", capacity=K / n,
+                                       col_compact=True))
+    time_learner("egru-dual-compact", learner, params, masks, x,
+                 ("vals", "idx", "a"),
+                 {"engine": "sparse", "omega": omega, "beta_target": beta,
+                  "K": K})
+
+    # RG-LRU: exact diagonal traces, no influence buffer
+    rcfg = RGLRUCellConfig(n=n, n_in=n_in, n_out=cfg.n_out)
+    rparams = rglru_init(rcfg, jax.random.key(0))
+    learner = make_learner(LearnerSpec(engine="diag_exact", cfg=rcfg))
+    time_learner("rglru-diag-exact", learner, rparams, None, x,
+                 ("h", "tr"),
+                 {"engine": "diag_exact",
+                  "trace_flops": diag_influence_flops(n, rcfg.n_rec_params)})
+
+    # SNN: e-prop eligibility traces
+    ncfg = SNNConfig(n=n, n_in=n_in, n_out=cfg.n_out)
+    nparams = snn_init(ncfg, jax.random.key(0))
+    learner = make_learner(LearnerSpec(engine="eprop", cfg=ncfg))
+    time_learner("snn-eprop", learner, nparams, None, x,
+                 ("h", "tr"),
+                 {"engine": "eprop",
+                  "trace_bytes_model": eprop_trace_bytes(batch, n, n_in)})
+    return recs
+
+
 def rewire_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9, batch=1,
                  block=8, margin=1.25, every_k=100, frac=0.2, reps=20,
                  events=3, budget=0.05) -> dict:
@@ -667,6 +740,9 @@ if __name__ == "__main__":
     ap.add_argument("--fused-only", action="store_true",
                     help="run only fused_compact_step_bench and merge its "
                          "record into the (existing) output JSON")
+    ap.add_argument("--cell-zoo-only", action="store_true",
+                    help="run only cell_zoo_bench and merge its record "
+                         "into the (existing) output JSON")
     ap.add_argument("--fused-omega", type=float, nargs="+",
                     default=[0.5, 0.9])
     ap.add_argument("--samples", type=int, default=5,
@@ -714,6 +790,13 @@ if __name__ == "__main__":
         if Path(args.out).exists():
             out = json.loads(Path(args.out).read_text())
         out["fused_sweep"] = fused
+    elif args.cell_zoo_only:
+        zoo = cell_zoo_bench(rows, n=96, beta=args.beta, omega=0.9,
+                             reps=max(args.reps, 10))
+        out = {}
+        if Path(args.out).exists():
+            out = json.loads(Path(args.out).read_text())
+        out["cell_zoo"] = zoo
     elif args.smoke:
         sweep = [dual_compact_step_bench(rows, n=96, beta=args.beta,
                                          omega=0.9, batch=b, reps=2)
@@ -726,15 +809,18 @@ if __name__ == "__main__":
                                reps=5, events=3, budget=0.15)]
         guard = guard_overhead_bench(rows, n=96, beta=args.beta, omega=0.9,
                                      reps=5, budget=0.25)
+        zoo = cell_zoo_bench(rows, n=96, beta=args.beta, omega=0.9, reps=5)
         out = {"compact_sweep": sweep,
                "fused_sweep": fused,
                "online_step": online,
                "rewire": rewire,
                "guard_overhead": guard,
+               "cell_zoo": zoo,
                "note": "CI smoke: dual (row x column) compact vs row-only "
                        "compact + fused-vs-unfused dual step + online "
                        "per-step latency + per-event rewire migration cost "
-                       "+ guard overhead, tiny n; CPU wall clock, f32"}
+                       "+ guard overhead + cell-zoo engines, tiny n; CPU "
+                       "wall clock, f32"}
     else:
         recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
                 for n in args.n]
@@ -758,6 +844,8 @@ if __name__ == "__main__":
                   for n in (96, 256) for om in (0.5, 0.9)]
         guard = guard_overhead_bench(rows, n=args.sweep_n[0], beta=args.beta,
                                      omega=0.9, reps=max(args.reps, 10))
+        zoo = cell_zoo_bench(rows, n=args.sweep_n[0], beta=args.beta,
+                             omega=0.9, reps=max(args.reps, 10))
         out = {"egru_step": recs,
                "stacked_egru_step": stacked_recs,
                "compact_sweep": sweep,
@@ -765,6 +853,7 @@ if __name__ == "__main__":
                "online_step": online,
                "rewire": rewire,
                "guard_overhead": guard,
+               "cell_zoo": zoo,
                "note": "dense = masked-dense per-gate reference (stacked: "
                        "structural-width flat blocks); compact = "
                        "flat-influence row-compact engine (sparse_rtrl "

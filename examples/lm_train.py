@@ -5,6 +5,15 @@ with checkpointing + crash/restart demonstrated mid-run.
 
 Uses a ~100M reduced config of the chosen family (real vocab, fewer/narrower
 layers) on the host mesh; the same step builders drive the production mesh.
+
+--online instead drives the cell-zoo token-LM workload (rglru-lm by
+default) one token per stream step through OnlineTrainer — exact O(n·p)
+diagonal-trace RTRL with the same crash/restart demonstration:
+
+    PYTHONPATH=src python examples/lm_train.py --online [--steps 60] \
+        [--fail-at 30]
+
+Here --steps counts optimizer updates and --fail-at the update to crash at.
 """
 import argparse
 
@@ -23,6 +32,39 @@ from repro.models.module import count_params, materialize
 from repro.runtime.trainer import Trainer, TrainerConfig, run_with_restart
 
 
+def main_online(args):
+    """Cell-zoo online LM: token stream -> OnlineTrainer, with one crash at
+    --fail-at and a restart that resumes mid-stream from the checkpointed
+    learner carry."""
+    from repro.cells import resolve_cell
+    from repro.cells.rglru import RGLRUCellConfig
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.data.tokens import token_lm_stream
+    from repro.optim import make_optimizer
+    from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
+
+    vocab, width, k = 32, 48, 8
+    cfg = RGLRUCellConfig(n=width, n_in=vocab, n_out=vocab)
+    learner = make_learner(LearnerSpec(engine="diag_exact", cfg=cfg))
+    opt = make_optimizer("adamw", lr=5e-3)
+    stream = token_lm_stream(args.batch, vocab, seq=args.seq, seed=1000)
+
+    def make_trainer(attempt=0):
+        params = resolve_cell(cfg).init_params(jax.random.key(0))
+        ocfg = OnlineTrainerConfig(
+            total_steps=args.steps * k, update_every=k, ckpt_every=5,
+            ckpt_dir=args.ckpt_dir,
+            fail_at_update=args.fail_at if attempt == 0 else -1)
+        return OnlineTrainer(ocfg, learner, opt, params, None, stream)
+
+    out = run_with_restart(make_trainer)
+    ms = [m for m in out["metrics"] if "loss" in m]
+    print(f"finished ONLINE rglru-lm: updates={out['updates']} "
+          f"stream_steps={out['final_step']} restarts={out['restarts']} "
+          f"carry={out['carry_bytes']}B; "
+          f"loss {ms[0]['loss']:.3f} -> {ms[-1]['loss']:.3f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -31,7 +73,18 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--fail-at", type=int, default=150)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    ap.add_argument("--online", action="store_true",
+                    help="cell-zoo online token-LM (rglru-lm, "
+                         "engine='diag_exact') instead of the offline "
+                         "100M-family driver; --steps counts updates")
     args = ap.parse_args()
+
+    if args.online:
+        if args.steps > 200:      # offline default is 300; shrink online
+            args.steps = 60
+            args.fail_at = min(args.fail_at, 30)
+        main_online(args)
+        return
 
     # ~100M-param family-preserving config
     cfg = get_config(args.arch).replace(

@@ -1,0 +1,159 @@
+"""EGRU/ERNN as a zoo cell: the paper's closed-form partials, moved here.
+
+This module OWNS the closed-form per-step partials for the threshold cells
+in `repro.core.cells` (they historically lived in `repro.core.sparse_rtrl`,
+which still re-exports them — every flat-layout/compact consumer is
+unchanged).  Exploiting Eqs. (6)-(10):
+
+  * J_t    = D(H'(v_t)) . J-hat_t          -> beta_t . n rows exactly zero
+  * Mbar_t = D(H'(v_t)) . (per-unit groups) -> same rows zero; one parameter
+    group (W[:,k'], R[:,k'], b_k' [, theta_k']) per unit k'.
+
+:class:`EGRUCell` wraps them in the pluggable cell protocol
+(`repro.cells.Cell`): jac_kind="dense", [B, n, n] J-hat — the cell every
+dense/pallas/compact influence engine in `repro.core.learner` dispatches
+through.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells
+from repro.core.cells import EGRUConfig
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Closed-form per-step partials (the paper's core math)
+# ---------------------------------------------------------------------------
+
+def _gru_forward(w, a, x):
+    u = jax.nn.sigmoid(x @ w["u"]["W"] + a @ w["u"]["R"] + w["u"]["b"])
+    r = jax.nn.sigmoid(x @ w["r"]["W"] + a @ w["r"]["R"] + w["r"]["b"])
+    z = jnp.tanh(x @ w["z"]["W"] + (r * a) @ w["z"]["R"] + w["z"]["b"])
+    v = u * z + (1.0 - u) * a - w["theta"]
+    return v, (u, r, z)
+
+
+def cell_partials(cfg: EGRUConfig, w: Tree, a_prev: jax.Array, x_t: jax.Array):
+    """Closed-form (a_new, hp, J-hat [B,n,n], Mbar pieces).
+
+    J = D(hp) @ J-hat;  Mbar rows are D(hp)-gated by construction.
+    """
+    a_new, hp, Jhat, _, mbar = _cell_partials_impl(cfg, w, a_prev, x_t, False)
+    return a_new, hp, Jhat, mbar
+
+
+def cell_partials_full(cfg: EGRUConfig, w: Tree, a_prev: jax.Array,
+                       x_t: jax.Array):
+    """cell_partials plus the INPUT Jacobian B-hat [B, n, n_in] = dv/dx
+    (hp-ungated): the cross-layer injection of a stacked network, where
+    layer l's input is the layer below's activity (core/stacked_rtrl)."""
+    return _cell_partials_impl(cfg, w, a_prev, x_t, True)
+
+
+def _cell_partials_impl(cfg: EGRUConfig, w: Tree, a_prev: jax.Array,
+                        x_t: jax.Array, want_input_jac: bool):
+    B, n = a_prev.shape
+    if cfg.kind == "rnn":
+        v = x_t @ w["v"]["W"] + a_prev @ w["v"]["R"] + w["v"]["b"] - w["theta"]
+        a_new, hp = _activation(cfg, v)
+        Jhat = jnp.broadcast_to(w["v"]["R"].T[None], (B, n, n))
+        # group vector g = (x, a_prev, 1, -1): diag Mbar coefficient = 1
+        g = jnp.concatenate(
+            [x_t, a_prev, jnp.ones((B, 1)), -jnp.ones((B, 1))], axis=1)
+        mbar = {"v_diag_coef": jnp.ones((B, n)), "v_g": g}
+        Bhat = None
+        if want_input_jac:
+            Bhat = jnp.broadcast_to(w["v"]["W"].T[None],
+                                    (B, n, x_t.shape[1]))
+        return a_new, hp, Jhat, Bhat, mbar
+
+    v, (u, r, z) = _gru_forward(w, a_prev, x_t)
+    a_new, hp = _activation(cfg, v)
+    du = u * (1 - u)
+    dr = r * (1 - r)
+    dz = 1 - jnp.square(z)
+    cu = (z - a_prev) * du                     # coef on R_u^T rows
+    cz = u * dz                                # coef on z-path rows
+    term_u = jnp.einsum("bk,lk->bkl", cu, w["u"]["R"])
+    term_z1 = jnp.einsum("bk,bl,lk->bkl", cz, r, w["z"]["R"])
+    inner = jnp.einsum("lm,bm,mk->blk", w["r"]["R"], a_prev * dr, w["z"]["R"])
+    term_z2 = jnp.einsum("bk,blk->bkl", cz, inner)
+    Jhat = term_u + term_z1 + term_z2
+    Jhat = Jhat.at[:, jnp.arange(n), jnp.arange(n)].add(1 - u)
+    g_u = jnp.concatenate([x_t, a_prev, jnp.ones((B, 1))], axis=1)
+    g_z = jnp.concatenate([x_t, r * a_prev, jnp.ones((B, 1))], axis=1)
+    # r-gate coupling: dv_k/dw_r[k'] = cz_k R_z[k',k] a_{k'} dr_{k'} * g_r
+    coef_r = jnp.einsum("bk,qk,bq->bkq", cz, w["z"]["R"], a_prev * dr)
+    mbar = {"u_diag_coef": cu, "u_g": g_u,
+            "z_diag_coef": cz, "z_g": g_z,
+            "r_coef": coef_r, "r_g": g_u}
+    Bhat = None
+    if want_input_jac:
+        # dv_k/dx_i = cu_k Wu[i,k] + cz_k (Wz[i,k] + sum_q Rz[q,k] a_q dr_q Wr[i,q])
+        term_bu = jnp.einsum("bk,ik->bki", cu, w["u"]["W"])
+        term_bz1 = jnp.einsum("bk,ik->bki", cz, w["z"]["W"])
+        inner_x = jnp.einsum("iq,bq,qk->bik", w["r"]["W"], a_prev * dr,
+                             w["z"]["R"])
+        Bhat = term_bu + term_bz1 + jnp.einsum("bk,bik->bki", cz, inner_x)
+    return a_new, hp, Jhat, Bhat, mbar
+
+
+def _activation(cfg: EGRUConfig, v):
+    if cfg.dense:
+        a = jnp.tanh(v)
+        return a, 1.0 - jnp.square(a)
+    return cells.heaviside(v), cells.pseudo_derivative(v, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Cell-protocol wrapper
+# ---------------------------------------------------------------------------
+
+class EGRUCell:
+    """The paper's EGRU/ERNN behind the pluggable cell protocol.
+
+    Every method delegates to the module-level closed forms above and to
+    `repro.core.cells` — the learner engines that dispatch through this
+    object run bit-for-bit the historical `SP.cell_partials` path."""
+
+    name = "egru"
+    jac_kind = "dense"
+
+    def __init__(self, cfg: EGRUConfig):
+        self.cfg = cfg
+
+    def init_params(self, key: jax.Array) -> Tree:
+        return cells.init_params(self.cfg, key)
+
+    def rec_params(self, params: Tree) -> Tree:
+        return cells.rec_param_tree(params)
+
+    def init_state(self, batch: int) -> jax.Array:
+        return cells.init_state(self.cfg, batch)
+
+    def partials(self, w: Tree, a_prev: jax.Array, x_t: jax.Array):
+        """-> (a_new, hp, J-hat [B,n,n], mbar pieces)."""
+        return cell_partials(self.cfg, w, a_prev, x_t)
+
+    def partials_full(self, w: Tree, a_prev: jax.Array, x_t: jax.Array):
+        """-> (a_new, hp, J-hat, B-hat [B,n,n_in], mbar pieces)."""
+        return cell_partials_full(self.cfg, w, a_prev, x_t)
+
+    def step_st(self, w: Tree, a_prev: jax.Array, x_t: jax.Array):
+        """Autodiff-able forward (shared surrogate gradient) — what BPTT
+        oracles and RigL scoring differentiate."""
+        return cells.step_straight_through(self.cfg, w, a_prev, x_t)
+
+    def readout(self, params: Tree, a: jax.Array) -> jax.Array:
+        return cells.readout(params, a)
+
+    def activity_mask(self, a: jax.Array) -> jax.Array:
+        """Active (event-emitting) units this step — the alpha statistic is
+        1 - mean(activity_mask)."""
+        return a != 0.0

@@ -1,0 +1,210 @@
+"""LIF / adaptive-threshold spiking cell with an e-prop learner surface.
+
+The cell (Bellec et al.'s ALIF; beta_a=0 gives plain LIF):
+
+    v_t = alpha v_{t-1} + x_t W + z_{t-1} R - v_th z_{t-1}   (soft reset)
+    b_t = rho b_{t-1} + z_{t-1}                              (adaptation)
+    z_t = H(v_t - A_t),   A_t = v_th + beta_a b_t
+    psi_t = (gamma / v_th) max(0, 1 - |v_t - A_t| / v_th)    (surrogate)
+
+e-prop keeps only the IMPLICIT recurrence through the membrane (the
+`G = H_I * G + F` recursion of the graphax eligibility-prop pattern,
+SNIPPETS.md #1) and drops the explicit spike recurrence through R — an
+APPROXIMATION, measured against the exact surrogate-gradient BPTT oracle by
+cosine alignment in tests/test_cells.py:
+
+    eps_v_t[j]    = alpha eps_v_{t-1}[j] + inp_t[j]              (rank-1!)
+    eps_a_t[j,k]  = psi_{t-1,k} eps_v_{t-1}[j]
+                    + (rho - psi_{t-1,k} beta_a) eps_a_{t-1}[j,k]
+    e_t[j,k]      = psi_t[k] (eps_v_t[j] - beta_a eps_a_t[j,k])
+    dE/dw[j,k]   += L_t[k] e_t[j,k]
+
+with the learning signal L_t = dL_t/dz_t broadcast exactly from the readout
+(symmetric e-prop).  The membrane trace eps_v is rank-1 over (j, k) because
+the decay alpha is constant — only the adaptation trace eps_a is a full
+[j, k] tensor (`repro.core.costs.eprop_trace_bytes` prices both).
+`engine="eprop"` (repro.core.learner.EpropLearner) carries exactly this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    n: int = 64                  # neurons
+    n_in: int = 32
+    n_out: int = 4
+    alpha: float = 0.9           # membrane decay
+    rho: float = 0.97            # threshold-adaptation decay
+    beta_a: float = 0.5          # adaptation coupling (0 -> plain LIF)
+    v_th: float = 0.6
+    gamma: float = 0.3           # surrogate-derivative height
+
+    def replace(self, **kw) -> "SNNConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def n_rec_params(self) -> int:
+        return self.n_in * self.n + self.n * self.n
+
+
+def init_params(cfg: SNNConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "W": (1.0 / jnp.sqrt(cfg.n_in)
+              ) * jax.random.normal(k1, (cfg.n_in, cfg.n)),
+        "R": (1.0 / jnp.sqrt(cfg.n)
+              ) * jax.random.normal(k2, (cfg.n, cfg.n)),
+        "out": {"W": (1.0 / jnp.sqrt(cfg.n)) *
+                jax.random.normal(k3, (cfg.n, cfg.n_out)),
+                "b": jnp.zeros((cfg.n_out,))},
+    }
+
+
+def pseudo_derivative(cfg: SNNConfig, u: jax.Array) -> jax.Array:
+    """psi(v - A): piecewise-linear surrogate, gamma-scaled."""
+    return (cfg.gamma / cfg.v_th) * jnp.maximum(
+        0.0, 1.0 - jnp.abs(u) / cfg.v_th)
+
+
+def init_state(cfg: SNNConfig, batch: int) -> dict:
+    z = jnp.zeros((batch, cfg.n))
+    return {"v": z, "z": z, "b": z, "psi": z}
+
+
+def membrane(cfg: SNNConfig, params, state, x_t):
+    """-> (v_new, b_new, A): the pre-spike dynamics both the e-prop step and
+    the surrogate-BPTT step share."""
+    v_new = (cfg.alpha * state["v"] + x_t @ params["W"]
+             + state["z"] @ params["R"] - cfg.v_th * state["z"])
+    b_new = cfg.rho * state["b"] + state["z"]
+    A = cfg.v_th + cfg.beta_a * b_new
+    return v_new, b_new, A
+
+
+def step_st(cfg: SNNConfig, params, state, x_t) -> dict:
+    """Autodiff-able step: Heaviside forward, psi in the backward pass —
+    the surrogate gradient the BPTT oracle differentiates (same convention
+    as cells.step_straight_through for EGRU)."""
+
+    @jax.custom_jvp
+    def spike(u):
+        return (u > 0.0).astype(u.dtype)
+
+    @spike.defjvp
+    def _jvp(primals, tangents):
+        (u,), (du,) = primals, tangents
+        return spike(u), pseudo_derivative(cfg, u) * du
+
+    v_new, b_new, A = membrane(cfg, params, state, x_t)
+    u = v_new - A
+    z_new = spike(u)
+    return {"v": v_new, "z": z_new, "b": b_new,
+            "psi": pseudo_derivative(cfg, u)}
+
+
+def init_eprop_traces(cfg: SNNConfig, batch: int) -> dict:
+    """{"v_in" [B,n_in], "v_rec" [B,n]} rank-1 membrane traces plus the full
+    [B, j, n] adaptation traces — the whole e-prop state."""
+    return {"v_in": jnp.zeros((batch, cfg.n_in)),
+            "v_rec": jnp.zeros((batch, cfg.n)),
+            "a_in": jnp.zeros((batch, cfg.n_in, cfg.n)),
+            "a_rec": jnp.zeros((batch, cfg.n, cfg.n))}
+
+
+def eprop_step(cfg: SNNConfig, params, state, tr, x_t):
+    """One e-prop step -> (state_new, tr_new, e) where e = {"W": [B,n_in,n],
+    "R": [B,n,n]} are this step's eligibility traces (contract with the
+    learning signal to get the gradient term)."""
+    v_new, b_new, A = membrane(cfg, params, state, x_t)
+    u = v_new - A
+    z_new = (u > 0.0).astype(v_new.dtype)
+    psi_new = pseudo_derivative(cfg, u)
+    psi_prev = state["psi"]
+    # adaptation traces FIRST (they consume the previous membrane traces)
+    decay = cfg.rho - psi_prev * cfg.beta_a                    # [B,n]
+    a_in = (psi_prev[:, None, :] * tr["v_in"][:, :, None]
+            + decay[:, None, :] * tr["a_in"])
+    a_rec = (psi_prev[:, None, :] * tr["v_rec"][:, :, None]
+             + decay[:, None, :] * tr["a_rec"])
+    v_in = cfg.alpha * tr["v_in"] + x_t
+    v_rec = cfg.alpha * tr["v_rec"] + state["z"]
+    e = {"W": psi_new[:, None, :]
+         * (v_in[:, :, None] - cfg.beta_a * a_in),
+         "R": psi_new[:, None, :]
+         * (v_rec[:, :, None] - cfg.beta_a * a_rec)}
+    state_new = {"v": v_new, "z": z_new, "b": b_new, "psi": psi_new}
+    tr_new = {"v_in": v_in, "v_rec": v_rec, "a_in": a_in, "a_rec": a_rec}
+    return state_new, tr_new, e
+
+
+def bptt_loss_and_grads(cfg: SNNConfig, params, xs, labels):
+    """EXACT surrogate-gradient BPTT oracle (reverse through the full spike
+    recurrence): loss = mean_t CE(z_t W_out + b, labels)."""
+    T, B, _ = xs.shape
+
+    def loss_fn(params):
+        def body(state, x_t):
+            state = step_st(cfg, params, state, x_t)
+            return state, state["z"]
+        _, zs = jax.lax.scan(body, init_state(cfg, B), xs)
+        logits = zs @ params["out"]["W"] + params["out"]["b"]
+        ls = jax.nn.log_softmax(logits, -1)
+        lab = jnp.broadcast_to(jnp.maximum(labels, 0)[None, :, None],
+                               (T, B, 1))
+        return -jnp.mean(jnp.take_along_axis(ls, lab, 2))
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+class SNNCell:
+    """ALIF behind the pluggable cell protocol.  jac_kind="dense" (the true
+    Jacobian is dense through R), but the dense influence engines expect a
+    flat [B, n] state — the SNN's learner surface is `engine="eprop"`, which
+    consumes `eprop_step` instead of `partials`."""
+
+    name = "snn"
+    jac_kind = "dense"
+
+    def __init__(self, cfg: SNNConfig):
+        self.cfg = cfg
+
+    def init_params(self, key) -> Tree:
+        return init_params(self.cfg, key)
+
+    def rec_params(self, params: Tree) -> Tree:
+        return {k: v for k, v in params.items() if k != "out"}
+
+    def init_state(self, batch: int) -> dict:
+        return init_state(self.cfg, batch)
+
+    def init_traces(self, batch: int) -> dict:
+        return init_eprop_traces(self.cfg, batch)
+
+    def partials(self, w, state, x_t):
+        raise NotImplementedError(
+            "the SNN's structured (v, z, b) state has no flat closed-form "
+            "partials — train it with LearnerSpec(engine='eprop'), which "
+            "dispatches through eprop_step")
+
+    def eprop_step(self, w: Tree, state: dict, tr: dict, x_t: jax.Array):
+        return eprop_step(self.cfg, w, state, tr, x_t)
+
+    def step_st(self, w: Tree, state: dict, x_t: jax.Array) -> dict:
+        params = dict(w)
+        return step_st(self.cfg, params, state, x_t)
+
+    def readout(self, params: Tree, state_or_z) -> jax.Array:
+        z = state_or_z["z"] if isinstance(state_or_z, dict) else state_or_z
+        return z @ params["out"]["W"] + params["out"]["b"]
+
+    def activity_mask(self, state_or_z) -> jax.Array:
+        z = state_or_z["z"] if isinstance(state_or_z, dict) else state_or_z
+        return z != 0.0

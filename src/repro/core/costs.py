@@ -153,6 +153,31 @@ def influence_update_bytes(B: int, K: int, K_prev: int, Pc: int, n: int,
     return carry + jhat + mbar + side
 
 
+def diag_influence_flops(n: int, p: int, omega: float = 0.0) -> float:
+    """FLOPs of one DIAGONAL-Jacobian exact-RTRL trace update (madd = 2):
+    e <- a*e + mbar over p per-parameter trace entries, so 2 w~ p — LINEAR
+    in p with NO n² factor at all (the `engine="diag_exact"` regime; each
+    of the p traces touches exactly one of the n state entries, hence
+    O(n·p) total work n-scaling but 2p executable ops).  Compare
+    `influence_update_flops`' 2 n² P for the dense-Jacobian family: the
+    diagonal family is cheaper by a full factor of n², which is why exact
+    RTRL is tractable at LM scale for RG-LRU/RWKV-style cells."""
+    return 2.0 * (1.0 - omega) * p
+
+
+def eprop_trace_bytes(B: int, n: int, n_in: int, dtype_bytes: int = 4,
+                      adaptive: bool = True) -> int:
+    """e-prop trace memory (repro.cells.snn): rank-1 membrane traces
+    eps_v over inputs [B, n_in] and recurrent spikes [B, n] (rank-1 because
+    the decay alpha is a constant, independent of the postsynaptic unit),
+    plus — only for ADAPTIVE thresholds (ALIF, beta_a > 0) — the full
+    [B, j, n] adaptation traces eps_a whose decay rho - psi_k beta_a DOES
+    depend on the postsynaptic unit k."""
+    membrane = B * (n_in + n) * dtype_bytes
+    adaptation = B * (n_in + n) * n * dtype_bytes if adaptive else 0
+    return membrane + adaptation
+
+
 def live_col_fraction(live_cols: int, total_cols: int) -> float:
     """Live fraction of a parameter-column axis — the w~ factor.  The ONE
     definition shared by `sparse_rtrl.flat_col_density` (layout-level) and

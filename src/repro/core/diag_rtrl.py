@@ -8,12 +8,14 @@ total: the influence matrix factors into per-parameter eligibility traces
     e_t[w] = a_t * e_{t-1}[w] + d(a_t)/dw * h_{t-1} + d(b_t)/dw
 
 costing O(p) per step instead of O(n^2 p) — RTRL is *tractable at LM scale*
-for this family with no approximation (the regime where SnAp-1 is exact).
-This is what `train_mode='rtrl'` offers for recurrentgemma-9b / rwkv6-3b
-(DESIGN.md §4): T-independent memory, online updates.
+for this family with no approximation (the regime where SnAp-1 is exact):
+T-independent memory, online updates.
 
-The demonstration here trains an RG-LRU-style layer online; grads are
-verified exact vs BPTT in tests/test_diag_rtrl.py.
+This module keeps the original gate-free toy cell (no input gate); the full
+RG-LRU recurrence with input gate lives in `repro.cells.rglru` and trains
+through `LearnerSpec(engine="diag_exact")`.  Both dispatch through the cell
+protocol (`repro.cells`); grads are verified exact vs BPTT in
+tests/test_rtrl_exactness.py and tests/test_cells.py.
 """
 from __future__ import annotations
 
@@ -70,8 +72,10 @@ def init_traces(cfg: DiagCellConfig, batch: int) -> dict:
             "lam": jnp.zeros((batch, cfg.n))}
 
 
-def trace_update(cfg: DiagCellConfig, params, tr, h_prev, x_t):
-    """Exact per-step trace propagation (J diagonal => elementwise)."""
+def cell_partials(cfg: DiagCellConfig, params, h_prev, x_t):
+    """Closed-form (h_new, hp, a-diag [B,n], mbar) — the cell-protocol view
+    (repro.cells): J_t = diag(a_t) and mbar[w] = dh_t/dw with h_{t-1} held
+    fixed; `trace_update` is `e <- a*e + mbar` over these leaves."""
     a, b, r, log_a, scale = gates(cfg, params, x_t)
     sp = jax.nn.softplus(params["lam"])
     # d a / d (.)   via log_a = -c * r * softplus(lam)
@@ -85,10 +89,19 @@ def trace_update(cfg: DiagCellConfig, params, tr, h_prev, x_t):
     db_dlam = dscale_da * da_dlam * xw
     db_dWx = scale[:, None, :] * x_t[:, :, None]
     h_new = a * h_prev + b
+    mbar = {"Wx": db_dWx,
+            "Wa": da_dWa * h_prev[:, None, :] + db_dWa,
+            "lam": da_dlam * h_prev + db_dlam}
+    return h_new, jnp.ones_like(a), a, mbar
+
+
+def trace_update(cfg: DiagCellConfig, params, tr, h_prev, x_t):
+    """Exact per-step trace propagation (J diagonal => elementwise)."""
+    h_new, _, a, mbar = cell_partials(cfg, params, h_prev, x_t)
     tr_new = {
-        "Wx": a[:, None, :] * tr["Wx"] + db_dWx,
-        "Wa": a[:, None, :] * tr["Wa"] + da_dWa * h_prev[:, None, :] + db_dWa,
-        "lam": a * tr["lam"] + da_dlam * h_prev + db_dlam,
+        "Wx": a[:, None, :] * tr["Wx"] + mbar["Wx"],
+        "Wa": a[:, None, :] * tr["Wa"] + mbar["Wa"],
+        "lam": a * tr["lam"] + mbar["lam"],
     }
     return h_new, tr_new
 

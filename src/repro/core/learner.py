@@ -56,6 +56,7 @@ from typing import Any, NamedTuple, Protocol
 import jax
 import jax.numpy as jnp
 
+from repro.cells import resolve_cell
 from repro.core import cells, sparse_rtrl as SP, stacked_rtrl as ST
 from repro.core.cells import EGRUConfig, StackedEGRUConfig
 
@@ -75,12 +76,18 @@ class LearnerSpec:
     """Everything needed to construct a learner — the one spec the serving
     and scale layers configure engines through.
 
-    engine     'sparse' | 'stacked' | 'scaled' | 'diag' | 'snap' | 'bptt'
-    cfg        the engine's config object:
+    engine     'sparse' | 'stacked' | 'scaled' | 'diag' | 'diag_exact' |
+               'eprop' | 'snap' | 'bptt'
+    cfg        the engine's config object — resolved to a zoo cell via
+               `repro.cells.resolve_cell` where the engine is cell-agnostic:
                  sparse/snap/bptt  EGRUConfig
                  stacked           StackedEGRUConfig (or EGRUConfig + layers)
                  scaled            scaled_rtrl.ScaledRTRLConfig
                  diag              diag_rtrl.DiagCellConfig
+                 diag_exact        any jac_kind="diagonal" cell config
+                                   (cells.rglru.RGLRUCellConfig,
+                                   DiagCellConfig)
+                 eprop             cells.snn.SNNConfig
     backend    sparse/stacked influence execution:
                dense | pallas | compact | compact_fused
     col_compact carry the influence parameter axis column-compact
@@ -246,6 +253,7 @@ class SparseLearner(_LearnerBase):
                              "carry (backend 'compact' or 'compact_fused')")
         self.spec = spec
         self.cfg: EGRUConfig = spec.cfg
+        self.cell = resolve_cell(spec.cfg)
         self.backend = spec.backend
         self._score_fn = None
         self._apply_fn = None
@@ -332,7 +340,7 @@ class SparseLearner(_LearnerBase):
         new = dict(carry)
         extra_stats = {}
         if self.backend == "dense":
-            a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
+            a_new, hp, Jhat, mbar = self.cell.partials(w, carry["a"], x_t)
             M_new = SP.influence_update(cfg, carry["M"], hp, Jhat, mbar,
                                         masks)
             lt, (gout_t, cbar) = jax.value_and_grad(
@@ -345,7 +353,7 @@ class SparseLearner(_LearnerBase):
             from repro.kernels import ops as kops
             colm = rw.get("colm", self._colm) if rw is not None else self._colm
             jm = rw["jmask"] if rw is not None else self._jm
-            a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
+            a_new, hp, Jhat, mbar = self.cell.partials(w, carry["a"], x_t)
             if cl is not None:
                 Mbar = SP.flat_mbar_cols(cfg, self.layout, cl, mbar)
                 kcolm = cl.live
@@ -633,6 +641,7 @@ class StackedLearner(_LearnerBase):
         slayout = ST.stacked_layout(cfg)
         self.slayout = slayout
         self.lcfgs = [cfg.layer_cfg(l) for l in range(L)]
+        self.lcells = [resolve_cell(c) for c in self.lcfgs]
         colm = ST.stacked_col_mask(slayout, masks)
         self.colms = ST.layer_col_masks(slayout, colm)
         self._cl = ST.stacked_col_layout(slayout, masks) if col_compact \
@@ -685,10 +694,10 @@ class StackedLearner(_LearnerBase):
 
     def _layer_partials(self, l, ws, a_prev, inp):
         if l == 0:
-            a_new, hp, Jhat, mbar = SP.cell_partials(
-                self.lcfgs[l], ws[l], a_prev, inp)
+            a_new, hp, Jhat, mbar = self.lcells[l].partials(
+                ws[l], a_prev, inp)
             return a_new, hp, Jhat, None, mbar
-        return SP.cell_partials_full(self.lcfgs[l], ws[l], a_prev, inp)
+        return self.lcells[l].partials_full(ws[l], a_prev, inp)
 
     def step(self, carry, x_t, y_t):
         cfg, params = self.cfg, carry["params"]
@@ -1077,50 +1086,73 @@ class ScaledLearner(_LearnerBase):
 
 
 # ---------------------------------------------------------------------------
-# Diagonal-recurrence eligibility traces (exact, O(p) per step)
+# Diagonal-recurrence eligibility traces (exact, O(n·p) per step)
 # ---------------------------------------------------------------------------
 
-class DiagLearner(_LearnerBase):
-    """`repro.core.diag_rtrl` as a streaming learner: per-parameter
-    eligibility traces for diagonal recurrences (RG-LRU / RWKV family).
-    Exact for its cell — the regime where RTRL is tractable at LM scale."""
+class DiagExactLearner(_LearnerBase):
+    """Exact eligibility-trace RTRL for ANY jac_kind='diagonal' zoo cell
+    (RG-LRU via `repro.cells.rglru`, the diag_rtrl toy cell, the RWKV decay
+    family): J_t = diag(a_t) factors the influence matrix into independent
+    per-parameter traces
+
+        e_t[w] = a_t * e_{t-1}[w] + mbar_t[w]
+
+    so one step costs O(n·p) FLOPs and O(p) trace memory — no [B, K, P]
+    influence buffer and no n² Jacobian factor.  `engine="diag_exact"` is
+    the cell-agnostic spelling; `engine="diag"` keeps the historical name
+    (same carry layout for DiagCellConfig specs).  With parameter masks the
+    trace increments of dead parameters are zeroed every step, so their
+    traces and gradients stay exactly 0."""
 
     def __init__(self, spec: LearnerSpec):
         self.spec = spec
-        self.cfg = spec.cfg                 # DiagCellConfig
+        self.cfg = spec.cfg
+        self.cell = resolve_cell(spec.cfg)
+        if self.cell.jac_kind != "diagonal":
+            raise ValueError(
+                f"engine='diag_exact' needs a diagonal-Jacobian cell; "
+                f"{self.cell.name!r} has jac_kind={self.cell.jac_kind!r}")
 
     def init(self, params, masks, batch, t_total: float = 1.0):
-        from repro.core import diag_rtrl as D
-        cfg = self.cfg
         x0, _ = batch
         B = x0.shape[0]
+        self._freeze_static(masks=masks)
+        self.masks = masks
         carry = self._base_carry(params, t_total)
-        carry["h"] = jnp.zeros((B, cfg.n))
-        carry["tr"] = D.init_traces(cfg, B)
-        carry["gw"] = {"Wx": jnp.zeros_like(params["Wx"]),
-                       "Wa": jnp.zeros_like(params["Wa"]),
-                       "lam": jnp.zeros_like(params["lam"])}
+        carry["h"] = self.cell.init_state(B)
+        carry["tr"] = self.cell.init_traces(B)
+        carry["gw"] = jax.tree.map(jnp.zeros_like,
+                                   self.cell.rec_params(params))
         carry["gout"] = jax.tree.map(jnp.zeros_like, params["out"])
         return carry
 
     def step(self, carry, x_t, y_t):
-        from repro.core import diag_rtrl as D
-        cfg, params = self.cfg, carry["params"]
+        params = carry["params"]
+        w = self.cell.rec_params(params)
         tt = carry["t_total"]
-        h_new, tr_new = D.trace_update(cfg, params, carry["tr"], carry["h"],
-                                       x_t)
+        h_new, hp, adiag, mbar = self.cell.partials(w, carry["h"], x_t)
+        if self.masks is not None:
+            mbar = jax.tree.map(lambda m, mk: m * mk, mbar, self.masks)
+
+        def decay(leaf):
+            # broadcast a_t [B, n] over a leaf [B, ..., n]
+            shape = ((adiag.shape[0],) + (1,) * (leaf.ndim - 2)
+                     + (adiag.shape[-1],))
+            return jnp.reshape(adiag, shape)
+
+        tr_new = jax.tree.map(lambda t, m: decay(t) * t + m,
+                              carry["tr"], mbar)
 
         def inst_loss(po, hi):
-            logits = hi @ po["W"] + po["b"]
+            logits = self.cell.readout({"out": po}, hi)
             lab = jnp.maximum(y_t, 0)
             ls = jax.nn.log_softmax(logits, -1)
             return -jnp.mean(jnp.take_along_axis(ls, lab[:, None], 1)) / tt
 
         lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
             params["out"], h_new)
-        gw_t = {"Wx": jnp.einsum("bk,bjk->jk", cbar, tr_new["Wx"]),
-                "Wa": jnp.einsum("bk,bjk->jk", cbar, tr_new["Wa"]),
-                "lam": jnp.einsum("bk,bk->k", cbar, tr_new["lam"])}
+        gw_t = jax.tree.map(
+            lambda e: jnp.einsum("bk,b...k->...k", cbar, e), tr_new)
         new = dict(carry)
         new["h"], new["tr"] = h_new, tr_new
         new["gw"] = jax.tree.map(jnp.add, carry["gw"], gw_t)
@@ -1130,8 +1162,85 @@ class DiagLearner(_LearnerBase):
         if self.spec.per_step_grads:
             step_grads = dict(gw_t)
             step_grads["out"] = gout_t
-        logits = h_new @ params["out"]["W"] + params["out"]["b"]
-        return new, StepOut(lt, logits, {}, step_grads)
+        return new, StepOut(lt, self.cell.readout(params, h_new), {},
+                            step_grads)
+
+    def grads(self, carry):
+        grads = dict(carry["gw"])
+        grads["out"] = carry["gout"]
+        return grads
+
+
+# keep the historical class name importable
+DiagLearner = DiagExactLearner
+
+
+# ---------------------------------------------------------------------------
+# e-prop for spiking cells (approximate, O(n·p) per step)
+# ---------------------------------------------------------------------------
+
+class EpropLearner(_LearnerBase):
+    """Bellec-style e-prop for cells exposing `eprop_step` (the SNN in
+    `repro.cells.snn`): rank-1 membrane traces plus full adaptation traces,
+    with the learning signal broadcast exactly from the readout (symmetric
+    e-prop).  An APPROXIMATION — the explicit spike recurrence through R is
+    dropped; alignment vs the surrogate-gradient BPTT oracle is measured in
+    tests/test_cells.py."""
+
+    def __init__(self, spec: LearnerSpec):
+        self.spec = spec
+        self.cfg = spec.cfg
+        self.cell = resolve_cell(spec.cfg)
+        if not hasattr(self.cell, "eprop_step"):
+            raise ValueError(
+                f"engine='eprop' needs a cell exposing eprop_step; "
+                f"{self.cell.name!r} does not")
+
+    def init(self, params, masks, batch, t_total: float = 1.0):
+        x0, _ = batch
+        B = x0.shape[0]
+        self._freeze_static(masks=masks)
+        self.masks = masks
+        carry = self._base_carry(params, t_total)
+        carry["h"] = self.cell.init_state(B)
+        carry["tr"] = self.cell.init_traces(B)
+        carry["gw"] = jax.tree.map(jnp.zeros_like,
+                                   self.cell.rec_params(params))
+        carry["gout"] = jax.tree.map(jnp.zeros_like, params["out"])
+        return carry
+
+    def step(self, carry, x_t, y_t):
+        params = carry["params"]
+        w = self.cell.rec_params(params)
+        tt = carry["t_total"]
+        state_new, tr_new, e = self.cell.eprop_step(w, carry["h"],
+                                                    carry["tr"], x_t)
+        if self.masks is not None:
+            e = jax.tree.map(lambda el, mk: el * mk, e, self.masks)
+        z_new = state_new["z"]
+
+        def inst_loss(po, zi):
+            logits = self.cell.readout({"out": po}, zi)
+            lab = jnp.maximum(y_t, 0)
+            ls = jax.nn.log_softmax(logits, -1)
+            return -jnp.mean(jnp.take_along_axis(ls, lab[:, None], 1)) / tt
+
+        lt, (gout_t, cbar) = jax.value_and_grad(inst_loss, argnums=(0, 1))(
+            params["out"], z_new)
+        gw_t = jax.tree.map(
+            lambda el: jnp.einsum("bk,b...k->...k", cbar, el), e)
+        new = dict(carry)
+        new["h"], new["tr"] = state_new, tr_new
+        new["gw"] = jax.tree.map(jnp.add, carry["gw"], gw_t)
+        new["gout"] = jax.tree.map(jnp.add, carry["gout"], gout_t)
+        new["loss"] = carry["loss"] + lt
+        stats = {"alpha": jnp.mean(z_new != 0.0)}
+        step_grads = None
+        if self.spec.per_step_grads:
+            step_grads = dict(gw_t)
+            step_grads["out"] = gout_t
+        return new, StepOut(lt, self.cell.readout(params, z_new), stats,
+                            step_grads)
 
     def grads(self, carry):
         grads = dict(carry["gw"])
@@ -1151,6 +1260,7 @@ class SnapLearner(_LearnerBase):
     def __init__(self, spec: LearnerSpec):
         self.spec = spec
         self.cfg: EGRUConfig = spec.cfg
+        self.cell = resolve_cell(spec.cfg)
         self.order = spec.order
 
     def init(self, params, masks, batch, t_total: float = 1.0):
@@ -1182,7 +1292,7 @@ class SnapLearner(_LearnerBase):
         cfg, params = self.cfg, carry["params"]
         w = cells.rec_param_tree(params)
         tt = carry["t_total"]
-        a_new, hp, Jhat, mbar = SP.cell_partials(cfg, w, carry["a"], x_t)
+        a_new, hp, Jhat, mbar = self.cell.partials(w, carry["a"], x_t)
         M_new = self._prune(SP.influence_update(cfg, carry["M"], hp, Jhat,
                                                 mbar, self.masks))
         lt, (gout_t, cbar) = jax.value_and_grad(
@@ -1298,7 +1408,9 @@ ENGINES = {
     "sparse": SparseLearner,
     "stacked": StackedLearner,
     "scaled": ScaledLearner,
-    "diag": DiagLearner,
+    "diag": DiagExactLearner,        # historical name, same engine
+    "diag_exact": DiagExactLearner,
+    "eprop": EpropLearner,
     "snap": SnapLearner,
     "bptt": BPTTLearner,
 }

@@ -152,87 +152,14 @@ def omega_tilde(masks: Tree) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Closed-form per-step partials
+# Closed-form per-step partials — these live in `repro.cells.egru` now (the
+# cell zoo owns per-architecture math); re-exported here because the flat
+# layout, the compact steps, and every historical consumer import them from
+# this module.
 # ---------------------------------------------------------------------------
 
-def _gru_forward(w, a, x):
-    u = jax.nn.sigmoid(x @ w["u"]["W"] + a @ w["u"]["R"] + w["u"]["b"])
-    r = jax.nn.sigmoid(x @ w["r"]["W"] + a @ w["r"]["R"] + w["r"]["b"])
-    z = jnp.tanh(x @ w["z"]["W"] + (r * a) @ w["z"]["R"] + w["z"]["b"])
-    v = u * z + (1.0 - u) * a - w["theta"]
-    return v, (u, r, z)
-
-
-def cell_partials(cfg: EGRUConfig, w: Tree, a_prev: jax.Array, x_t: jax.Array):
-    """Closed-form (a_new, hp, J-hat [B,n,n], Mbar pieces).
-
-    J = D(hp) @ J-hat;  Mbar rows are D(hp)-gated by construction.
-    """
-    a_new, hp, Jhat, _, mbar = _cell_partials_impl(cfg, w, a_prev, x_t, False)
-    return a_new, hp, Jhat, mbar
-
-
-def cell_partials_full(cfg: EGRUConfig, w: Tree, a_prev: jax.Array,
-                       x_t: jax.Array):
-    """cell_partials plus the INPUT Jacobian B-hat [B, n, n_in] = dv/dx
-    (hp-ungated): the cross-layer injection of a stacked network, where
-    layer l's input is the layer below's activity (core/stacked_rtrl)."""
-    return _cell_partials_impl(cfg, w, a_prev, x_t, True)
-
-
-def _cell_partials_impl(cfg: EGRUConfig, w: Tree, a_prev: jax.Array,
-                        x_t: jax.Array, want_input_jac: bool):
-    B, n = a_prev.shape
-    if cfg.kind == "rnn":
-        v = x_t @ w["v"]["W"] + a_prev @ w["v"]["R"] + w["v"]["b"] - w["theta"]
-        a_new, hp = _activation(cfg, v)
-        Jhat = jnp.broadcast_to(w["v"]["R"].T[None], (B, n, n))
-        # group vector g = (x, a_prev, 1, -1): diag Mbar coefficient = 1
-        g = jnp.concatenate(
-            [x_t, a_prev, jnp.ones((B, 1)), -jnp.ones((B, 1))], axis=1)
-        mbar = {"v_diag_coef": jnp.ones((B, n)), "v_g": g}
-        Bhat = None
-        if want_input_jac:
-            Bhat = jnp.broadcast_to(w["v"]["W"].T[None],
-                                    (B, n, x_t.shape[1]))
-        return a_new, hp, Jhat, Bhat, mbar
-
-    v, (u, r, z) = _gru_forward(w, a_prev, x_t)
-    a_new, hp = _activation(cfg, v)
-    du = u * (1 - u)
-    dr = r * (1 - r)
-    dz = 1 - jnp.square(z)
-    cu = (z - a_prev) * du                     # coef on R_u^T rows
-    cz = u * dz                                # coef on z-path rows
-    term_u = jnp.einsum("bk,lk->bkl", cu, w["u"]["R"])
-    term_z1 = jnp.einsum("bk,bl,lk->bkl", cz, r, w["z"]["R"])
-    inner = jnp.einsum("lm,bm,mk->blk", w["r"]["R"], a_prev * dr, w["z"]["R"])
-    term_z2 = jnp.einsum("bk,blk->bkl", cz, inner)
-    Jhat = term_u + term_z1 + term_z2
-    Jhat = Jhat.at[:, jnp.arange(n), jnp.arange(n)].add(1 - u)
-    g_u = jnp.concatenate([x_t, a_prev, jnp.ones((B, 1))], axis=1)
-    g_z = jnp.concatenate([x_t, r * a_prev, jnp.ones((B, 1))], axis=1)
-    # r-gate coupling: dv_k/dw_r[k'] = cz_k R_z[k',k] a_{k'} dr_{k'} * g_r
-    coef_r = jnp.einsum("bk,qk,bq->bkq", cz, w["z"]["R"], a_prev * dr)
-    mbar = {"u_diag_coef": cu, "u_g": g_u,
-            "z_diag_coef": cz, "z_g": g_z,
-            "r_coef": coef_r, "r_g": g_u}
-    Bhat = None
-    if want_input_jac:
-        # dv_k/dx_i = cu_k Wu[i,k] + cz_k (Wz[i,k] + sum_q Rz[q,k] a_q dr_q Wr[i,q])
-        term_bu = jnp.einsum("bk,ik->bki", cu, w["u"]["W"])
-        term_bz1 = jnp.einsum("bk,ik->bki", cz, w["z"]["W"])
-        inner_x = jnp.einsum("iq,bq,qk->bik", w["r"]["W"], a_prev * dr,
-                             w["z"]["R"])
-        Bhat = term_bu + term_bz1 + jnp.einsum("bk,bik->bki", cz, inner_x)
-    return a_new, hp, Jhat, Bhat, mbar
-
-
-def _activation(cfg: EGRUConfig, v):
-    if cfg.dense:
-        a = jnp.tanh(v)
-        return a, 1.0 - jnp.square(a)
-    return cells.heaviside(v), cells.pseudo_derivative(v, cfg)
+from repro.cells.egru import (_activation, _cell_partials_impl,  # noqa: E402,F401
+                              _gru_forward, cell_partials, cell_partials_full)
 
 
 # ---------------------------------------------------------------------------

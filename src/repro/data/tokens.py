@@ -21,6 +21,33 @@ def _tokens_for(seed: int, batch: int, seq: int, vocab: int) -> np.ndarray:
     return np.where(resets, uni, walk).astype(np.int32)
 
 
+def token_lm_stream(batch: int, vocab: int, *, seq: int = 64,
+                    seed: int = 1234):
+    """Step-keyed SINGLE-token view of the synthetic LM stream — the online
+    RTRL workload shape: stream(t) -> (x_t [B, vocab] one-hot f32,
+    y_t [B] int32 next-token labels).
+
+    Tokens come from the same deterministic (seed, sequence) keying as
+    `synthetic_token_batches`: global step t indexes position t % seq of
+    sequence t // seq, so a restarted trainer replays its exact stream (the
+    OnlineTrainer checkpoint/restart contract).  One sequence ([B, seq+1]
+    tokens) is generated per seq steps and memoised between calls."""
+    cache: dict = {}
+
+    def stream(t: int):
+        s, pos = divmod(int(t), seq)
+        if cache.get("s") != s:
+            cache["s"] = s
+            cache["toks"] = _tokens_for(seed * 1_000_003 + s, batch,
+                                        seq + 1, vocab)
+        toks = cache["toks"]
+        x = np.zeros((batch, vocab), dtype=np.float32)
+        x[np.arange(batch), toks[:, pos]] = 1.0
+        return x, toks[:, pos + 1].astype(np.int32)
+
+    return stream
+
+
 def synthetic_token_batches(batch: int, seq: int, vocab: int, *,
                             shard: int = 0, n_shards: int = 1,
                             seed: int = 1234, n_patches: int = 0,

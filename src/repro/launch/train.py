@@ -25,6 +25,16 @@ consumes the spiral task as an unbounded stream and applies an optimizer
 update every k steps MID-SEQUENCE (repro.runtime.online.OnlineTrainer):
 memory is O(1) in stream length, checkpoints include the learner carry so
 restarts resume mid-stream, and --steps counts optimizer updates.
+
+Online token-LM path (the cell zoo — repro.cells — behind the same stream):
+
+    PYTHONPATH=src python -m repro.launch.train --arch rglru-lm --online \
+        --smoke --steps 10 [--vocab 64 --width 64]
+
+trains a next-token head online, one token per stream step, with the
+engine matched to the cell: egru-lm -> 'sparse' (dense-Jacobian influence),
+rglru-lm -> 'diag_exact' (exact O(n·p) diagonal traces), snn-lm -> 'eprop'
+(spiking eligibility traces).
 """
 from __future__ import annotations
 
@@ -242,6 +252,104 @@ def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
     return out
 
 
+LM_ARCHS = {"egru-lm": "sparse", "rglru-lm": "diag_exact", "snn-lm": "eprop"}
+
+
+def train_lm_online(args) -> dict:
+    """The first ONLINE token-LM workload: a single-token stream
+    (repro.data.tokens.token_lm_stream) driven through OnlineTrainer with a
+    cell-zoo engine per --arch —
+
+        egru-lm    engine='sparse'      (dense-Jacobian influence, EGRU)
+        rglru-lm   engine='diag_exact'  (exact O(n·p) diagonal traces)
+        snn-lm     engine='eprop'       (approximate spiking eligibility)
+
+    The next-token head IS the learner's readout (n_out = vocab), trained
+    online through the same mid-sequence update / checkpoint / restart
+    machinery as the spiral task.  --steps counts optimizer updates."""
+    from repro.core import sparse_rtrl as SP
+    from repro.core.cells import EGRUConfig
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.cells.rglru import RGLRUCellConfig
+    from repro.cells.rglru import make_masks as rglru_masks
+    from repro.cells.snn import SNNConfig
+    from repro.data.tokens import token_lm_stream
+    from repro.optim import make_optimizer
+    from repro.optim.optimizers import masked
+    from repro.runtime.online import OnlineTrainer, OnlineTrainerConfig
+
+    if not args.online:
+        raise SystemExit(f"--arch {args.arch} is an online streaming "
+                         f"workload — pass --online (--steps counts "
+                         f"optimizer updates)")
+    engine = LM_ARCHS[args.arch]
+    vocab = 16 if args.smoke else args.vocab
+    width = min(args.width, 32) if args.smoke else args.width
+    updates = min(args.steps, 10) if args.smoke else args.steps
+    k = args.update_every
+    base_key = jax.random.key(args.seed)
+
+    masks = None
+    if engine == "sparse":
+        cfg = EGRUConfig(n_hidden=width, n_in=vocab, n_out=vocab, kind="gru")
+        if args.sparsity > 0.0:
+            masks = SP.make_masks(cfg, jax.random.fold_in(base_key, 1),
+                                  args.sparsity)
+        spec = LearnerSpec(engine="sparse", cfg=cfg,
+                           backend=args.rtrl_backend,
+                           capacity=args.capacity)
+    elif engine == "diag_exact":
+        cfg = RGLRUCellConfig(n=width, n_in=vocab, n_out=vocab)
+        if args.sparsity > 0.0:
+            masks = rglru_masks(cfg, jax.random.fold_in(base_key, 1),
+                                args.sparsity)
+        spec = LearnerSpec(engine="diag_exact", cfg=cfg)
+    else:
+        if args.sparsity > 0.0:
+            raise SystemExit("--sparsity is not wired for snn-lm (no "
+                             "parameter-mask convention for the spiking "
+                             "cell yet)")
+        cfg = SNNConfig(n=width, n_in=vocab, n_out=vocab)
+        spec = LearnerSpec(engine="eprop", cfg=cfg)
+    learner = make_learner(spec)
+
+    opt = make_optimizer("adamw", lr=args.lr)
+    if masks is not None:
+        opt_mask = dict(masks)
+        opt_mask.setdefault("out", None)
+        opt = masked(opt, opt_mask)
+
+    stream = token_lm_stream(args.batch, vocab, seq=args.seq,
+                             seed=1234 + args.seed)
+
+    def make_trainer(attempt=0):
+        from repro.cells import resolve_cell
+        cell = resolve_cell(cfg)
+        params = cell.init_params(jax.random.fold_in(base_key, 0))
+        if masks is not None:
+            params = SP.apply_masks(params, masks) if engine == "sparse" \
+                else {kk: (v * masks[kk] if kk in masks else v)
+                      for kk, v in params.items()}
+        ocfg = OnlineTrainerConfig(
+            total_steps=updates * k, update_every=k,
+            ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+            fail_at_update=args.fail_at if attempt == 0 else -1,
+            metrics_path=args.metrics, seed=args.seed)
+        return OnlineTrainer(ocfg, learner, opt, params, masks, stream)
+
+    out = run_with_restart(make_trainer)
+    print(f"done: arch={args.arch} ONLINE engine={engine} vocab={vocab} "
+          f"n={width} update_every={k} updates={out['updates']} "
+          f"stream_steps={out['final_step']} restarts={out['restarts']} "
+          f"carry={out['carry_bytes']}B (O(1) in stream length)")
+    with_loss = [m for m in out["metrics"] if "loss" in m]
+    if with_loss:
+        first, last = with_loss[0], with_loss[-1]
+        alpha = f" (alpha {last['alpha']:.2f})" if "alpha" in last else ""
+        print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}{alpha}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -313,6 +421,13 @@ def main():
                     help="fault injection (online): poison one influence "
                          "element in place after this update commits — "
                          "transient, healed by rollback+replay")
+    ap.add_argument("--vocab", type=int, default=64,
+                    help="token vocabulary (the *-lm online archs; --smoke "
+                         "forces 16)")
+    ap.add_argument("--width", type=int, default=64,
+                    help="recurrent state width for the *-lm online archs")
+    ap.add_argument("--lr", type=float, default=3e-3,
+                    help="learning rate for the *-lm online archs")
     ap.add_argument("--seed", type=int, default=0,
                     help="base seed threaded through param init, mask "
                          "draws, the data stream, and rewire event keys — "
@@ -321,6 +436,9 @@ def main():
 
     if args.arch in ("egru-spiral", "egru_spiral"):
         train_egru(args)
+        return
+    if args.arch in LM_ARCHS:
+        train_lm_online(args)
         return
 
     cfg = get_config(args.arch)

@@ -7,8 +7,10 @@ The RG-LRU recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
 is *diagonal*, which matters twice here:
  1. training uses `lax.associative_scan` (log-depth, no while loop — fully
     visible to XLA cost analysis);
- 2. the paper's exact-RTRL machinery collapses to O(p) eligibility traces for
-    diagonal Jacobians — see `repro.core.diag_rtrl` (train_mode='rtrl').
+ 2. the paper's exact-RTRL machinery collapses to O(n·p) eligibility traces
+    for diagonal Jacobians — `repro.cells.rglru` derives the closed-form
+    per-step partials for exactly this recurrence and trains it online via
+    `LearnerSpec(engine="diag_exact")`.
 """
 from __future__ import annotations
 

@@ -6,3 +6,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+# The suite compiles hundreds of executables in one process; past ~330
+# tests the accumulated XLA:CPU compiler state segfaults a later large
+# compile (reproducibly, in backend_compile, independent of which tests
+# added the load).  Dropping the in-process caches between test modules
+# bounds that state; cross-module cache sharing is negligible, so the
+# wall-clock cost is small.
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

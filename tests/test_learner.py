@@ -41,8 +41,12 @@ def _specs_every_engine():
     cfg, _, _, _, _ = _setup()
     from repro.core.scaled_rtrl import ScaledRTRLConfig
     from repro.core.diag_rtrl import DiagCellConfig
+    from repro.cells.rglru import RGLRUCellConfig
+    from repro.cells.snn import SNNConfig
     scfg = cells.stacked_config(cfg, 2)
     dcfg = DiagCellConfig(n=8, n_in=3, n_out=2)
+    rcfg = RGLRUCellConfig(n=8, n_in=3, n_out=2)
+    ncfg = SNNConfig(n=8, n_in=3, n_out=2)
     xcfg = ScaledRTRLConfig(n=16, n_in=4, n_out=2, batch=2, beta_capacity=1.0,
                             sparsity=0.5, mask_block=2)
     return {
@@ -55,6 +59,8 @@ def _specs_every_engine():
                                backend="compact"),
         "scaled": LearnerSpec(engine="scaled", cfg=xcfg),
         "diag": LearnerSpec(engine="diag", cfg=dcfg),
+        "diag_exact": LearnerSpec(engine="diag_exact", cfg=rcfg),
+        "eprop": LearnerSpec(engine="eprop", cfg=ncfg),
         "snap1": LearnerSpec(engine="snap", cfg=cfg, order=1),
         "snap2": LearnerSpec(engine="snap", cfg=cfg, order=2),
         "bptt": LearnerSpec(engine="bptt", cfg=cfg),
@@ -75,6 +81,10 @@ def test_every_engine_constructible_and_steppable():
             y = jnp.array([i % 2 for i in range(spec.cfg.batch)])
         elif spec.engine == "diag":
             p, m = diag_init(spec.cfg, jax.random.key(0)), None
+            x, y = xs[:3], labels
+        elif spec.engine in ("diag_exact", "eprop"):
+            from repro.cells import resolve_cell
+            p, m = resolve_cell(spec.cfg).init_params(jax.random.key(0)), None
             x, y = xs[:3], labels
         elif spec.engine == "stacked":
             p = cells.init_stacked_params(spec.cfg, jax.random.key(0))
@@ -120,8 +130,8 @@ def test_make_learner_rejects_unknown():
         make_learner(LearnerSpec(engine="sparse", cfg=cfg, backend="nope"))
     with pytest.raises(ValueError):
         make_learner(LearnerSpec(engine="sparse"))       # cfg required
-    assert set(ENGINES) == {"sparse", "stacked", "scaled", "diag", "snap",
-                            "bptt"}
+    assert set(ENGINES) == {"sparse", "stacked", "scaled", "diag",
+                            "diag_exact", "eprop", "snap", "bptt"}
 
 
 def test_scan_learner_matches_legacy_sparse():
