@@ -47,6 +47,7 @@ import numpy as np
 
 from kernel_bench import _egru_operating_point, _time_ms_interleaved
 from repro.core.learner import LearnerSpec, make_learner
+from repro.obs import Registry
 from repro.optim import make_optimizer
 from repro.runtime.fleet import fleet_update_chunk
 from repro.runtime.online import carry_nbytes, online_update_chunk
@@ -116,15 +117,22 @@ def fleet_vs_sequential_bench(rows: list, S_list=(1, 8, 64, 256), n=16,
         t_fleet, t_seq = _time_ms_interleaved(
             [(fleet_fn, ()), (seq_fn, ())], samples=samples)
 
-        # per-session step latency distribution over repeated fleet windows
-        dts = []
+        # per-session step latency distribution over repeated fleet windows,
+        # through the SAME fixed-bucket histogram estimator the serving
+        # fleet reports from (repro.obs.Registry) — no stored samples, so
+        # the bench percentiles and the fleet's report() percentiles are
+        # the same statistic; a fine geometric ladder keeps the
+        # interpolation error well under the p50/p99 gap at this scale
+        reg = Registry()
+        hist = reg.histogram(
+            "step_latency_ms",
+            buckets=[0.01 * 1.25 ** i for i in range(60)])
         for _ in range(p_windows):
             t0 = time.perf_counter()
             jax.block_until_ready(fleet_fn())
-            dts.append((time.perf_counter() - t0) * 1e3)
-        step_lat = np.asarray(dts) / k          # every session advances k
-        p50, p99 = float(np.percentile(step_lat, 50)), \
-            float(np.percentile(step_lat, 99))
+            hist.observe((time.perf_counter() - t0) * 1e3 / k)
+        pcts = hist.percentiles()               # every session advances k
+        p50, p99 = pcts["p50"], pcts["p99"]
 
         rec = {"S": S, "k": k, "n": n, "omega": omega, "batch": batch,
                "K": K, "beta_measured": round(beta_meas, 4),
@@ -192,7 +200,8 @@ if __name__ == "__main__":
                    "one metrics readback per session, OnlineTrainer-style); "
                    "n=%d dispatch-bound operating point, 1-core CPU f32; "
                    "interleaved min-of-%d wall clock; step latency "
-                   "percentiles over %d windows"
+                   "percentiles over %d windows via the repro.obs "
+                   "fixed-bucket histogram estimator"
                    % (args.n, args.samples, args.p_windows)}
     Path(args.out).write_text(json.dumps(out, indent=1))
 

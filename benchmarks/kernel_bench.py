@@ -78,6 +78,8 @@ def run(rows: list):
                  budget=0.15)      # shared-runner smoke: loose budget
     guard_overhead_bench(rows, n=96, beta=0.8, omega=0.9, reps=5,
                          budget=0.25)   # shared-runner smoke: loose budget
+    obs_overhead_bench(rows, n=96, beta=0.8, omega=0.9, reps=5,
+                       budget=0.25)     # shared-runner smoke: loose budget
     cell_zoo_bench(rows, n=96, beta=0.8, omega=0.9, reps=5)
     return rows
 
@@ -711,6 +713,94 @@ def guard_overhead_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9,
     return rec
 
 
+def obs_overhead_bench(rows: list, n=96, n_in=8, beta=0.8, omega=0.9,
+                       batch=1, block=8, margin=1.25, k=8, reps=20,
+                       budget=0.05) -> dict:
+    """Steady-state cost of the in-jit MetricPack (repro.obs.metricpack)
+    on the online update path: one packed window (all per-window scalars
+    fused into the chunk, ONE [F]-vector device->host readback) vs the
+    bare `online_update_chunk` + scalar loss readback, at update_every=k
+    on the dual-compact learner.
+
+    The packed chunk's carry/opt outputs are bit-identical to the bare
+    chunk's (the pack fields are pure scalar observers — asserted here on
+    the warm window, and pinned per-field in tests/test_obs.py); this
+    bench prices the observer FLOPs + the wider readback and asserts the
+    overhead stays under `budget` (default 5% — the acceptance bar).
+    Min-of-samples timing, same noise posture as guard_overhead_bench."""
+    from repro.core.learner import LearnerSpec, make_learner
+    from repro.obs import MetricPack
+    from repro.optim import make_optimizer
+    from repro.runtime.online import online_update_chunk
+    cfg, params, masks, w, a, x, cbar, beta_meas, n_active, K = \
+        _egru_operating_point(n, n_in, omega, batch, block, margin)
+    y = jnp.zeros((batch,), jnp.int32)
+    learner = make_learner(LearnerSpec(
+        engine="sparse", cfg=cfg, backend="compact", capacity=K / n,
+        col_compact=True))
+    opt = make_optimizer("adamw", lr=1e-3)
+    carry = learner.init(params, masks, (x, y), t_total=float(k))
+    opt_state = jax.jit(opt.init)(params)
+    xs = x + 0.01 * jax.random.normal(jax.random.key(5), (k,) + x.shape)
+    ys = jnp.broadcast_to(y, (k,) + y.shape)
+    upd = jnp.int32(0)
+    pack = MetricPack.default()
+    f_plain = jax.jit(lambda c, o: online_update_chunk(
+        learner, opt, c, o, xs, ys, upd))
+    f_pack = jax.jit(lambda c, o: online_update_chunk(
+        learner, opt, c, o, xs, ys, upd, pack=pack))
+
+    def run_plain(c, o):
+        c, o, m = f_plain(c, o)
+        float(jax.device_get(m["loss"]))          # the trainer's readback
+        return c, o
+
+    def run_pack(c, o):
+        c, o, m = f_pack(c, o)
+        pack.unpack(m["packed"])                  # THE one packed readback
+        return c, o
+
+    def sample_ms(fn, c, o):                       # one 3-window sample
+        t0 = time.perf_counter()
+        for _ in range(3):
+            c, o = fn(c, o)
+        return (time.perf_counter() - t0) / 3 * 1e3, c, o
+
+    cp, op = run_plain(carry, opt_state)           # warm up both paths
+    cb, ob = run_pack(carry, opt_state)
+    # instrumented-vs-bare bit-identity on the warm window's outputs (the
+    # full per-field pin lives in tests/test_obs.py)
+    for lp, lb in zip(jax.tree.leaves((cp, op)), jax.tree.leaves((cb, ob))):
+        assert np.array_equal(np.asarray(lp), np.asarray(lb)), \
+            "packed chunk is not bit-identical to the bare chunk"
+    # interleave bare/packed samples, min-of-samples per side (see
+    # guard_overhead_bench for why sequential A-then-B layouts lie here)
+    t_p = t_k = float("inf")
+    for _ in range(max(3, reps // 2)):
+        dt, cp, op = sample_ms(run_plain, cp, op)
+        t_p = min(t_p, dt)
+        dt, cb, ob = sample_ms(run_pack, cb, ob)
+        t_k = min(t_k, dt)
+    overhead = (t_k - t_p) / t_p
+    rec = {"n": n, "n_in": n_in, "batch": batch, "omega": omega,
+           "beta_target": beta, "beta_measured": round(beta_meas, 4),
+           "K": K, "update_every": k, "pack_fields": len(pack.names),
+           "readbacks_per_window": 1,
+           "bare_window_ms": round(t_p, 3),
+           "packed_window_ms": round(t_k, 3),
+           "bare_step_ms": round(t_p / k, 4),
+           "packed_step_ms": round(t_k / k, 4),
+           "overhead": round(overhead, 4)}
+    assert overhead < budget, (
+        f"metric-pack steady-state overhead broke the {budget * 100:.0f}% "
+        f"budget: packed {t_k:.2f}ms vs bare {t_p:.2f}ms per {k}-step "
+        f"window -> {overhead * 100:.1f}%")
+    rows.append((f"obs/n{n}_k{k}_w{omega}/window_ms", f"{t_k:.2f}",
+                 f"bare={t_p:.2f}ms_overhead={overhead * 100:.2f}%_F="
+                 f"{len(pack.names)}"))
+    return rec
+
+
 if __name__ == "__main__":
     import argparse
     import json
@@ -736,6 +826,9 @@ if __name__ == "__main__":
                          "the (existing) output JSON")
     ap.add_argument("--guard-only", action="store_true",
                     help="run only guard_overhead_bench and merge its "
+                         "record into the (existing) output JSON")
+    ap.add_argument("--obs-only", action="store_true",
+                    help="run only obs_overhead_bench and merge its "
                          "record into the (existing) output JSON")
     ap.add_argument("--fused-only", action="store_true",
                     help="run only fused_compact_step_bench and merge its "
@@ -780,6 +873,14 @@ if __name__ == "__main__":
         if Path(args.out).exists():
             out = json.loads(Path(args.out).read_text())
         out["guard_overhead"] = guard
+    elif args.obs_only:
+        obs = obs_overhead_bench(rows, n=96, beta=args.beta, omega=0.9,
+                                 reps=max(args.reps, 10),
+                                 budget=0.25 if args.smoke else 0.05)
+        out = {}
+        if Path(args.out).exists():
+            out = json.loads(Path(args.out).read_text())
+        out["obs_overhead"] = obs
     elif args.fused_only:
         fused = [fused_compact_step_bench(rows, n=n, beta=args.beta,
                                           omega=om, batch=b,
@@ -809,18 +910,21 @@ if __name__ == "__main__":
                                reps=5, events=3, budget=0.15)]
         guard = guard_overhead_bench(rows, n=96, beta=args.beta, omega=0.9,
                                      reps=5, budget=0.25)
+        obs = obs_overhead_bench(rows, n=96, beta=args.beta, omega=0.9,
+                                 reps=5, budget=0.25)
         zoo = cell_zoo_bench(rows, n=96, beta=args.beta, omega=0.9, reps=5)
         out = {"compact_sweep": sweep,
                "fused_sweep": fused,
                "online_step": online,
                "rewire": rewire,
                "guard_overhead": guard,
+               "obs_overhead": obs,
                "cell_zoo": zoo,
                "note": "CI smoke: dual (row x column) compact vs row-only "
                        "compact + fused-vs-unfused dual step + online "
                        "per-step latency + per-event rewire migration cost "
-                       "+ guard overhead + cell-zoo engines, tiny n; CPU "
-                       "wall clock, f32"}
+                       "+ guard overhead + metric-pack overhead + cell-zoo "
+                       "engines, tiny n; CPU wall clock, f32"}
     else:
         recs = [egru_step_bench(rows, n=n, beta=args.beta, reps=args.reps)
                 for n in args.n]
@@ -844,6 +948,8 @@ if __name__ == "__main__":
                   for n in (96, 256) for om in (0.5, 0.9)]
         guard = guard_overhead_bench(rows, n=args.sweep_n[0], beta=args.beta,
                                      omega=0.9, reps=max(args.reps, 10))
+        obs = obs_overhead_bench(rows, n=args.sweep_n[0], beta=args.beta,
+                                 omega=0.9, reps=max(args.reps, 10))
         zoo = cell_zoo_bench(rows, n=args.sweep_n[0], beta=args.beta,
                              omega=0.9, reps=max(args.reps, 10))
         out = {"egru_step": recs,
@@ -853,6 +959,7 @@ if __name__ == "__main__":
                "online_step": online,
                "rewire": rewire,
                "guard_overhead": guard,
+               "obs_overhead": obs,
                "cell_zoo": zoo,
                "note": "dense = masked-dense per-gate reference (stacked: "
                        "structural-width flat blocks); compact = "

@@ -8,6 +8,7 @@ Prints ``name,value,derived`` CSV:
   kernel/*     Pallas-kernel block-savings realization + compact-path ratios
   fleet/*      multi-tenant fleet throughput vs sequential session stepping
   roofline/*   summary of the 40-cell dry-run roofline table
+  trajectory/* BENCH_*.json aggregation headlines (BENCH_trajectory.json)
 """
 from __future__ import annotations
 
@@ -42,6 +43,8 @@ def main() -> None:
         fig3_spiral.run(rows, iters=args.fig3_iters)
     import roofline
     roofline.run(rows)
+    import trajectory
+    trajectory.run(rows)
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -1,0 +1,210 @@
+"""Benchmark trajectory aggregator: merge every committed BENCH_*.json
+at the repo root into ONE schema-checked BENCH_trajectory.json.
+
+Each benchmark writer (kernel_bench, fleet_bench, roofline, ...) owns its
+own record file; this module is the cross-cutting view — one artifact
+that carries the repo's full benchmark state at a commit, plus a flat
+`headline` dict of the numbers reviews track across PRs (guard/metric-
+pack overheads, compact-vs-dense speedups, fleet scaling).  CI uploads
+it; `python -m repro.obs.validate` has the run-level analogue.
+
+Schema checking is structural: every known record stem must carry its
+required top-level keys with the right container types (a bench that
+silently stopped writing a section fails the aggregation loudly instead
+of producing a trajectory with a hole in it).  Unknown BENCH_* files are
+carried through as-is — adding a new bench does not require touching
+this file, but renaming a section of a known one does.
+
+    python benchmarks/trajectory.py            # write BENCH_trajectory.json
+    python benchmarks/trajectory.py --check    # validate only, no write
+
+The output is deterministic for fixed inputs (no timestamps — the git
+SHA is the version axis), so re-running on an unchanged tree leaves the
+committed artifact byte-identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SCHEMA_VERSION = 1
+
+# required top-level keys per record stem ("kernels" covers both
+# BENCH_kernels.json and BENCH_kernels.ci.json; the ci smoke writes a
+# subset of the full sections, so only the always-present ones are load-
+# bearing here)
+REQUIRED: dict = {
+    "kernels": {"compact_sweep": list, "fused_sweep": list,
+                "online_step": list, "rewire": list,
+                "guard_overhead": dict, "obs_overhead": dict,
+                "cell_zoo": list},
+    "fleet": {"sweep": list},
+    "roofline": {"peaks": dict, "points": list},
+}
+
+
+class TrajectorySchemaError(ValueError):
+    pass
+
+
+def _stem(name: str) -> str:
+    """BENCH_kernels.ci.json -> 'kernels'."""
+    s = name[len("BENCH_"):]
+    for suf in (".ci.json", ".json"):
+        if s.endswith(suf):
+            return s[: -len(suf)]
+    return s
+
+
+def check_record(name: str, data) -> list:
+    """Problems with one BENCH_*.json payload (empty list = ok)."""
+    if not isinstance(data, dict):
+        return [f"{name}: top level must be a JSON object, got "
+                f"{type(data).__name__}"]
+    problems = []
+    for key, typ in REQUIRED.get(_stem(name), {}).items():
+        if key not in data:
+            problems.append(f"{name}: missing required section {key!r}")
+        elif not isinstance(data[key], typ):
+            problems.append(f"{name}: section {key!r} must be "
+                            f"{typ.__name__}, got "
+                            f"{type(data[key]).__name__}")
+    return problems
+
+
+def _headline(files: dict) -> dict:
+    """Flat scalars worth tracking across commits.  Every extraction is
+    best-effort: a headline only appears when its source section does."""
+    out = {}
+
+    def put(key, fn):
+        try:
+            v = fn()
+        except (KeyError, IndexError, TypeError, StopIteration):
+            return
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = v
+
+    k = files.get("BENCH_kernels.json", {})
+    put("kernels/egru_speedup", lambda: k["egru_step"][0]["speedup"])
+    put("kernels/dual_speedup_over_row",
+        lambda: k["compact_sweep"][-1]["speedup_dual_over_row"])
+    put("kernels/fused_speedup_over_dual",
+        lambda: k["fused_sweep"][-1]["speedup_fused_over_dual"])
+    put("kernels/rewire_amortized_overhead",
+        lambda: max(r["amortized_overhead"] for r in k["rewire"]))
+    put("kernels/guard_overhead", lambda: k["guard_overhead"]["overhead"])
+    put("kernels/obs_overhead", lambda: k["obs_overhead"]["overhead"])
+    put("kernels/online_dual_step_ms",
+        lambda: next(r["per_step_ms"] for r in k["online_step"]
+                     if r["variant"] == "compact-dual"))
+
+    f = files.get("BENCH_fleet.json", {})
+    put("fleet/max_S", lambda: max(r["S"] for r in f["sweep"]))
+    put("fleet/speedup_at_max_S",
+        lambda: max(f["sweep"], key=lambda r: r["S"])
+        ["speedup_fleet_over_seq"])
+    put("fleet/step_p99_ms_at_max_S",
+        lambda: max(f["sweep"], key=lambda r: r["S"])
+        ["step_latency_p99_ms"])
+
+    r = files.get("BENCH_roofline.json", {})
+    put("roofline/points", lambda: len(r["points"]))
+    return out
+
+
+def aggregate(root: Path) -> dict:
+    """Merge every BENCH_*.json under `root` (non-recursive) into the
+    trajectory dict.  Raises TrajectorySchemaError on any schema problem
+    — a trajectory with a hole is worse than no trajectory."""
+    files, problems = {}, []
+    for p in sorted(root.glob("BENCH_*.json")):
+        if p.name == "BENCH_trajectory.json":
+            continue
+        try:
+            data = json.loads(p.read_text())
+        except json.JSONDecodeError as e:
+            problems.append(f"{p.name}: invalid JSON ({e})")
+            continue
+        problems.extend(check_record(p.name, data))
+        files[p.name] = data
+    if not files:
+        problems.append(f"no BENCH_*.json records found under {root}")
+    if problems:
+        raise TrajectorySchemaError("; ".join(problems))
+    from repro.obs import git_sha
+    return {"schema_version": SCHEMA_VERSION, "git_sha": git_sha(str(root)),
+            "headline": _headline(files), "files": files}
+
+
+def validate_trajectory(traj) -> list:
+    """Problems with an already-built trajectory payload (CI re-checks
+    the committed artifact with this)."""
+    if not isinstance(traj, dict):
+        return ["trajectory: top level must be a JSON object"]
+    problems = []
+    for key, typ in (("schema_version", int), ("headline", dict),
+                     ("files", dict)):
+        if not isinstance(traj.get(key), typ):
+            problems.append(f"trajectory: {key!r} must be {typ.__name__}")
+    if problems:
+        return problems
+    if traj["schema_version"] != SCHEMA_VERSION:
+        problems.append(f"trajectory: schema_version "
+                        f"{traj['schema_version']} != {SCHEMA_VERSION}")
+    for name, data in traj["files"].items():
+        problems.extend(check_record(name, data))
+    return problems
+
+
+def run(rows: list, root: Path = None, out: Path = None) -> dict:
+    """benchmarks/run.py hook: aggregate + write + one row per headline."""
+    root = root or Path(__file__).resolve().parents[1]
+    out = out or root / "BENCH_trajectory.json"
+    traj = aggregate(root)
+    out.write_text(json.dumps(traj, indent=1))
+    rows.append(("trajectory/files", str(len(traj["files"])),
+                 f"schema_v{traj['schema_version']}_ok"))
+    for key, v in sorted(traj["headline"].items()):
+        rows.append((f"trajectory/{key}", f"{v:g}", "headline"))
+    return traj
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="directory holding the BENCH_*.json records "
+                         "(default: repo root)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <root>/BENCH_trajectory"
+                         ".json)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the existing BENCH_trajectory.json "
+                         "against the records; write nothing")
+    args = ap.parse_args()
+    root = Path(args.root) if args.root else \
+        Path(__file__).resolve().parents[1]
+
+    if args.check:
+        path = Path(args.out) if args.out else root / "BENCH_trajectory.json"
+        problems = ([f"{path} does not exist"] if not path.exists() else
+                    validate_trajectory(json.loads(path.read_text())))
+        for p in problems:
+            print(f"FAIL: {p}")
+        if problems:
+            raise SystemExit(1)
+        print(f"ok: {path}")
+    else:
+        rows: list = []
+        traj = run(rows, root=root,
+                   out=Path(args.out) if args.out else None)
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print(f"wrote {args.out or root / 'BENCH_trajectory.json'} "
+              f"({len(traj['files'])} records)")

@@ -26,6 +26,7 @@ def _fleet_main(args):
     from repro.core import cells, sparse_rtrl as SP
     from repro.core.cells import EGRUConfig
     from repro.core.learner import LearnerSpec, make_learner
+    from repro.obs import finish_run, telemetry_from_args
     from repro.optim import make_optimizer
     from repro.runtime.fleet import FleetConfig, StreamFleet
 
@@ -50,10 +51,12 @@ def _fleet_main(args):
             return x, y
         return stream
 
+    obs = telemetry_from_args(args, mode="fleet", slots=slots,
+                              sessions=n_sessions)
     fleet = StreamFleet(FleetConfig(slots=slots,
                                     update_every=args.update_every),
                         learner, opt, params0, masks,
-                        example=make_stream(0)(0))
+                        example=make_stream(0)(0), telemetry=obs)
     queue = [(f"s{i}", make_stream(i)) for i in range(n_sessions)]
     need = {sid: windows for sid, _ in queue}
     done, fleet_windows = 0, 0
@@ -71,11 +74,16 @@ def _fleet_main(args):
                 done += 1
     dt = time.time() - t0
     rep = fleet.report()
-    print(f"fleet served {n_sessions} sessions x {windows} windows "
-          f"({slots} slots, k={args.update_every}) in {dt:.2f}s: "
-          f"{n_sessions / max(dt, 1e-9):.1f} sessions/s, "
-          f"{fleet_windows} fleet windows, "
-          f"{rep['session_carry_bytes'] / 1e6:.2f} MB carry/session")
+    summary = {"mode": "fleet", "sessions": n_sessions,
+               "session_windows": windows, "slots": slots,
+               "update_every": args.update_every,
+               "fleet_windows": fleet_windows, "wall_s": round(dt, 3),
+               "sessions_per_s": round(n_sessions / max(dt, 1e-9), 2),
+               "session_carry_bytes": rep["session_carry_bytes"]}
+    for p in ("window_ms_p50", "window_ms_p99"):
+        if p in rep:
+            summary[p] = rep[p]
+    return finish_run(obs, "serve fleet (online RTRL)", summary)
 
 
 def main():
@@ -94,6 +102,8 @@ def main():
                     help="--fleet: stream steps per update window")
     ap.add_argument("--session-windows", type=int, default=12,
                     help="--fleet: update windows per session")
+    from repro.obs import add_obs_args
+    add_obs_args(ap)
     args = ap.parse_args()
 
     if args.fleet:
@@ -119,8 +129,13 @@ def main():
     outs = eng.generate(prompts, max_new=args.max_new)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
-    print(f"served {len(prompts)} requests, {n_tok} tokens in {dt:.1f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {args.slots} slots)")
+    from repro.obs import finish_run, telemetry_from_args
+    obs = telemetry_from_args(args, mode="decode")
+    finish_run(obs, f"serve {args.arch} (decode)",
+               {"arch": args.arch, "requests": len(prompts),
+                "tokens": n_tok, "wall_s": round(dt, 3),
+                "tok_per_s": round(n_tok / max(dt, 1e-9), 1),
+                "slots": args.slots})
     for i, o in enumerate(outs[:3]):
         print(f"  req{i}: {o}")
 

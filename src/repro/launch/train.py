@@ -51,8 +51,25 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import get_model
 from repro.models.module import materialize, tree_shardings
+from repro.obs import add_obs_args, finish_run, telemetry_from_args
 from repro.runtime.trainer import Trainer, TrainerConfig, run_with_restart
 from repro.sharding import make_rules
+
+
+def _loss_fields(metrics: list) -> dict:
+    """first/final loss (+ sparsity telemetry) from the trainer's metric
+    records — quarantined windows log without a loss entry, so summarize
+    over the records that have one."""
+    with_loss = [m for m in metrics if "loss" in m]
+    if not with_loss:
+        return {}
+    first, last = with_loss[0], with_loss[-1]
+    out = {"first_loss": first["loss"], "final_loss": last["loss"]}
+    if "alpha" in last:
+        out["act_sparsity"] = last["alpha"]
+    if "beta" in last:
+        out["bwd_sparsity"] = last["beta"]
+    return out
 
 
 def train_egru(args) -> dict:
@@ -155,12 +172,14 @@ def train_egru(args) -> dict:
         return Trainer(tcfg, wrapped, params, opt_state, data_at)
 
     out = run_with_restart(make_trainer)
-    print(f"done: arch=egru-spiral layers={args.layers} backend={backend} "
-          f"step={out['final_step']} restarts={out['restarts']}")
-    if out["metrics"]:
-        first, last = out["metrics"][0], out["metrics"][-1]
-        print(f"loss {first['loss']:.4f} -> {last['loss']:.4f} "
-              f"(alpha {last['alpha']:.2f}, beta {last['beta']:.2f})")
+    obs = telemetry_from_args(args, arch="egru-spiral", mode="offline")
+    finish_run(obs, "train egru-spiral (offline RTRL)",
+               {"arch": "egru-spiral", "mode": "offline",
+                "layers": args.layers, "backend": backend,
+                "final_step": out["final_step"],
+                "restarts": out["restarts"],
+                "stragglers": out["stragglers"],
+                **_loss_fields(out["metrics"])})
     return out
 
 
@@ -198,6 +217,8 @@ def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
 
     T = cfg.seq_len
     xs_all, ys_all = spiral_dataset(T=T, seed=0)
+    obs = telemetry_from_args(args, arch="egru-spiral", mode="online",
+                              backend=backend, col_compact=col_compact)
 
     def stream(step):    # step-keyed: replay-exact across restarts; one
         s, t = divmod(step, T)                # spiral sequence per T steps
@@ -225,30 +246,28 @@ def train_egru_online(args, cfg, masks, opt, backend, col_compact) -> dict:
                                          if attempt == 0 else -1))
         return OnlineTrainer(ocfg, learner, opt, params, masks, stream,
                              rewire_schedule=schedule, guard=guard_cfg,
-                             fault_plan=plan)
+                             fault_plan=plan, telemetry=obs)
 
     out = run_with_restart(make_trainer)
-    rew = (f" rewire={args.rewire}x{out['rewire_events']}"
-           if rewiring else "")
-    grd = ""
+    summary = {"arch": "egru-spiral", "mode": "online",
+               "layers": args.layers, "backend": backend,
+               "update_every": k, "updates": out["updates"],
+               "final_step": out["final_step"],
+               "restarts": out["restarts"],
+               "stragglers": out["stragglers"],
+               "carry_bytes": out["carry_bytes"],
+               "carry_live_bytes": out["carry_live_bytes"],
+               **_loss_fields(out["metrics"])}
+    if rewiring:
+        summary["rewire"] = args.rewire
+        summary["rewire_events"] = out["rewire_events"]
     if "guard" in out:
         g = out["guard"]
-        grd = (f" guard[faults={g['faults']} rollbacks={g['rollbacks']} "
-               f"recovered={len(g['recoveries'])} "
-               f"quarantined={len(g['quarantined'])}]")
-    print(f"done: arch=egru-spiral ONLINE layers={args.layers} "
-          f"backend={backend} update_every={k} updates={out['updates']} "
-          f"stream_steps={out['final_step']} restarts={out['restarts']}{rew} "
-          f"stragglers={out['stragglers']}{grd} "
-          f"carry={out['carry_bytes']}B live={out['carry_live_bytes']}B "
-          f"(O(1) in stream length)")
-    # quarantined windows log without a loss entry — summarize over records
-    # that have one
-    with_loss = [m for m in out["metrics"] if "loss" in m]
-    if with_loss:
-        first, last = with_loss[0], with_loss[-1]
-        beta = f" (beta {last['beta']:.2f})" if "beta" in last else ""
-        print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}{beta}")
+        summary["guard"] = {"faults": g["faults"],
+                            "rollbacks": g["rollbacks"],
+                            "recovered": len(g["recoveries"]),
+                            "quarantined": len(g["quarantined"])}
+    finish_run(obs, "train egru-spiral (online RTRL)", summary)
     return out
 
 
@@ -321,6 +340,8 @@ def train_lm_online(args) -> dict:
 
     stream = token_lm_stream(args.batch, vocab, seq=args.seq,
                              seed=1234 + args.seed)
+    obs = telemetry_from_args(args, arch=args.arch, engine=engine,
+                              vocab=vocab, width=width)
 
     def make_trainer(attempt=0):
         from repro.cells import resolve_cell
@@ -335,18 +356,19 @@ def train_lm_online(args) -> dict:
             ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
             fail_at_update=args.fail_at if attempt == 0 else -1,
             metrics_path=args.metrics, seed=args.seed)
-        return OnlineTrainer(ocfg, learner, opt, params, masks, stream)
+        return OnlineTrainer(ocfg, learner, opt, params, masks, stream,
+                             telemetry=obs)
 
     out = run_with_restart(make_trainer)
-    print(f"done: arch={args.arch} ONLINE engine={engine} vocab={vocab} "
-          f"n={width} update_every={k} updates={out['updates']} "
-          f"stream_steps={out['final_step']} restarts={out['restarts']} "
-          f"carry={out['carry_bytes']}B (O(1) in stream length)")
-    with_loss = [m for m in out["metrics"] if "loss" in m]
-    if with_loss:
-        first, last = with_loss[0], with_loss[-1]
-        alpha = f" (alpha {last['alpha']:.2f})" if "alpha" in last else ""
-        print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}{alpha}")
+    finish_run(obs, f"train {args.arch} (online token LM)",
+               {"arch": args.arch, "mode": "online", "engine": engine,
+                "vocab": vocab, "width": width, "update_every": k,
+                "updates": out["updates"],
+                "final_step": out["final_step"],
+                "restarts": out["restarts"],
+                "stragglers": out["stragglers"],
+                "carry_bytes": out["carry_bytes"],
+                **_loss_fields(out["metrics"])})
     return out
 
 
@@ -432,6 +454,7 @@ def main():
                     help="base seed threaded through param init, mask "
                          "draws, the data stream, and rewire event keys — "
                          "one value reproduces a run end-to-end")
+    add_obs_args(ap)
     args = ap.parse_args()
 
     if args.arch in ("egru-spiral", "egru_spiral"):
@@ -487,11 +510,12 @@ def main():
         return Trainer(tcfg, step_fn, params, opt_state, data_at)
 
     out = run_with_restart(make_trainer)
-    print(f"done: step={out['final_step']} restarts={out['restarts']} "
-          f"stragglers={out['stragglers']}")
-    if out["metrics"]:
-        first, last = out["metrics"][0], out["metrics"][-1]
-        print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}")
+    obs = telemetry_from_args(args, arch=args.arch)
+    finish_run(obs, f"train {args.arch}",
+               {"arch": args.arch, "final_step": out["final_step"],
+                "restarts": out["restarts"],
+                "stragglers": out["stragglers"],
+                **_loss_fields(out["metrics"])})
 
 
 if __name__ == "__main__":

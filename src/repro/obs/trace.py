@@ -1,0 +1,94 @@
+"""Span tracing: nested wall-clock spans with Chrome-trace export.
+
+A `Tracer` hands out `span("window")` context managers; completed spans
+record (name, start, duration, nesting depth, args) into a bounded list
+and export as Chrome trace-event JSON — load the file in
+``chrome://tracing`` (or Perfetto) and the run's windows, rewires,
+rollback replays, and checkpoint writes lay out on one timeline.
+
+With ``jax_annotations=True`` every span also enters a
+`jax.profiler.TraceAnnotation`, so when a real profiler session is active
+(``jax.profiler.trace``) the host spans line up against device activity
+in the XLA trace viewer.  Without a profiler session the annotation is a
+no-op, so the passthrough is always safe to leave on.
+
+Disabled tracers (`Tracer(enabled=False)`) make `span(...)` a zero-record
+no-op — the runtime can call it unconditionally.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from pathlib import Path
+
+# bound memory on unbounded streams: keep the first MAX_SPANS spans and
+# count the rest (the shape of a steady-state loop is visible early)
+MAX_SPANS = 200_000
+
+
+class Tracer:
+    def __init__(self, enabled: bool = True, jax_annotations: bool = False):
+        self.enabled = enabled
+        self.jax_annotations = jax_annotations
+        self.spans: list[dict] = []
+        self.dropped = 0
+        self._stack: list[str] = []
+        self._t0 = time.perf_counter()
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args):
+        if not self.enabled:
+            yield
+            return
+        ctx = contextlib.nullcontext()
+        if self.jax_annotations:
+            try:
+                from jax.profiler import TraceAnnotation
+                ctx = TraceAnnotation(name)
+            except ImportError:                      # pragma: no cover
+                pass
+        self._stack.append(name)
+        t0 = self._now_us()
+        try:
+            with ctx:
+                yield
+        finally:
+            dur = self._now_us() - t0
+            depth = len(self._stack) - 1
+            self._stack.pop()
+            if len(self.spans) < MAX_SPANS:
+                self.spans.append({"name": name, "ts": t0, "dur": dur,
+                                   "depth": depth, "args": args})
+            else:
+                self.dropped += 1
+
+    def export_chrome(self, path) -> Path:
+        """Write Chrome trace-event JSON (``chrome://tracing`` loads it).
+        Complete events ("ph": "X") with microsecond timestamps; nesting
+        falls out of the containment of [ts, ts + dur] intervals."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        events = [{"name": s["name"], "ph": "X", "ts": s["ts"],
+                   "dur": s["dur"], "pid": 0, "tid": 0,
+                   "args": {k: _jsonable(v) for k, v in s["args"].items()}}
+                  for s in self.spans]
+        doc = {"traceEvents": events, "displayTimeUnit": "ms"}
+        if self.dropped:
+            doc["droppedSpans"] = self.dropped
+        path.write_text(json.dumps(doc))
+        return path
+
+
+def _jsonable(v):
+    if hasattr(v, "item") and not isinstance(v, (str, bytes)):
+        try:
+            return v.item()
+        except (TypeError, ValueError):
+            return str(v)
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return str(v)

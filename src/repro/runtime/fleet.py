@@ -51,6 +51,7 @@ moments and stream position.  A fleet of 1 is bit-identical to the solo
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -58,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_session, save_session
+from repro.obs import MetricPack, Telemetry
 from repro.runtime.online import carry_nbytes, online_update_chunk
 
 Tree = Any
@@ -65,7 +67,7 @@ Tree = Any
 
 def fleet_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
                        xs: jax.Array, ys: jax.Array, upd: jax.Array,
-                       live: jax.Array):
+                       live: jax.Array, pack=None):
     """One update window for every slot at once.
 
     carry/opt_state: slot-stacked trees (leading axis S).  xs [S, k, B, ...],
@@ -77,19 +79,33 @@ def fleet_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
     feeds them zero inputs) whose outputs are simply never observed.  The
     `live` mask only gates the metrics: the packed [S, 3] float32 rows are
     [live, loss * live, overflow * live] — the single per-window readback.
+    With `pack` (a `repro.obs.MetricPack`) each row grows to [S, 3 + F]:
+    the same three columns followed by the slot's full telemetry vector —
+    still ONE readback, now carrying every per-session metric.
 
     No per-leaf live-select restores dead slots' pre-window state on
     purpose: consuming the chunk's large output tensors with ANY extra op
     (a `jnp.where` select, even behind `jax.lax.optimization_barrier`)
     changes how XLA:CPU blocks the chunk's internal reductions and ulp-
     shifts its results, breaking the fleet's bit-identity with the solo
-    trainer.  Scalar-metrics consumers are measured clean.  Pure; jit
-    with donate_argnums=(0, 1) so fleet memory stays 1x.
+    trainer.  Scalar-metrics consumers are measured clean — the MetricPack
+    fields are per-lane scalar reductions inside the vmapped chunk, pinned
+    bit-identical by tests/test_obs.py.  Pure; jit with
+    donate_argnums=(0, 1) so fleet memory stays 1x.
     """
     carry, opt_state, m = jax.vmap(
-        lambda c, o, x, y, u: online_update_chunk(learner, opt, c, o, x, y, u)
+        lambda c, o, x, y, u: online_update_chunk(learner, opt, c, o, x, y, u,
+                                                  pack=pack)
     )(carry, opt_state, xs, ys, upd)
     lf = live.astype(jnp.float32)
+    if pack is not None:
+        vec = m["packed"]                               # [S, F]
+        loss = vec[:, pack.names.index("loss")] * lf
+        ov_col = vec[:, pack.names.index("overflow")]
+        ov = jnp.where(jnp.isnan(ov_col), 0.0, ov_col) * lf
+        packed = jnp.concatenate(
+            [jnp.stack([lf, loss, ov], axis=-1), vec], axis=-1)
+        return carry, opt_state, packed
     loss = jnp.asarray(m["loss"], jnp.float32) * lf
     ov = (jnp.asarray(m["overflow"], jnp.float32) * lf
           if "overflow" in m else jnp.zeros_like(lf))
@@ -134,11 +150,15 @@ class StreamFleet:
     """
 
     def __init__(self, cfg: FleetConfig, learner, opt, params: Tree,
-                 masks: Tree | None, example: tuple):
+                 masks: Tree | None, example: tuple, telemetry=None):
         self.cfg = cfg
         self.learner = learner
         self.opt = opt
         self.masks = masks
+        self.obs = telemetry if telemetry is not None else Telemetry.null()
+        # per-session telemetry columns only when exporters are on: the
+        # bench path keeps the lean [S, 3] readback
+        self._pack = MetricPack.default() if self.obs.active else None
         S = cfg.slots
         x0, y0 = example
         tt = (cfg.t_total if cfg.t_total is not None
@@ -163,9 +183,10 @@ class StreamFleet:
         self._slot_sid: list[str | None] = [None] * S
         self.windows = 0
 
+        pack = self._pack
         self._chunk = jax.jit(
             lambda carry, opt_state, xs, ys, upd, live: fleet_update_chunk(
-                learner, opt, carry, opt_state, xs, ys, upd, live),
+                learner, opt, carry, opt_state, xs, ys, upd, live, pack=pack),
             donate_argnums=(0, 1))
         # traced slot index: one compile serves every slot
         self._write = jax.jit(
@@ -220,6 +241,9 @@ class StreamFleet:
                                       t_total=self._t_total)
             opt_state = jax.jit(self.opt.init)(params)
         self._install(_Session(sid, stream, slot), carry, opt_state)
+        self.obs.registry.counter("sessions_joined_total").inc()
+        self.obs.registry.gauge("sessions_live").set(self.n_live)
+        self.obs.emit("session_join", sid=sid, slot=slot)
         return slot
 
     def remove(self, sid: str):
@@ -232,6 +256,9 @@ class StreamFleet:
         i = jnp.int32(sess.slot)
         self.carry = self._write(self.carry, self._template[0], i)
         self.opt_state = self._write(self.opt_state, self._template[1], i)
+        self.obs.registry.counter("sessions_left_total").inc()
+        self.obs.registry.gauge("sessions_live").set(self.n_live)
+        self.obs.emit("session_leave", sid=sid, slot=sess.slot)
 
     def slot_state(self, sid: str) -> tuple[Tree, Tree]:
         """(carry, opt_state) of one session, read out of the stack."""
@@ -260,6 +287,8 @@ class StreamFleet:
         save_session(store, sid, tree, step=sess.upd,
                      extra={"pos": sess.pos})
         self.remove(sid)
+        self.obs.registry.counter("sessions_evicted_total").inc()
+        self.obs.emit("session_evict", sid=sid, pos=sess.pos)
         return sess.pos
 
     def resume(self, sid: str, stream: Callable[[int], tuple]) -> int:
@@ -273,6 +302,9 @@ class StreamFleet:
         sess = _Session(sid, stream, slot,
                         pos=int(tree["pos"]), upd=int(tree["upd"]))
         self._install(sess, tree["carry"], tree["opt"])
+        self.obs.registry.counter("sessions_resumed_total").inc()
+        self.obs.registry.gauge("sessions_live").set(self.n_live)
+        self.obs.emit("session_resume", sid=sid, slot=slot, pos=sess.pos)
         return slot
 
     # -- the steady-state loop ----------------------------------------------
@@ -302,11 +334,17 @@ class StreamFleet:
         pos, upd}} for the window."""
         k = self.cfg.update_every
         xs, ys, upd, live = self._gather(k)
-        self.carry, self.opt_state, packed = self._chunk(
-            self.carry, self.opt_state, jnp.asarray(xs), jnp.asarray(ys),
-            jnp.asarray(upd), jnp.asarray(live))
-        pk = np.asarray(jax.device_get(packed))     # the single readback
+        t0 = time.perf_counter()
+        with self.obs.span("window", window=self.windows, live=int(live.sum())):
+            self.carry, self.opt_state, packed = self._chunk(
+                self.carry, self.opt_state, jnp.asarray(xs), jnp.asarray(ys),
+                jnp.asarray(upd), jnp.asarray(live))
+            pk = np.asarray(jax.device_get(packed))     # the single readback
+        dt_ms = (time.perf_counter() - t0) * 1e3
         self.windows += 1
+        reg = self.obs.registry
+        reg.counter("fleet_windows_total").inc()
+        reg.histogram("fleet_window_ms").observe(dt_ms)
         out = {}
         for sess in self.sessions.values():
             sess.pos += k
@@ -315,11 +353,28 @@ class StreamFleet:
             sess.overflow = float(pk[sess.slot, 2])
             out[sess.sid] = {"loss": sess.loss, "overflow": sess.overflow,
                              "pos": sess.pos, "upd": sess.upd}
+            if self._pack is not None:
+                # the [3:] tail is the slot's full MetricPack vector —
+                # labelled per-session gauges, no extra readback
+                m = self._pack.unpack(pk[sess.slot, 3:])
+                out[sess.sid]["telemetry"] = m
+                for name in ("loss", "grad_norm", "act_sparsity"):
+                    v = m.get(name)
+                    if v is not None and not np.isnan(v):
+                        reg.gauge(f"session_{name}", sid=sess.sid).set(v)
+                reg.gauge("session_pos", sid=sess.sid).set(sess.pos)
+        self.obs.emit("fleet_window", window=self.windows,
+                      live=int(live.sum()), dt_ms=dt_ms)
         return out
 
     def report(self) -> dict:
-        return {"slots": self.cfg.slots, "live": self.n_live,
-                "windows": self.windows,
-                "session_carry_bytes": self.session_carry_bytes,
-                "fleet_carry_bytes": self.session_carry_bytes
-                * self.cfg.slots}
+        out = {"slots": self.cfg.slots, "live": self.n_live,
+               "windows": self.windows,
+               "session_carry_bytes": self.session_carry_bytes,
+               "fleet_carry_bytes": self.session_carry_bytes
+               * self.cfg.slots}
+        h = self.obs.registry.histogram("fleet_window_ms")
+        if h.count:
+            out["window_ms_p50"] = round(h.quantile(0.50), 3)
+            out["window_ms_p99"] = round(h.quantile(0.99), 3)
+        return out

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import Telemetry
 from repro.runtime.online import stream_grads
 from repro.runtime.trainer import InjectedFailure
 
@@ -175,12 +176,17 @@ def global_norm(tree) -> jax.Array:
 
 def guarded_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
                          xs: jax.Array, ys: jax.Array, upd: jax.Array,
-                         clip: jax.Array):
+                         clip: jax.Array, pack=None):
     """`online_update_chunk` with the guard woven in: dynamic global-norm
     gradient clipping (clip = +inf disables it EXACTLY — the factor is 1.0,
     so an unfaulted guarded run is bit-identical to the unguarded chunk)
     and the fused health bitmask in ``metrics["health"]``.  Pure; jit once
-    per window shape."""
+    per window shape.
+
+    With `pack` (a `repro.obs.MetricPack`) the verdict folds into the
+    telemetry vector instead: metrics is ``{"packed": [F]}``, carrying
+    health / loss / overflow alongside every other telemetry scalar, so
+    one readback serves the guard AND the exporters."""
     carry, loss, grads, stats = stream_grads(learner, carry, xs, ys)
     gn = global_norm(grads)
     factor = jnp.minimum(jnp.float32(1.0), clip / (gn + 1e-12))
@@ -188,8 +194,13 @@ def guarded_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
     params, opt_state = opt.update(grads, opt_state,
                                    learner.params_of(carry), upd)
     carry = learner.reset_grads(carry, params)
-    metrics = {"loss": loss, "grad_norm": gn,
-               "health": health_bits(loss, grads, carry)}
+    health = health_bits(loss, grads, carry)
+    if pack is not None:
+        packed = pack.pack({"loss": loss, "grads": grads, "stats": stats,
+                            "carry": carry, "grad_norm": gn,
+                            "clip_factor": factor, "health": health})
+        return carry, opt_state, {"packed": packed}
+    metrics = {"loss": loss, "grad_norm": gn, "health": health}
     for k in ("alpha", "beta"):
         if k in stats:
             metrics[k] = jnp.asarray(stats[k]).mean()
@@ -248,8 +259,11 @@ class StreamGuard:
     """Detector state + snapshot ring + escalation bookkeeping.  One
     instance per OnlineTrainer run; all methods are host-side."""
 
-    def __init__(self, cfg: GuardConfig):
+    def __init__(self, cfg: GuardConfig, telemetry=None):
         self.cfg = cfg
+        # all counts live on the telemetry registry (null telemetry keeps a
+        # registry too); the detail lists stay for report()['fault_log']
+        self.obs = telemetry if telemetry is not None else Telemetry.null()
         self.ring: collections.deque = collections.deque(maxlen=cfg.ring)
         self._mu: float | None = None      # loss EMA mean
         self._var = 0.0                    # loss EMA variance
@@ -260,7 +274,10 @@ class StreamGuard:
         self.faults: list[dict] = []
         self.recoveries: list[dict] = []
         self.quarantined: list[dict] = []
-        self.rollbacks = 0
+
+    @property
+    def rollbacks(self) -> int:
+        return int(self.obs.registry.counter("guard_rollbacks_total").value)
 
     # -- detection ----------------------------------------------------------
 
@@ -338,6 +355,9 @@ class StreamGuard:
         self.faults.append({"reason": reason, "step": trainer.step,
                             "update": trainer.update,
                             "attempt": self._attempts})
+        self.obs.registry.counter("guard_faults_total").inc()
+        self.obs.emit("fault", reason=reason, step=trainer.step,
+                      update=trainer.update, attempt=self._attempts)
         if self._attempts > len(self.cfg.policy):
             raise StreamFault(
                 f"guard policy {self.cfg.policy} exhausted at stream step "
@@ -348,8 +368,11 @@ class StreamGuard:
         if not self.ring:
             raise StreamFault("fault before any known-good snapshot "
                               f"existed: {self.faults[-1]['reason']}")
-        trainer._restore_snapshot(self._ready(self.ring[-1]))
-        self.rollbacks += 1
+        snap = self._ready(self.ring[-1])
+        with self.obs.span("rollback_replay", to_step=snap.step):
+            trainer._restore_snapshot(snap)
+        self.obs.registry.counter("guard_rollbacks_total").inc()
+        self.obs.emit("rollback", to_step=snap.step, to_update=snap.update)
 
     def commit(self, trainer, window_start: int):
         """A window executed healthily: close any recovery in flight for it
@@ -357,10 +380,12 @@ class StreamGuard:
         rewire events fire, so snapshots carry post-event mask state and
         the matching event counter)."""
         if self._fault_step == window_start:
-            self.recoveries.append(
-                {"step": window_start,
-                 "action": self.cfg.policy[self._attempts - 1],
-                 "attempts": self._attempts})
+            rec = {"step": window_start,
+                   "action": self.cfg.policy[self._attempts - 1],
+                   "attempts": self._attempts}
+            self.recoveries.append(rec)
+            self.obs.registry.counter("guard_recoveries_total").inc()
+            self.obs.emit("recovery", **rec)
             self._fault_step, self._attempts = None, 0
         if (not self.ring
                 or trainer.update % max(1, self.cfg.snapshot_every) == 0):
@@ -397,9 +422,15 @@ class StreamGuard:
     def note_quarantine(self, start: int, length: int, update: int):
         self.quarantined.append({"start": start, "len": length,
                                  "update": update})
+        self.obs.registry.counter("guard_quarantined_total").inc()
+        self.obs.emit("quarantine", start=start, len=length, update=update)
 
     def report(self) -> dict:
-        return {"faults": len(self.faults), "rollbacks": self.rollbacks,
+        """Keys unchanged since the guard landed; counts now source from
+        the telemetry registry so report / Prometheus / manifest agree."""
+        reg = self.obs.registry
+        return {"faults": int(reg.counter("guard_faults_total").value),
+                "rollbacks": int(reg.counter("guard_rollbacks_total").value),
                 "recoveries": self.recoveries,
                 "quarantined": self.quarantined,
                 "fault_log": self.faults}

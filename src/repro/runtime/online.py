@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.obs import MetricPack, Telemetry
 from repro.runtime.trainer import InjectedFailure
 
 Tree = Any
@@ -53,14 +54,26 @@ def stream_grads(learner, carry: Tree, xs: jax.Array, ys: jax.Array):
 
 
 def online_update_chunk(learner, opt, carry: Tree, opt_state: Tree,
-                        xs: jax.Array, ys: jax.Array, upd: jax.Array):
+                        xs: jax.Array, ys: jax.Array, upd: jax.Array,
+                        pack: MetricPack | None = None):
     """One online update: scan the window, update params mid-stream, reset
     the accumulators (influence state carries over — the online-RTRL
-    regime).  Pure; jit it once per window shape."""
+    regime).  Pure; jit it once per window shape.
+
+    With `pack` (an `repro.obs.MetricPack`) the chunk's metrics are ONE
+    packed ``[F]`` float32 vector under ``metrics["packed"]`` — every
+    telemetry scalar in a single device->host readback.  The pack fields
+    only reduce values the chunk already computed, so the instrumented
+    chunk's carry/opt_state outputs are bit-identical to pack=None
+    (tests/test_obs.py pins this)."""
     carry, loss, grads, stats = stream_grads(learner, carry, xs, ys)
     params, opt_state = opt.update(grads, opt_state,
                                    learner.params_of(carry), upd)
     carry = learner.reset_grads(carry, params)
+    if pack is not None:
+        packed = pack.pack({"loss": loss, "grads": grads, "stats": stats,
+                            "carry": carry})
+        return carry, opt_state, {"packed": packed}
     metrics = {"loss": loss}
     for k in ("alpha", "beta"):
         if k in stats:
@@ -114,10 +127,18 @@ class OnlineTrainer:
     def __init__(self, cfg: OnlineTrainerConfig, learner, opt, params: Tree,
                  masks: Tree | None, stream: Callable[[int], tuple],
                  rewire_schedule=None, guard=None, fault_plan=None,
-                 shardings: Tree | None = None):
+                 shardings: Tree | None = None, telemetry=None):
         self.cfg = cfg
         self.learner = learner
         self.opt = opt
+        # telemetry (repro.obs.Telemetry) is never None past this line: the
+        # null form keeps a live registry (every report sources from it)
+        # but writes no files; the in-jit MetricPack compiles into the
+        # chunk only when exporters are on, so the default path stays the
+        # uninstrumented chunk
+        self.obs = telemetry if telemetry is not None else Telemetry.null()
+        self._pack = MetricPack.default() if self.obs.active else None
+        self._last_packed: dict | None = None
         self._fault_plan = fault_plan
         if fault_plan is not None:
             stream = fault_plan.wrap_stream(stream)
@@ -161,21 +182,21 @@ class OnlineTrainer:
             if cfg.ckpt_every > 0 else None)
         self.metrics: list[dict] = []
         self._failed_once = False
-        self.stragglers = 0
         self._dt_ema: float | None = None
+        pack = self._pack
         self._chunk = jax.jit(
             lambda carry, opt_state, xs, ys, upd: online_update_chunk(
-                learner, opt, carry, opt_state, xs, ys, upd))
+                learner, opt, carry, opt_state, xs, ys, upd, pack=pack))
         self.guard = None
         if guard is not None:
             # lazy import: guard.py imports this module at its top level
             from repro.runtime.guard import (StreamGuard, advance_chunk,
                                              guarded_update_chunk)
-            self.guard = StreamGuard(guard)
+            self.guard = StreamGuard(guard, telemetry=self.obs)
             self._gchunk = jax.jit(
                 lambda carry, opt_state, xs, ys, upd, clip:
                 guarded_update_chunk(learner, opt, carry, opt_state,
-                                     xs, ys, upd, clip))
+                                     xs, ys, upd, clip, pack=pack))
             self._advance = jax.jit(
                 lambda carry, xs, ys: advance_chunk(learner, carry, xs, ys))
 
@@ -187,10 +208,19 @@ class OnlineTrainer:
                 "rewire_events": jnp.int32(self.rewire_events),
                 "key": jax.random.key_data(self.key)}
 
+    @property
+    def stragglers(self) -> int:
+        """Straggler windows so far (registry-backed; kept as an attribute
+        for the result dict and external watchdogs)."""
+        return int(self.obs.registry.counter("stragglers_total").value)
+
     def save(self):
         if self.ckpt is not None:
-            self.ckpt.save(self.update, self._ckpt_tree(),
-                           extra={"step": self.step})
+            with self.obs.span("ckpt_write", step=self.step):
+                self.ckpt.save(self.update, self._ckpt_tree(),
+                               extra={"step": self.step})
+            self.obs.registry.counter("ckpt_writes_total").inc()
+            self.obs.emit("ckpt_write", step=self.step, update=self.update)
 
     def try_resume(self) -> bool:
         if self.ckpt is None or self.ckpt.latest_step() < 0:
@@ -231,17 +261,25 @@ class OnlineTrainer:
         from repro.optim.optimizers import set_opt_mask
         t0 = time.perf_counter()
         ev = self.rewire_events
-        self.carry = self.learner.rewire(
-            self.carry, sch.event_key(self._rewire_base, ev),
-            frac=sch.fraction(ev), method=sch.method, block=sch.block)
-        if isinstance(self.opt_state, dict) and "mask" in self.opt_state:
-            self.opt_state = set_opt_mask(self.opt_state,
-                                          self.learner.opt_mask_of(self.carry))
+        with self.obs.span("rewire", event=ev):
+            self.carry = self.learner.rewire(
+                self.carry, sch.event_key(self._rewire_base, ev),
+                frac=sch.fraction(ev), method=sch.method, block=sch.block)
+            if isinstance(self.opt_state, dict) and "mask" in self.opt_state:
+                self.opt_state = set_opt_mask(
+                    self.opt_state, self.learner.opt_mask_of(self.carry))
         self.rewire_events = ev + 1
         fp = self.carry_nbytes()
+        ms = round((time.perf_counter() - t0) * 1e3, 2)
+        reg = self.obs.registry
+        reg.gauge("rewire_events").set(self.rewire_events)
+        reg.gauge("carry_live_bytes").set(fp["live"])
+        reg.gauge("carry_col_density").set(fp["col_density"])
+        self.obs.emit("rewire", event=ev, frac=sch.fraction(ev), ms=ms,
+                      carry_live_bytes=fp["live"],
+                      col_density=fp["col_density"])
         return {"rewire_event": ev, "rewire_frac": round(sch.fraction(ev), 5),
-                "rewire_ms": round((time.perf_counter() - t0) * 1e3, 2),
-                "carry_live_bytes": fp["live"]}
+                "rewire_ms": ms, "carry_live_bytes": fp["live"]}
 
     def carry_nbytes(self) -> dict:
         """{'alloc', 'live', 'col_density'}: the carry's allocated bytes vs
@@ -336,7 +374,7 @@ class OnlineTrainer:
             self._dt_ema = dt
             return
         if dt > self.cfg.straggler_factor * self._dt_ema:
-            self.stragglers += 1
+            self.obs.registry.counter("stragglers_total").inc()
         self._dt_ema = 0.9 * self._dt_ema + 0.1 * dt
 
     def _execute_window(self, start: int, k: int):
@@ -346,6 +384,7 @@ class OnlineTrainer:
         and this window re-executes (deterministic replay) one rung up the
         escalation ladder."""
         g = self.guard
+        self._last_packed = None
         action = None if g is None else g.pending_action(start)
         if action == "quarantine":
             # persistent data fault: drop the window's inputs entirely;
@@ -356,6 +395,12 @@ class OnlineTrainer:
         if g is None:
             self.carry, self.opt_state, m = self._chunk(
                 self.carry, self.opt_state, xs, ys, jnp.int32(self.update))
+            if self._pack is not None:
+                # THE window readback: one packed vector, blocks like the
+                # loss fetch it replaces
+                pk = self._pack.unpack(m["packed"])
+                self._last_packed = pk
+                return True, _legacy_metrics(pk), {}
             jax.block_until_ready(m["loss"])
             return True, m, {}
         if action == "skip_update":
@@ -373,6 +418,20 @@ class OnlineTrainer:
             carry, opt_state, m = self._gchunk(
                 self.carry, self.opt_state, xs, ys,
                 jnp.int32(self.update), clip)
+            if self._pack is not None:
+                # one readback serves guard AND telemetry: unpack the vec,
+                # hand the guard plain floats (its dict branch passes them
+                # through)
+                pk = self._pack.unpack(m["packed"])
+                fault = g.check({"health": pk["health"], "loss": pk["loss"],
+                                 "overflow": pk["overflow"]}, self.update)
+                if fault is not None:
+                    g.on_fault(self, fault)
+                    return False, None, None
+                self.carry, self.opt_state = carry, opt_state
+                self._last_packed = pk
+                return True, _legacy_metrics(pk), (
+                    {"guard_action": action} if action else {})
             fault = g.check(m, self.update)
             if fault is not None:
                 g.on_fault(self, fault)
@@ -398,7 +457,8 @@ class OnlineTrainer:
             k = min(cfg.update_every, cfg.total_steps - self.step)
             start = self.step
             t0 = time.perf_counter()
-            ok, m, guard_rec = self._execute_window(start, k)
+            with self.obs.span("window", update=self.update, step=start):
+                ok, m, guard_rec = self._execute_window(start, k)
             if not ok:
                 continue                  # rolled back; window re-executes
             dt = time.perf_counter() - t0
@@ -406,6 +466,8 @@ class OnlineTrainer:
             self.step = start + k
             self.update += 1
             self.key = jax.random.fold_in(self.key, self.update)
+            self.obs.record_window(self.update, self.step, dt * 1e3,
+                                   packed=self._last_packed, **guard_rec)
             rewire_rec = self._maybe_rewire()
             if self.guard is not None:
                 # commit AFTER rewire so snapshots carry post-event masks
@@ -427,10 +489,24 @@ class OnlineTrainer:
         self.save()
         if self.ckpt is not None:
             self.ckpt.wait()
+        # land the run-level numbers on the registry, then source the
+        # result dict FROM it — keys stay what they always were, but the
+        # registry / Prometheus exposition / manifest can never disagree
+        # with the return value
         fp = self.carry_nbytes()
-        out = {"final_step": self.step, "updates": self.update,
-               "metrics": self.metrics, "rewire_events": self.rewire_events,
-               "carry_bytes": fp["alloc"], "carry_live_bytes": fp["live"],
+        reg = self.obs.registry
+        reg.gauge("final_step").set(self.step)
+        reg.gauge("updates").set(self.update)
+        reg.gauge("rewire_events").set(self.rewire_events)
+        reg.gauge("carry_alloc_bytes").set(fp["alloc"])
+        reg.gauge("carry_live_bytes").set(fp["live"])
+        reg.gauge("carry_col_density").set(fp["col_density"])
+        out = {"final_step": int(reg.gauge("final_step").value),
+               "updates": int(reg.gauge("updates").value),
+               "metrics": self.metrics,
+               "rewire_events": int(reg.gauge("rewire_events").value),
+               "carry_bytes": int(reg.gauge("carry_alloc_bytes").value),
+               "carry_live_bytes": int(reg.gauge("carry_live_bytes").value),
                "stragglers": self.stragglers}
         rs = self.row_stats()
         if rs is not None:
@@ -438,6 +514,20 @@ class OnlineTrainer:
         if self.guard is not None:
             out["guard"] = self.guard.report()
         return out
+
+
+def _legacy_metrics(pk: dict) -> dict:
+    """Unpacked MetricPack dict -> the chunk-metrics keys the log records
+    always carried (loss / alpha / beta / overflow).  NaN fields are the
+    pack's 'not applicable to this engine' marker — dropped, matching the
+    uninstrumented chunk's key-presence behavior."""
+    m = {"loss": pk["loss"]}
+    for src, dst in (("act_sparsity", "alpha"), ("bwd_sparsity", "beta"),
+                     ("overflow", "overflow")):
+        v = pk.get(src)
+        if v is not None and not np.isnan(v):
+            m[dst] = v
+    return m
 
 
 def carry_nbytes(carry: Tree) -> int:
